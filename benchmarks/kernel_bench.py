@@ -1,0 +1,54 @@
+"""Kernel microbenchmarks (interpret-mode correctness + jnp-path wall time).
+
+On this CPU container the Pallas kernels execute in interpret mode, so wall
+time is NOT the TPU performance signal — the §Roofline/§Perf numbers come
+from the compiled dry-run.  This bench (a) re-validates kernels vs oracles
+at benchmark shapes, (b) times the pure-jnp reference paths so regressions
+in the simulation hot loop are visible.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.nladc import build_ramp
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, n=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run(quick=True):
+    rng = np.random.default_rng(0)
+    ramp = build_ramp("sigmoid", 5)
+    out = {}
+    shapes = [(512, 1024)] if quick else [(512, 1024), (2048, 4096)]
+    print("=== kernel bench (oracle path wall time; interpret correctness) ===")
+    for shape in shapes:
+        x = jnp.asarray(rng.normal(0, 1, shape).astype(np.float32))
+        w = jnp.asarray(rng.normal(0, 0.1,
+                                   (shape[1], 512)).astype(np.float32))
+        j_nladc = jax.jit(lambda v: ref.nladc(v, ramp))
+        j_fused = jax.jit(lambda a, b: ref.fused_matmul_nladc(a, b, ramp))
+        us1 = _time(j_nladc, x)
+        us2 = _time(j_fused, x, w)
+        # interpret-mode correctness at this shape
+        got = ops.nladc(x[:64, :256], ramp)
+        np.testing.assert_allclose(got, ref.nladc(x[:64, :256], ramp),
+                                   rtol=1e-5, atol=1e-5)
+        print(f"  {shape}: nladc {us1:8.1f} us   fused-matmul {us2:8.1f} us "
+              f"(jnp ref path, CPU)")
+        out[str(shape)] = dict(nladc_us=us1, fused_us=us2)
+    return out
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,253 @@
+"""Roofline terms from compiled dry-run artifacts (TPU v5e model).
+
+    compute term    = HLO_FLOPs / (chips x 197e12 FLOP/s)
+    memory term     = HLO_bytes / (chips x 819e9 B/s)
+    collective term = collective_bytes / (chips x 50e9 B/s per ICI link)
+
+``cost_analysis()`` supplies FLOPs / bytes-accessed.  Collective bytes are
+NOT in cost_analysis: we parse the optimized HLO text, build an
+instruction-name -> shape map, and sum the *operand* sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+(operand bytes = what actually crosses the links for AR/RS; for AG/A2A the
+result is the moved volume — we take max(operand, result) per op as the
+conservative wire estimate).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+# --- TPU v5e hardware constants (per chip) ---
+PEAK_FLOPS_BF16 = 197e12       # FLOP/s
+HBM_BW = 819e9                 # B/s
+ICI_BW = 50e9                  # B/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+([\w\-]+)"
+)
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Bytes of one HLO shape string (tuples summed)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    bytes_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+_COMPUTATION_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?\s*->.*\{")
+
+
+def convert_bytes(hlo_text: str) -> int:
+    """Materialized dtype-convert bytes (operands+results).
+
+    The CPU backend lowers bf16 dots as convert->f32-dot, materializing
+    f32 copies the TPU MXU never creates (native bf16 operands).  The
+    adjusted memory term subtracts these (documented optimistic bound:
+    genuine storage-dtype conversions are subtracted too).
+
+    Only counts converts that are *materialized* — i.e. standalone
+    instructions in non-fusion computations (ENTRY / loop bodies) or
+    fusion ops that wrap a lone convert.  Converts inside larger fusion
+    bodies are already invisible to bytes-accessed and must not be
+    subtracted.
+    """
+    total = 0
+    in_fusion_comp = False
+    for line in hlo_text.splitlines():
+        cm = _COMPUTATION_RE.match(line)
+        if cm:
+            name = cm.group(2)
+            in_fusion_comp = ("fused" in name or "wrapped" in name) \
+                and not cm.group(1)
+            continue
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        op = m.group(3)
+        is_conv = (op == "convert") or (op == "fusion"
+                                        and "wrapped_convert" in line)
+        if not is_conv or (in_fusion_comp and op == "convert"):
+            continue
+        result = shape_bytes(m.group(2))
+        # bytes-accessed charges operand+result; for bf16<->f32 that is
+        # ~1.5x the f32 side.
+        total += int(result * 1.5)
+    return total
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum data volume of collective ops in optimized HLO text."""
+    shapes: Dict[str, str] = {}
+    pending: List[Tuple[str, str, str]] = []  # (kind, result_shape, args)
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, shape_str, op = m.group(1), m.group(2), m.group(3)
+        shapes[name] = shape_str
+        kind = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-"):  # e.g. all-reduce-start
+                kind = c
+                break
+        if kind is None:
+            continue
+        if op.endswith("-done"):
+            continue  # the matching -start already counted
+        args = line[line.find("(") + 1: line.rfind(")")]
+        pending.append((kind, shape_str, args))
+
+    counts: Dict[str, int] = {}
+    vol: Dict[str, int] = {}
+    arg_re = re.compile(r"%?([\w.\-]+)")
+    for kind, result_shape, args in pending:
+        operand_bytes = 0
+        for a in args.split(","):
+            a = a.strip()
+            m = arg_re.match(a)
+            if m and m.group(1) in shapes:
+                operand_bytes += shape_bytes(shapes[m.group(1)])
+        result_bytes = shape_bytes(result_shape)
+        # Ring-algorithm wire volume per participant:
+        #   all-reduce      = 2x operand   (reduce-scatter + all-gather)
+        #   all-gather      = result       (each chip receives the rest)
+        #   reduce-scatter  = operand
+        #   all-to-all      = operand
+        #   collective-perm = operand
+        if kind == "all-reduce":
+            moved = 2 * max(operand_bytes, result_bytes)
+        elif kind == "all-gather":
+            moved = max(operand_bytes, result_bytes)
+        else:
+            moved = max(operand_bytes, result_bytes if kind == "all-to-all"
+                        else operand_bytes)
+        counts[kind] = counts.get(kind, 0) + 1
+        vol[kind] = vol.get(kind, 0) + moved
+    return CollectiveStats(counts=counts, bytes_by_kind=vol)
+
+
+def cost_dict(compiled) -> Dict[str, float]:
+    """Flatten compiled.cost_analysis() across backends/jax versions."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    out = {}
+    for k in ("flops", "bytes accessed", "transcendentals",
+              "optimal_seconds"):
+        if ca and k in ca:
+            out[k] = float(ca[k])
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    collective_counts: Dict[str, int]
+    collective_bytes_by_kind: Dict[str, int]
+    model_flops: float                 # 6*N*D (or 6*N_active*D for MoE)
+    per_device_peak_memory: Optional[float] = None
+    # bytes minus CPU-backend convert artifacts (TPU-representative bound)
+    hlo_bytes_adjusted: Optional[float] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / (self.chips * PEAK_FLOPS_BF16)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_memory_adjusted(self) -> float:
+        b = self.hlo_bytes_adjusted
+        return (b if b is not None else self.hlo_bytes) / (
+            self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / (self.chips * ICI_BW)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute,
+                 "memory": self.t_memory_adjusted,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPS — remat/redundancy waste detector."""
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achievable fraction of compute roofline: T_comp / max(all terms).
+
+        == 1.0 when compute-bound; < 1 when memory/collective dominates.
+        Uses the adjusted (TPU-representative) memory term.
+        """
+        t = max(self.t_compute, self.t_memory_adjusted, self.t_collective)
+        return self.t_compute / t if t > 0 else 0.0
+
+    def to_json(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d.update(t_compute=self.t_compute, t_memory=self.t_memory,
+                 t_memory_adjusted=self.t_memory_adjusted,
+                 t_collective=self.t_collective, dominant=self.dominant,
+                 useful_flops_ratio=self.useful_flops_ratio,
+                 roofline_fraction=self.roofline_fraction)
+        return d
+
+
+def model_flops_for(cfg, shape, kind: str) -> float:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (forward-only) per step."""
+    n = cfg.n_active_params() if cfg.family == "moe" else cfg.n_params()
+    if kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def save(roof: Roofline, path: str):
+    with open(path, "w") as f:
+        json.dump(roof.to_json(), f, indent=2)

@@ -1,0 +1,54 @@
+"""Aggregate the dry-run JSONs into the §Roofline table (markdown + CSV)."""
+
+import glob
+import json
+import os
+
+HEADERS = ("arch", "shape", "mesh", "dominant", "t_compute", "t_memory",
+           "t_memory_adjusted", "t_collective", "roofline_fraction",
+           "useful_flops_ratio", "hlo_flops", "collective_bytes")
+
+
+def load(results_dir=None):
+    import os
+    if results_dir is None:
+        results_dir = ("results/dryrun_final"
+                       if os.path.isdir("results/dryrun_final")
+                       else "results/dryrun")
+    rows = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        if d.get("status") != "ok":
+            rows.append({"arch": d.get("arch"), "shape": d.get("shape"),
+                         "mesh": "2x16x16" if d.get("multi_pod") else "16x16",
+                         "error": d.get("error", "?")})
+            continue
+        rows.append({k: d.get(k) for k in HEADERS})
+    return rows
+
+
+def run(quick=True, results_dir=None):
+    rows = load(results_dir)
+    # the roofline table is single-pod; multi-pod rows are compile proof
+    ok = [r for r in rows if "error" not in r and r["mesh"] == "16x16"]
+    n_mp = sum(1 for r in rows if "error" not in r and r["mesh"] != "16x16")
+    print(f"=== §Roofline: {len(ok)} single-pod cells "
+          f"(+{n_mp} multi-pod compile proofs) ===")
+    print(f"{'arch':22}{'shape':13}{'dom':11}{'t_comp':>9}"
+          f"{'t_mem':>9}{'t_adj':>9}{'t_coll':>9}{'frac':>7}{'useful':>8}")
+    for r in sorted(ok, key=lambda r: (r['arch'], r['shape'])):
+        tadj = r.get('t_memory_adjusted') or r['t_memory']
+        print(f"{r['arch']:22}{r['shape']:13}"
+              f"{r['dominant']:11}{r['t_compute']:9.4f}{r['t_memory']:9.4f}"
+              f"{tadj:9.4f}"
+              f"{r['t_collective']:9.4f}{r['roofline_fraction']:7.3f}"
+              f"{r['useful_flops_ratio']:8.3f}")
+    bad = [r for r in rows if "error" in r]
+    for r in bad:
+        print(f"FAILED: {r}")
+    return {"n_ok": len(ok), "n_fail": len(bad)}
+
+
+if __name__ == "__main__":
+    run()

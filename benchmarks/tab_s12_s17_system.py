@@ -1,0 +1,46 @@
+"""Tab. S10-S17: full-system (LSTM + elementwise tail + FC [+ buffer/NoC])
+energy/area/latency for KWS and NLP, ours vs the conventional baseline."""
+
+from repro.core import hwcost as HW
+
+PAPER = {
+    # system level, 5-bit: (TOPS/W ours, TOPS/W conv, AE ours, AE conv)
+    "kws": (31.33, 21.27, 39.48, 6.41),
+    "nlp": (47.9, 44.2, 27.6, 4.2),     # conv = k=8 column of Tab. S17
+}
+
+
+def run(quick=True):
+    out = {}
+    print("=== Tab. S12 (KWS system) and Tab. S17 (NLP system) ===")
+    kws_o, kws_c = HW.kws_system(5), HW.kws_system(5, conventional=True)
+    nlp_o = HW.nlp_system(5)
+    nlp_c = HW.nlp_system(5, conventional=True, k_procs=8)
+    for tag, (o, c) in (("kws", (kws_o, kws_c)), ("nlp", (nlp_o, nlp_c))):
+        p = PAPER[tag]
+        print(f"  {tag}: eff {o.tops_per_w:6.2f}|{p[0]:6.2f} vs conv "
+              f"{c.tops_per_w:6.2f}|{p[1]:6.2f} TOPS/W;  "
+              f"ae {o.tops_per_mm2:6.2f}|{p[2]:6.2f} vs conv "
+              f"{c.tops_per_mm2:6.2f}|{p[3]:6.2f} TOPS/mm2")
+        out[tag] = dict(ours_eff=o.tops_per_w, conv_eff=c.tops_per_w,
+                        ours_ae=o.tops_per_mm2, conv_ae=c.tops_per_mm2)
+    print("=== Tab. S13: energy-efficiency by subsystem (KWS 5-bit) ===")
+    # NL-processing = NL-ADC array + integrator + S&H + comparators
+    ours_macro = HW.nladc_macro(72, 128)
+    conv_macro = HW.conventional_macro(72, 128)
+    nl_ours = sum(m.energy_pj for m in ours_macro.modules
+                  if m.name in ("NL-ADC array", "Comparator"))
+    nl_ours += ours_macro.modules[3].energy_pj / 129  # 1 of 129 integrators
+    nl_conv = sum(m.energy_pj for m in conv_macro.modules
+                  if m.name in ("Ramp-ADC", "Processor"))
+    n_ops_nl = 128 * 2  # one activation per column counted as 2 ops
+    print(f"  NL-processing: ours {n_ops_nl / nl_ours:5.2f} TOPS/W "
+          f"(paper 3.6), conventional {n_ops_nl / nl_conv:5.2f} "
+          f"(paper 0.3)")
+    out["nl_processing"] = dict(ours=n_ops_nl / nl_ours,
+                                conv=n_ops_nl / nl_conv)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,36 @@
+"""Tab. S3/S4/S5: KWS macro-level energy/area/latency + derived metrics."""
+
+from repro.core import hwcost as HW
+
+PAPER_S5 = {  # (tput TOPS, power mW, TOPS/W, TOPS/mm2)
+    "5b": (0.28, 8.58, 33.04, 115.86),
+    "4b": (0.56, 8.43, 66.24, 228.87),
+    "3b": (1.08, 8.12, 133.77, 445.64),
+    "conv5b": (0.06, 2.58, 23.26, 9.56),
+}
+
+
+def run(quick=True):
+    print("=== Tab. S3 (this work, 5-bit NL-ADC, KWS macro) ===")
+    m = HW.nladc_macro(72, 128)
+    for row in m.table():
+        print(f"  {row['name']:20} area {row['area_um2']:9.2f} um2  "
+              f"energy {row['energy_pj']:8.2f} pJ")
+    print("=== Tab. S5: macro metrics (model | paper) ===")
+    out = {}
+    for tag, macro in (("5b", HW.kws_macro(5)), ("4b", HW.kws_macro(4)),
+                       ("3b", HW.kws_macro(3)),
+                       ("conv5b", HW.kws_macro(5, conventional=True))):
+        p = PAPER_S5[tag]
+        print(f"  {tag:7} tput {macro.throughput_tops:5.2f}|{p[0]:5.2f}  "
+              f"power {macro.power_mw:5.2f}|{p[1]:5.2f} mW  "
+              f"eff {macro.tops_per_w:6.2f}|{p[2]:6.2f} TOPS/W  "
+              f"ae {macro.tops_per_mm2:7.2f}|{p[3]:7.2f} TOPS/mm2")
+        out[tag] = dict(tops=macro.throughput_tops,
+                        tops_per_w=macro.tops_per_w,
+                        tops_per_mm2=macro.tops_per_mm2)
+    return out
+
+
+if __name__ == "__main__":
+    run()

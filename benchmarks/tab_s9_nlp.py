@@ -1,0 +1,36 @@
+"""Tab. S6-S9: NLP (PTB LSTM) macro-level costs, ours vs conventional k=1/8."""
+
+from repro.core import hwcost as HW
+
+PAPER_S9 = {  # (tput TOPS, TOPS/W, TOPS/mm2)
+    "5b": (79.14, 60.77, 363.2),
+    "4b": (157.06, 121.62, 722.34),
+    "3b": (309.36, 243.36, 1425.81),
+    "conv_k1": (0.62, 55.11, 1.35),
+    "conv_k8": (4.8, 55.11, 10.21),
+}
+
+
+def run(quick=True):
+    print("=== Tab. S9: NLP macro metrics (model | paper) ===")
+    rows = {
+        "5b": HW.nlp_macro(5), "4b": HW.nlp_macro(4), "3b": HW.nlp_macro(3),
+        "conv_k1": HW.nlp_macro(5, conventional=True, k_procs=1),
+        "conv_k8": HW.nlp_macro(5, conventional=True, k_procs=8),
+    }
+    out = {}
+    for tag, m in rows.items():
+        p = PAPER_S9[tag]
+        print(f"  {tag:8} tput {m.throughput_tops:7.2f}|{p[0]:7.2f} TOPS  "
+              f"eff {m.tops_per_w:6.2f}|{p[1]:6.2f} TOPS/W  "
+              f"ae {m.tops_per_mm2:8.2f}|{p[2]:8.2f} TOPS/mm2")
+        out[tag] = dict(tops=m.throughput_tops, tops_per_w=m.tops_per_w)
+    adv_t = rows["5b"].throughput_tops / rows["conv_k8"].throughput_tops
+    adv_a = rows["5b"].tops_per_mm2 / rows["conv_k8"].tops_per_mm2
+    print(f"  5b vs conv(k=8): {adv_t:.1f}x throughput (paper ~16x), "
+          f"{adv_a:.1f}x area-eff (paper ~42x, Tab. S9 note)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,7 @@
+"""Checkpointing: atomic, async, keep-k, mesh-elastic restore."""
+
+from repro.ckpt.checkpoint import (  # noqa: F401
+    CheckpointManager,
+    load_checkpoint,
+    save_checkpoint,
+)

@@ -1,0 +1,18 @@
+"""Architecture configs: 10 assigned archs + the paper's two LSTM workloads.
+
+``get(name)`` returns the full published config; ``get_smoke(name)`` returns a
+reduced same-family config for CPU smoke tests.  ``SHAPES`` defines the
+assigned input-shape set; ``repro.launch.specs.input_specs`` turns an
+(arch, shape) cell into ShapeDtypeStruct stand-ins for the dry-run.
+"""
+
+from repro.configs.base import (  # noqa: F401
+    AnalogSpec,
+    ModelConfig,
+    ShapeSpec,
+    SHAPES,
+    ARCH_NAMES,
+    get,
+    get_smoke,
+    cells,
+)

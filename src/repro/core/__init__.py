@@ -1,0 +1,15 @@
+"""repro.core — the paper's contribution: NL-ADC in-memory nonlinear ADC."""
+
+from repro.core import calibration, crossbar, functions, hwcost, nladc
+from repro.core.analog_layer import (AnalogActivation, AnalogConfig, EXACT,
+                                     analog_matmul)
+from repro.core.nladc import (NLADC, Ramp, build_nonmonotonic_ramp, build_ramp,
+                              inl_lsb, nladc_reference, pwm_quantize,
+                              transfer_mse)
+
+__all__ = [
+    "AnalogActivation", "AnalogConfig", "EXACT", "NLADC", "Ramp",
+    "analog_matmul", "build_nonmonotonic_ramp", "build_ramp", "calibration",
+    "crossbar", "functions", "hwcost", "inl_lsb", "nladc", "nladc_reference",
+    "pwm_quantize", "transfer_mse",
+]

@@ -1,0 +1,145 @@
+"""AnalogDense: crossbar-mapped linear layer with in-memory NL-ADC epilogue.
+
+This is the paper's technique packaged as a composable JAX layer:
+
+    y = NLADC_g( PWM_quant(x) @ (W + noise) + b )
+
+Three operating modes:
+
+* ``exact``  — float matmul + exact activation (software baseline);
+* ``train``  — hardware-aware training (Alg. 1): Gaussian conductance-space
+               noise injected into W (and optionally the ramp) in the forward
+               pass; gradients flow to the clean shadow weights (the additive
+               noise is a constant w.r.t. W, so autodiff does exactly
+               Alg. 1's update rule); activations are NL-ADC-quantized with a
+               straight-through g' backward;
+* ``infer``  — deployment simulation: per-chip write noise (drawn once,
+               outside the step) + per-batch read noise + NL-ADC.
+
+The same object also powers the TPU performance path: with
+``use_kernel=True`` the matmul + NL-ADC epilogue lowers through the fused
+Pallas kernel (kernels/fused_matmul_nladc.py) instead of separate HLO ops.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import crossbar
+from repro.core.nladc import NLADC, Ramp, build_ramp, pwm_quantize
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalogConfig:
+    """Knobs for the analog-hardware simulation (paper Methods)."""
+
+    enabled: bool = True
+    adc_bits: int = 5
+    input_bits: Optional[int] = 5
+    input_clip: float = 1.0
+    train_sigma_w: float = crossbar.TRAIN_SIGMA_W
+    read_sigma_w: float = crossbar.READ_SIGMA_W
+    ramp_train_sigma_us: float = 5.0     # NL-ADC-aware training noise
+    mode: str = "exact"                   # exact | train | infer
+    use_kernel: bool = False              # fused Pallas matmul+NL-ADC path
+
+    def replace(self, **kw) -> "AnalogConfig":
+        return dataclasses.replace(self, **kw)
+
+
+EXACT = AnalogConfig(enabled=False, mode="exact")
+
+
+class AnalogActivation:
+    """An activation realized by an NL-ADC ramp (or exactly, per config)."""
+
+    def __init__(self, name: str, cfg: AnalogConfig):
+        self.name = name
+        self.cfg = cfg
+        self._adc: Optional[NLADC] = None
+        if cfg.enabled:
+            self._adc = NLADC(build_ramp(name, cfg.adc_bits))
+
+    @property
+    def ramp(self) -> Optional[Ramp]:
+        return self._adc.ramp if self._adc is not None else None
+
+    def _exact(self, x):
+        import repro.nn.activations as acts
+
+        return acts.exact(self.name)(x)
+
+    def __call__(self, x, *, key=None):
+        cfg = self.cfg
+        if not cfg.enabled or self._adc is None:
+            return self._exact(x)
+        adc = self._adc
+        if cfg.mode == "train" and key is not None and cfg.ramp_train_sigma_us > 0:
+            # NL-ADC-aware training: perturb the programmed ramp *steps*
+            # (one memristor each) and re-accumulate — noise compounds along
+            # the ramp exactly as on-chip.
+            ramp = adc.ramp
+            dg = cfg.ramp_train_sigma_us * jax.random.normal(
+                key, adc.thresholds.shape, dtype=adc.thresholds.dtype
+            )
+            steps = jnp.asarray(ramp.steps, dtype=adc.thresholds.dtype)
+            noisy_steps = steps + dg * ramp.g_scale
+            thresholds = ramp.v_init + jnp.cumsum(noisy_steps)
+            from repro.core.nladc import _nladc_apply
+
+            return _nladc_apply(x, thresholds, adc.y_table, ramp.name)
+        return adc(x)
+
+
+def analog_matmul(x, w, cfg: AnalogConfig, *, key=None,
+                  activation: Optional[AnalogActivation] = None,
+                  bias=None, preferred_dtype=jnp.float32):
+    """Crossbar matmul with optional NL-ADC epilogue.
+
+    ``key`` threads the per-step noise RNG (train / infer-read noise); pass
+    ``None`` in exact mode or inside the dry-run path.
+    """
+    if not cfg.enabled:
+        y = jnp.matmul(x, w, preferred_element_type=preferred_dtype)
+        if bias is not None:
+            y = y + bias
+        if activation is not None:
+            y = activation(y)
+        return y.astype(x.dtype)
+
+    k_in = k_w = k_act = None
+    if key is not None:
+        k_in, k_w, k_act = jax.random.split(key, 3)
+
+    if cfg.input_bits is not None:
+        x = pwm_quantize(x, cfg.input_bits, cfg.input_clip)
+
+    w = crossbar.clip_weights(w)
+    if cfg.mode == "train" and k_w is not None and cfg.train_sigma_w > 0:
+        # Alg. 1: W_fwd = W + eps * sigma; backward hits W directly.
+        w = w + jax.lax.stop_gradient(
+            cfg.train_sigma_w
+            * jax.random.normal(k_w, w.shape, dtype=w.dtype)
+        )
+    elif cfg.mode == "infer" and k_w is not None and cfg.read_sigma_w > 0:
+        w = w + crossbar.read_noise_weights(k_w, w.shape, w.dtype,
+                                            cfg.read_sigma_w)
+
+    if cfg.use_kernel and activation is not None and activation.ramp is not None:
+        from repro.kernels import ops as kops
+
+        y = kops.fused_matmul_nladc(
+            x, w, activation.ramp, bias=bias
+        )
+        return y.astype(x.dtype)
+
+    y = jnp.matmul(x, w, preferred_element_type=preferred_dtype)
+    if bias is not None:
+        y = y + bias
+    if activation is not None:
+        y = activation(y, key=k_act)
+    return y.astype(x.dtype)

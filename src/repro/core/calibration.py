@@ -1,0 +1,166 @@
+"""Programming-error simulation, one-point calibration and redundancy.
+
+Implements the paper's accuracy machinery around the NL-ADC:
+
+* :func:`program_ramp`       — iterative-write-and-verify outcome model:
+                               per-device Gaussian write noise (σ=2.67 µS
+                               measured, Fig. S8c) + stuck-at-OFF faults.
+* :func:`one_point_calibrate`— Supp. S9: shift ``V_init`` with N_cali bias
+                               memristors so the programmed ramp crosses the
+                               ideal ramp at the activation's zero point.
+* :func:`program_with_redundancy` — Supp. S11: program R copies in unused
+                               cells of the ramp column, keep the min-INL one.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core import functions as F
+from repro.core.nladc import (G_MAX_US, Ramp, inl_lsb, ramp_from_conductances)
+
+WRITE_SIGMA_US = 2.67   # measured programming error (Fig. S8c)
+READ_SIGMA_US = 3.5     # measured read noise (Fig. S14b)
+TRAIN_SIGMA_US = 5.0    # (larger) noise injected during training (Methods)
+
+
+@dataclasses.dataclass(frozen=True)
+class ProgrammedRamp:
+    """Result of programming a ramp column on the (simulated) chip."""
+
+    ideal: Ramp
+    programmed: Ramp
+    conductances_us: np.ndarray      # per-step devices actually programmed
+    calibrated: bool
+    n_cali_devices: int              # bias/calibration memristors used
+
+    def inl(self) -> Tuple[float, float]:
+        return inl_lsb(self.programmed, self.ideal)
+
+
+def write_noise(rng: np.random.Generator, g_us: np.ndarray,
+                sigma_us: float = WRITE_SIGMA_US,
+                stuck_off_prob: float = 0.0) -> np.ndarray:
+    """Apply write noise + optional stuck-at-OFF faults; clip to [0, G_max]."""
+    noisy = g_us + rng.normal(0.0, sigma_us, size=g_us.shape)
+    if stuck_off_prob > 0.0:
+        stuck = rng.random(g_us.shape) < stuck_off_prob
+        noisy = np.where(stuck, 0.0, noisy)
+    return np.clip(noisy, 0.0, G_MAX_US)
+
+
+def program_ramp(ramp: Ramp, rng: np.random.Generator,
+                 sigma_us: float = WRITE_SIGMA_US,
+                 stuck_off_prob: float = 0.0,
+                 calibrate: bool = True) -> ProgrammedRamp:
+    """Program one NL-ADC column and (optionally) one-point calibrate it."""
+    g_ideal = ramp.conductances_us()
+    g_prog = write_noise(rng, g_ideal, sigma_us, stuck_off_prob)
+    programmed = ramp_from_conductances(ramp, g_prog)
+    n_cali = 0
+    if calibrate:
+        programmed, n_cali = one_point_calibrate(
+            programmed, ramp, rng, sigma_us=sigma_us
+        )
+    return ProgrammedRamp(
+        ideal=ramp,
+        programmed=programmed,
+        conductances_us=g_prog,
+        calibrated=calibrate,
+        n_cali_devices=n_cali,
+    )
+
+
+def _zero_point_index(ideal: Ramp) -> int:
+    """Index m s.t. V_m ≈ 0 — where g^{-1} crosses the x-axis zero.
+
+    For activations whose domain does not include 0 in the ramp span, the
+    mid-code is used (equivalent to centering the calibration point).
+    """
+    v = ideal.thresholds
+    if v[0] <= 0.0 <= v[-1]:
+        return int(np.argmin(np.abs(v)))
+    return int(len(v) // 2)
+
+
+def one_point_calibrate(programmed: Ramp, ideal: Ramp,
+                        rng: Optional[np.random.Generator] = None,
+                        sigma_us: float = WRITE_SIGMA_US) -> Tuple[Ramp, int]:
+    """Supp. S9 one-point calibration.
+
+    Shifts the programmed ramp (by re-programming the bias memristors that
+    create ``V_init``) so it intersects the ideal ramp at the zero-crossing
+    code m.  The shift itself is realized with ``N_cali`` devices —
+    ``N_cali - 1`` at G_max plus a remainder device — each of which also
+    suffers write noise if ``rng`` is given (faithful to hardware).
+    """
+    m = _zero_point_index(ideal)
+    target_shift = ideal.thresholds[m] - programmed.thresholds[m]
+    # Represent |shift| in conductance units of the bias column.
+    g_equiv = abs(target_shift) / max(programmed.g_scale, 1e-30)
+    n_full = int(g_equiv // G_MAX_US)
+    rem = g_equiv - n_full * G_MAX_US
+    devices = [G_MAX_US] * n_full + [rem]
+    if rng is not None:
+        devices = [
+            float(write_noise(rng, np.asarray([d]), sigma_us)[0]) for d in devices
+        ]
+    realized = sum(devices) * programmed.g_scale * np.sign(target_shift)
+    calibrated = programmed.with_thresholds(programmed.thresholds + realized)
+    return calibrated, len(devices)
+
+
+def program_with_redundancy(ramp: Ramp, rng: np.random.Generator,
+                            copies: int = 4,
+                            sigma_us: float = WRITE_SIGMA_US,
+                            stuck_off_prob: float = 0.0,
+                            calibrate: bool = True) -> ProgrammedRamp:
+    """Supp. S11: program ``copies`` redundant ramps, return the min-INL one.
+
+    The physical column has 64+ rows while a 5-bit ramp needs 32 — unused
+    devices hold redundant copies; a 6-bit base-address register selects the
+    winner at zero steady-state cost.
+    """
+    if copies < 1:
+        raise ValueError("copies must be >= 1")
+    best: Optional[ProgrammedRamp] = None
+    best_inl = np.inf
+    for _ in range(copies):
+        cand = program_ramp(
+            ramp, rng, sigma_us=sigma_us, stuck_off_prob=stuck_off_prob,
+            calibrate=calibrate,
+        )
+        mean_inl, _ = cand.inl()
+        if mean_inl < best_inl:
+            best, best_inl = cand, mean_inl
+    assert best is not None
+    return best
+
+
+def vread_sweep_inl(ramp: Ramp, v_reads: np.ndarray,
+                    v_nominal: float = 0.2,
+                    in_memory: bool = True) -> np.ndarray:
+    """Fig. 3b experiment: max INL under read-voltage variation.
+
+    * in-memory NL-ADC: ramp and MAC share V_read -> the scale cancels
+      ratiometrically; only second-order mismatch remains (modeled as zero
+      here — the measured 0.02-0.44 LSB is comparator offset, not tracked).
+    * conventional ADC: the reference ramp is generated by a capacitive DAC
+      at *nominal* V_read while the MAC result scales with the *actual*
+      V_read -> gain error (V/V_nom - 1) over the full range.
+    """
+    v_reads = np.asarray(v_reads, dtype=np.float64)
+    out = np.empty_like(v_reads)
+    full_scale = ramp.thresholds[-1] - ramp.v_init
+    mean_step = np.mean(np.abs(ramp.steps))
+    for i, v in enumerate(v_reads):
+        if in_memory:
+            out[i] = 0.0  # ratiometric cancellation
+        else:
+            gain_err = v / v_nominal - 1.0
+            # worst-case code deviation: gain error at full scale, in LSBs
+            out[i] = abs(gain_err) * full_scale / mean_step / 2.0
+    return out

@@ -1,0 +1,259 @@
+"""Memristive crossbar model: conductance mapping, noise, tiling, noisy VMM.
+
+Implements the paper's Methods faithfully:
+
+* weight clipping to [-2, 2] and linear mapping ``g = γ·w`` with
+  ``γ = g_max/|w|_max = 75 µS`` (Eqs. 6-7);
+* differential 1T1R pairs (Fig. S9): ``w -> (G+ , G-)`` with
+  ``G+ = γ·max(w,0)``, ``G- = γ·max(-w,0)``;
+* write noise N(0, 2.67 µS) (per-chip, drawn once), read noise N(0, 3.5 µS)
+  (per-minibatch), training noise N(0, 5 µS) (Alg. 1);
+* stuck-at-OFF devices;
+* long-term drift (Supp. S13) via reference-curve interpolation;
+* tile partitioning with ≤256 simultaneously-enabled rows (IR-drop limit)
+  and integrator-capacitor partial-sum accumulation (Supp. S10).
+
+Everything is expressed in *weight units* on the JAX side — the γ scaling
+cancels in the differential read, so noise σs are injected as σ/γ in weight
+space, exactly as the paper does (``N(0, 2.67/75)``, Supp. S13).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+G_MAX_US = 150.0
+W_CLIP = 2.0
+GAMMA_US = G_MAX_US / W_CLIP  # 75 uS per weight unit (Eq. 7)
+
+WRITE_SIGMA_W = 2.67 / GAMMA_US   # write noise in weight units
+READ_SIGMA_W = 3.5 / GAMMA_US     # read noise in weight units
+TRAIN_SIGMA_W = 5.0 / GAMMA_US    # hardware-aware-training noise (Alg. 1)
+
+
+# ---------------------------------------------------------------------------
+# Conductance mapping (host + jnp variants)
+# ---------------------------------------------------------------------------
+
+def clip_weights(w):
+    """Eq. (6): clip to [-2, 2] (max programmable conductance)."""
+    return jnp.clip(w, -W_CLIP, W_CLIP)
+
+
+def weights_to_conductance_pairs(w: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Differential mapping (Fig. S9): one weight -> (G+, G-) in µS."""
+    w = np.clip(np.asarray(w, dtype=np.float64), -W_CLIP, W_CLIP)
+    g_pos = GAMMA_US * np.maximum(w, 0.0)
+    g_neg = GAMMA_US * np.maximum(-w, 0.0)
+    return g_pos, g_neg
+
+
+def conductance_pairs_to_weights(g_pos: np.ndarray, g_neg: np.ndarray) -> np.ndarray:
+    return (np.asarray(g_pos) - np.asarray(g_neg)) / GAMMA_US
+
+
+# ---------------------------------------------------------------------------
+# Noise models (jnp; keyed)
+# ---------------------------------------------------------------------------
+
+def write_noise_weights(key, w, sigma_w: float = WRITE_SIGMA_W):
+    """Per-chip programming error, drawn once per deployment.
+
+    Differential pairs mean each weight is realized by (up to) two devices;
+    only one of the pair is nonzero for any given weight, so a single
+    device-noise draw per weight is faithful.  Conductances clip at
+    [0, G_max] which in weight space clips the *magnitude* at [0, 2].
+    """
+    noise = sigma_w * jax.random.normal(key, w.shape, dtype=w.dtype)
+    w_noisy = w + noise
+    return jnp.clip(w_noisy, -W_CLIP, W_CLIP)
+
+
+def read_noise_weights(key, shape, dtype=jnp.float32,
+                       sigma_w: float = READ_SIGMA_W):
+    """Per-read conductance fluctuation (fresh each minibatch)."""
+    return sigma_w * jax.random.normal(key, shape, dtype=dtype)
+
+
+def stuck_at_off(key, w, prob: float):
+    """Stuck-at-OFF devices zero the affected conductance (Fig. 3a)."""
+    if prob <= 0.0:
+        return w
+    mask = jax.random.bernoulli(key, prob, w.shape)
+    return jnp.where(mask, 0.0, w)
+
+
+# ---------------------------------------------------------------------------
+# Long-term drift (Supp. S13)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DriftModel:
+    """Reference-curve drift model (Supp. S13, Eq. S8).
+
+    The paper measures 16 reference conductances over 5e5 s and drifts an
+    arbitrary G as the same weighted average of its two nearest reference
+    curves.  The measured curves are not published numerically; we use a
+    log-time relaxation toward the mid-range that reproduces the *shape*
+    reported (low-G states drift up, high-G states sag, σ grows ~log t),
+    and expose the reference-curve machinery exactly.
+    """
+
+    n_refs: int = 16
+    g_max_us: float = G_MAX_US
+    alpha: float = 0.015        # fractional relaxation per decade
+    sigma0_us: float = 0.5      # dispersion growth per decade
+    t0_s: float = 60.0          # first measurement time
+
+    def ref_levels(self) -> np.ndarray:
+        return np.linspace(0.0, self.g_max_us, self.n_refs)
+
+    def ref_curves(self, t_s: float) -> np.ndarray:
+        """Mean conductance of each reference level at time t."""
+        g0 = self.ref_levels()
+        decades = max(0.0, math.log10(max(t_s, self.t0_s) / self.t0_s))
+        g_mid = 0.5 * self.g_max_us
+        return g0 + self.alpha * decades * (g_mid - g0)
+
+    def drift(self, g_us: np.ndarray, t_s: float,
+              rng: Optional[np.random.Generator] = None) -> np.ndarray:
+        """Eq. (S8): weighted average of the two nearest drifted references."""
+        g_us = np.asarray(g_us, dtype=np.float64)
+        refs0 = self.ref_levels()
+        refs_t = self.ref_curves(t_s)
+        idx = np.clip(
+            np.searchsorted(refs0, g_us, side="right") - 1, 0, self.n_refs - 2
+        )
+        lo0, hi0 = refs0[idx], refs0[idx + 1]
+        b = (g_us - lo0) / np.maximum(hi0 - lo0, 1e-12)
+        a = 1.0 - b
+        drifted = a * refs_t[idx] + b * refs_t[idx + 1]
+        if rng is not None:
+            decades = max(0.0, math.log10(max(t_s, self.t0_s) / self.t0_s))
+            drifted = drifted + rng.normal(
+                0.0, self.sigma0_us * decades, size=drifted.shape
+            )
+        return np.clip(drifted, 0.0, self.g_max_us)
+
+    def drift_weights(self, w: np.ndarray, t_s: float,
+                      rng: Optional[np.random.Generator] = None) -> np.ndarray:
+        """Drift in weight space via the differential pair."""
+        g_pos, g_neg = weights_to_conductance_pairs(w)
+        return conductance_pairs_to_weights(
+            self.drift(g_pos, t_s, rng), self.drift(g_neg, t_s, rng)
+        )
+
+
+# ---------------------------------------------------------------------------
+# Crossbar tiling (Supp. S10 + the paper's 633x512 partitioning)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TilePlan:
+    """How a logical (n_in, n_out) matmul maps onto physical crossbars."""
+
+    n_in: int
+    n_out: int
+    tile_rows: int            # physical rows per crossbar
+    tile_cols: int            # physical columns per crossbar
+    max_active_rows: int      # IR-drop limit on simultaneously-enabled rows
+    n_row_tiles: int
+    n_col_tiles: int
+    n_phases: int             # input-presentation phases per row-tile
+
+    @property
+    def n_crossbars(self) -> int:
+        return self.n_row_tiles * self.n_col_tiles
+
+    @property
+    def devices_per_crossbar(self) -> int:
+        return self.tile_rows * self.tile_cols
+
+
+def plan_tiles(n_in: int, n_out: int,
+               tile_rows: int = 633, tile_cols: int = 512,
+               max_active_rows: int = 256) -> TilePlan:
+    """Partition a logical matmul onto crossbars (paper: 633x512 tiles, 3-phase
+    input presentation so that <=256 rows are enabled at once)."""
+    n_row_tiles = math.ceil(n_in / tile_rows)
+    n_col_tiles = math.ceil(n_out / tile_cols)
+    rows_in_tile = min(n_in, tile_rows)
+    n_phases = math.ceil(rows_in_tile / max_active_rows)
+    return TilePlan(
+        n_in=n_in, n_out=n_out,
+        tile_rows=tile_rows, tile_cols=tile_cols,
+        max_active_rows=max_active_rows,
+        n_row_tiles=n_row_tiles, n_col_tiles=n_col_tiles,
+        n_phases=n_phases,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Noisy VMM (the simulation hot path; also the Pallas-kernel oracle)
+# ---------------------------------------------------------------------------
+
+def noisy_vmm(x, w, *, key=None,
+              read_sigma_w: float = 0.0,
+              input_bits: Optional[int] = None,
+              input_clip: float = 1.0):
+    """Simulated crossbar VMM: ``y = quant(x) @ (w + read_noise)``.
+
+    * ``input_bits``:  PWM input quantization (3-5 bits in experiments).
+    * ``read_sigma_w``: per-call conductance read noise in weight units.
+
+    The differential-pair structure makes the ideal read exactly linear in w,
+    so in weight space the simulation is a plain matmul with additive noise —
+    matching the paper's own simulation methodology (Methods, "Inference with
+    the addition of write noise and read noise").
+    """
+    from repro.core.nladc import pwm_quantize
+
+    if input_bits is not None:
+        x = pwm_quantize(x, input_bits, input_clip)
+    if read_sigma_w > 0.0:
+        if key is None:
+            raise ValueError("read noise requires a PRNG key")
+        w = w + read_noise_weights(key, w.shape, w.dtype, read_sigma_w)
+    return x @ w
+
+
+def phased_vmm(x, w, plan: TilePlan, *, key=None,
+               read_sigma_w: float = 0.0,
+               input_bits: Optional[int] = None,
+               input_clip: float = 1.0):
+    """Supp. S10: split the input across phases/column-groups and accumulate
+    partial dot products (integrator-capacitor accumulation).
+
+    Numerically identical to one big VMM in exact mode; with read noise it
+    draws independent noise per phase (each phase is a separate read), which
+    is the physically faithful behaviour.
+    """
+    from repro.core.nladc import pwm_quantize
+
+    if input_bits is not None:
+        x = pwm_quantize(x, input_bits, input_clip)
+    n_in = x.shape[-1]
+    chunk = plan.max_active_rows
+    n_chunks = math.ceil(n_in / chunk)
+    pad = n_chunks * chunk - n_in
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+        w = jnp.pad(w, [(0, pad), (0, 0)])
+    acc = jnp.zeros(x.shape[:-1] + (w.shape[-1],), dtype=jnp.float32)
+    keys = (
+        jax.random.split(key, n_chunks) if (key is not None and read_sigma_w > 0)
+        else [None] * n_chunks
+    )
+    for i in range(n_chunks):
+        xs = jax.lax.dynamic_slice_in_dim(x, i * chunk, chunk, axis=-1)
+        ws = jax.lax.dynamic_slice_in_dim(w, i * chunk, chunk, axis=0)
+        if read_sigma_w > 0.0:
+            ws = ws + read_noise_weights(keys[i], ws.shape, ws.dtype, read_sigma_w)
+        acc = acc + (xs @ ws).astype(jnp.float32)
+    return acc.astype(x.dtype)

@@ -1,0 +1,380 @@
+"""NL-ADC: nonlinear-function-approximating ramp ADC (the paper's core).
+
+Faithful implementation of Eqs. (1)-(3) and Supp. Notes S1/S12:
+
+* ``build_ramp``            — monotonic ramp: P = 2^b output levels uniformly
+                              spaced in y; thresholds ``V_k = g^{-1}(y_k)``.
+* ``build_nonmonotonic_ramp`` — extremum-split ramp for gelu/swish (Supp. S12):
+                              thresholds ascending in x across both branches,
+                              decode ``y = y0 + LSB * |n - m|`` (Eq. S6).
+* ``nladc_quantize``        — JAX forward: thermometer-code count
+                              ``n = sum_k [x > V_k]`` -> table lookup; backward:
+                              straight-through estimator scaled by ``g'(x)``.
+* ``pwm_quantize``          — b_in-bit PWM input quantization (uniform, STE).
+
+The ramp tables are host-side numpy float64 (they model *programmed memristor
+conductances*, not traced computation); the quantizer consumes them as jnp
+constants.  Write-noise on the programmed ramp is modeled by perturbing the
+*steps* (each step = one memristor, Fig. 2d) and re-cumsum'ing — exactly how
+error accumulates on the physical ramp, and why one-point calibration
+(:mod:`repro.core.calibration`) exists.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import functions as F
+
+G_MAX_US = 150.0  # maximum programmable conductance, uS (paper Methods)
+
+
+@dataclasses.dataclass(frozen=True)
+class Ramp:
+    """A programmed NL-ADC ramp.
+
+    Attributes:
+      name:        activation name.
+      bits:        ADC resolution b; P = 2^b steps, P+1 output codes.
+      thresholds:  (P,) ascending comparator thresholds in x-space
+                   (``V_k`` of Eq. 3, k = 1..P; ``V_0 = V_init`` sits below
+                   every representable input, so it is not a threshold).
+      y_table:     (P+1,) output value for thermometer count n = 0..P.
+      steps:       (P,) ``dV_k = V_k - V_{k-1}``; each maps to ONE memristor.
+      v_init:      ramp start ``V_0``.
+      split_index: extremum code index m for non-monotonic decode; -1 if
+                   monotonic.
+      grad_name:   activation whose derivative drives the STE backward.
+    """
+
+    name: str
+    bits: int
+    thresholds: np.ndarray
+    y_table: np.ndarray
+    steps: np.ndarray
+    v_init: float
+    split_index: int = -1
+    # Monotonic piecewise-uniform y (selu reuses the elu x-grid, Tab. S2):
+    # y is uniform on each side of split_index with different LSBs, but
+    # monotonic overall (signed decode, not the |n-m| V-shape decode).
+    monotonic_split: bool = False
+
+    @property
+    def n_levels(self) -> int:
+        return int(self.y_table.shape[0])
+
+    @property
+    def lsb(self) -> float:
+        """Output LSB (uniform in y by construction)."""
+        dy = np.diff(self.y_table)
+        return float(np.mean(np.abs(dy)))
+
+    def conductances_us(self) -> np.ndarray:
+        """Map ramp steps to memristor conductances (one device per step).
+
+        Paper: "normalize them and map them to the conductances with a maximum
+        conductance of 150 uS".  Step direction is carried by input pulse
+        polarity, so conductances encode |dV_k|.
+        """
+        mags = np.abs(self.steps)
+        scale = G_MAX_US / float(np.max(mags))
+        return mags * scale
+
+    @property
+    def g_scale(self) -> float:
+        """Volts-per-uS scale used by :func:`ramp_from_conductances`."""
+        return float(np.max(np.abs(self.steps))) / G_MAX_US
+
+    def with_thresholds(self, thresholds: np.ndarray) -> "Ramp":
+        return dataclasses.replace(self, thresholds=np.asarray(thresholds))
+
+
+# ---------------------------------------------------------------------------
+# Ramp construction (host-side, float64)
+# ---------------------------------------------------------------------------
+
+def build_ramp(name: str, bits: int,
+               x_lo: Optional[float] = None,
+               x_hi: Optional[float] = None) -> Ramp:
+    """Monotonic NL ramp per Eq. (3) / Supp. Tab. S2."""
+    spec = F.get(name)
+    if not spec.monotonic:
+        return build_nonmonotonic_ramp(name, bits, x_lo=x_lo, x_hi=x_hi)
+    if bits < 1 or bits > 12:
+        raise ValueError(f"bits must be in [1, 12], got {bits}")
+    if name == "selu":
+        # Tab. S2 lists IDENTICAL dV_k for elu and selu: the paper reuses
+        # the elu sampling x-grid (y is then uniform per branch, factor-4
+        # different LSBs across the x=0 split).
+        elu = build_ramp("elu", bits, x_lo=x_lo, x_hi=x_hi)
+        v = np.concatenate([[elu.v_init], elu.thresholds])
+        y = np.asarray(spec.fwd(v), dtype=np.float64)
+        m = int(np.argmin(np.abs(v)))
+        return Ramp(name="selu", bits=bits, thresholds=v[1:].copy(),
+                    y_table=y, steps=np.diff(v), v_init=float(v[0]),
+                    split_index=m, monotonic_split=True)
+    x_lo = spec.x_lo if x_lo is None else x_lo
+    x_hi = spec.x_hi if x_hi is None else x_hi
+    p = 1 << bits
+    y_lo = float(spec.fwd(np.asarray(x_lo, np.float64)))
+    y_hi = float(spec.fwd(np.asarray(x_hi, np.float64)))
+    # P+1 output levels uniform in y (t_k = k*Ts/P maps to y-space uniformly
+    # because the crossing time directly encodes g(V_in)).
+    y_levels = np.linspace(y_lo, y_hi, p + 1, dtype=np.float64)
+    v = spec.inv(np.clip(y_levels, min(y_lo, y_hi) + 0.0, max(y_lo, y_hi)))
+    v = np.asarray(v, dtype=np.float64)
+    # Guard against inf from saturation edges.
+    v[0], v[-1] = x_lo, x_hi
+    if not np.all(np.diff(v) > 0):
+        raise ValueError(f"ramp for {name} is not strictly increasing")
+    steps = np.diff(v)  # dV_k, k=1..P  (one memristor each, Fig. 2d)
+    return Ramp(
+        name=name,
+        bits=bits,
+        thresholds=v[1:].copy(),
+        y_table=y_levels.copy(),
+        steps=steps,
+        v_init=float(v[0]),
+        split_index=-1,
+    )
+
+
+def build_nonmonotonic_ramp(name: str, bits: int,
+                            x_lo: Optional[float] = None,
+                            x_hi: Optional[float] = None,
+                            extra_negative_points: int = 0) -> Ramp:
+    """Extremum-split ramp for non-monotonic activations (Supp. S12).
+
+    The output range is cut into uniform-in-y steps shared by both branches;
+    thresholds ascend in x across the (decreasing) left branch, the extremum,
+    and the (increasing) right branch.  Decode is ``y = y0 + LSB*|n - m|``
+    with a sign flip on the left branch handled by the y-table (Eq. S6).
+
+    ``extra_negative_points`` reproduces the Supp. S12 refinement (Fig. S13f/g)
+    of spending more sample points on the (short) negative-output left branch:
+    it shifts that many codes from the right branch to the left.
+    """
+    spec = F.get(name)
+    if spec.monotonic:
+        raise ValueError(f"{name} is monotonic; use build_ramp")
+    x_lo = spec.x_lo if x_lo is None else x_lo
+    x_hi = spec.x_hi if x_hi is None else x_hi
+    p = 1 << bits
+    xm = float(spec.x_extremum)
+    y0 = float(spec.fwd(np.asarray(xm, np.float64)))
+    y_left = float(spec.fwd(np.asarray(x_lo, np.float64)))
+    y_right = float(spec.fwd(np.asarray(x_hi, np.float64)))
+    # Shared LSB: total code span P covers both branch extents.
+    total_extent = (y_left - y0) + (y_right - y0)
+    lsb = total_extent / p
+    m = int(round((y_left - y0) / lsb)) + extra_negative_points
+    m = max(1, min(p - 1, m))
+    if extra_negative_points:
+        # Recompute per-branch LSBs: left branch gets finer resolution.
+        lsb_left = (y_left - y0) / m
+        lsb_right = (y_right - y0) / (p - m)
+    else:
+        lsb_left = lsb_right = lsb
+    # Left branch thresholds: y descending y0+m*lsb_left .. y0+lsb_left as x
+    # ascends; then the extremum; then the right branch ascending in both.
+    ks_left = np.arange(m, 0, -1, dtype=np.float64)
+    x_left = spec.inv_left(y0 + ks_left * lsb_left)
+    ks_right = np.arange(1, p - m + 1, dtype=np.float64)
+    x_right = spec.inv_right(y0 + ks_right * lsb_right)
+    v = np.concatenate(
+        [np.asarray(x_left, np.float64), [xm], np.asarray(x_right, np.float64)]
+    )  # length P+1: V_0..V_P
+    v[0], v[-1] = min(v[0], x_lo), max(v[-1], x_hi)
+    if not np.all(np.diff(v) > 0):
+        raise ValueError(f"non-monotonic ramp for {name} is not ascending in x")
+    # y_table[n] for thermometer count n (thresholds are v[1:]):
+    # n = 0 -> below all thresholds -> leftmost code (y0 + m*lsb_left)
+    # n = m -> at extremum -> y0;   n = P -> y0 + (P-m)*lsb_right.
+    ns = np.arange(p + 1, dtype=np.float64)
+    y_table = np.where(
+        ns <= m, y0 + (m - ns) * lsb_left, y0 + (ns - m) * lsb_right
+    )
+    return Ramp(
+        name=name,
+        bits=bits,
+        thresholds=v[1:].copy(),
+        y_table=y_table,
+        steps=np.diff(v),
+        v_init=float(v[0]),
+        split_index=m,
+    )
+
+
+def ramp_from_conductances(ramp: Ramp, g_us: np.ndarray,
+                           v_init: Optional[float] = None) -> Ramp:
+    """Rebuild threshold levels from (possibly noisy) programmed conductances.
+
+    ``V'_k = V_init + sum_{i<=k} dV'_i`` with ``dV'_i = g_scale * G'_i`` —
+    write-noise on any single device shifts *all* later levels (Fig. S10c),
+    which is exactly why one-point calibration helps so much.
+    """
+    g_us = np.asarray(g_us, dtype=np.float64)
+    if g_us.shape != ramp.steps.shape:
+        raise ValueError(f"expected {ramp.steps.shape} conductances, got {g_us.shape}")
+    dv = g_us * ramp.g_scale * np.sign(ramp.steps + np.where(ramp.steps == 0, 1e-30, 0.0))
+    v0 = ramp.v_init if v_init is None else v_init
+    thresholds = v0 + np.cumsum(dv)
+    return ramp.with_thresholds(thresholds)
+
+
+# ---------------------------------------------------------------------------
+# Metrics
+# ---------------------------------------------------------------------------
+
+def inl_lsb(programmed: Ramp, ideal: Ramp) -> Tuple[float, float]:
+    """(mean, max) integral nonlinearity in LSBs.
+
+    Deviation of the programmed threshold from the ideal one, expressed in
+    units of the *local* ideal step (the per-code LSB of a nonlinear ramp).
+    """
+    dev = (programmed.thresholds - ideal.thresholds) / np.maximum(
+        np.abs(ideal.steps), 1e-12
+    )
+    return float(np.mean(np.abs(dev))), float(np.max(np.abs(dev)))
+
+
+def transfer_mse(ramp: Ramp, name: Optional[str] = None,
+                 n_points: int = 4001) -> float:
+    """MSE of the quantized transfer function vs. the ideal activation."""
+    spec = F.get(name or ramp.name)
+    xs = np.linspace(spec.x_lo, spec.x_hi, n_points)
+    n = np.sum(xs[:, None] > ramp.thresholds[None, :], axis=1)
+    yq = ramp.y_table[n]
+    return float(np.mean((yq - spec.fwd(xs)) ** 2))
+
+
+# ---------------------------------------------------------------------------
+# JAX quantizers (forward = thermometer code; backward = STE * g')
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _nladc_apply(x, thresholds, y_table, grad_name):
+    return _nladc_fwd_impl(x, thresholds, y_table)
+
+
+def _nladc_fwd_impl(x, thresholds, y_table):
+    # Thermometer count: n = sum_k [x > V_k].  This *is* the comparator bank.
+    # searchsorted == the same count but O(log P); both lower identically well,
+    # we keep the comparison form to mirror the hardware (and the Pallas
+    # kernel uses the same form).
+    n = jnp.searchsorted(thresholds, x.astype(thresholds.dtype), side="right")
+    return jnp.take(y_table, n).astype(x.dtype)
+
+
+def _nladc_vjp_fwd(x, thresholds, y_table, grad_name):
+    return _nladc_fwd_impl(x, thresholds, y_table), x
+
+
+def _nladc_vjp_bwd(grad_name, res, ct):
+    x = res
+    spec = F.get(grad_name)
+    g = _jnp_grad(spec, x)
+    # Gate the STE outside the ramp's representable domain (saturation).
+    in_domain = (x >= spec.x_lo) & (x <= spec.x_hi)
+    gx = jnp.where(in_domain, g, 0.0).astype(ct.dtype)
+    return (ct * gx, None, None)
+
+
+_nladc_apply.defvjp(_nladc_vjp_fwd, _nladc_vjp_bwd)
+
+
+def _jnp_grad(spec: F.ActivationSpec, x):
+    """jnp re-expression of g' (the numpy registry grads are host-only)."""
+    name = spec.name
+    if name == "sigmoid":
+        s = jax.nn.sigmoid(x)
+        return s * (1 - s)
+    if name == "tanh":
+        t = jnp.tanh(x)
+        return 1 - t * t
+    if name == "softplus":
+        return jax.nn.sigmoid(x)
+    if name == "softsign":
+        return 1.0 / jnp.square(1.0 + jnp.abs(x))
+    if name == "elu":
+        return jnp.where(x >= 0, 1.0, jnp.exp(x))
+    if name == "selu":
+        return jnp.where(x >= 0, 0.5, 2.0 * jnp.exp(x))
+    if name == "gelu":
+        cdf = 0.5 * (1.0 + jax.lax.erf(x / np.sqrt(2.0)))
+        pdf = jnp.exp(-0.5 * x * x) / np.sqrt(2.0 * np.pi)
+        return cdf + x * pdf
+    if name in ("swish", "silu"):
+        s = jax.nn.sigmoid(x)
+        return s + x * s * (1 - s)
+    raise KeyError(name)
+
+
+class NLADC:
+    """Callable JAX wrapper around a programmed :class:`Ramp`.
+
+    >>> adc = NLADC(build_ramp("sigmoid", 5))
+    >>> y = adc(x)           # quantized sigmoid, STE gradient
+    """
+
+    def __init__(self, ramp: Ramp, dtype=jnp.float32):
+        self.ramp = ramp
+        self.thresholds = jnp.asarray(ramp.thresholds, dtype=dtype)
+        self.y_table = jnp.asarray(ramp.y_table, dtype=dtype)
+
+    def __call__(self, x):
+        return _nladc_apply(x, self.thresholds, self.y_table, self.ramp.name)
+
+    def codes(self, x):
+        """Raw thermometer count n (the chip's native output)."""
+        return jnp.searchsorted(
+            self.thresholds, x.astype(self.thresholds.dtype), side="right"
+        )
+
+
+def nladc_reference(x: np.ndarray, ramp: Ramp) -> np.ndarray:
+    """Pure-numpy oracle (used by kernel ref tests and benchmarks)."""
+    x = np.asarray(x)
+    n = np.sum(x[..., None] > ramp.thresholds, axis=-1)
+    return ramp.y_table[n].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# PWM input quantization (inputs are b_in-bit pulse widths on the chip)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def pwm_quantize(x, bits: int, x_max: float):
+    """Uniform b-bit quantization of inputs in [-x_max, x_max] (symmetric).
+
+    Models the PWM input encoding (inputs are sent as 2^b-cycle pulse widths).
+    Forward rounds to the grid; backward is a clipped straight-through pass.
+    """
+    return _pwm_fwd(x, bits, x_max)
+
+
+def _pwm_fwd(x, bits, x_max):
+    # 2^b - 1 symmetric levels incl. 0; step chosen so +/-x_max are codes.
+    levels = (1 << bits) - 2
+    step = 2.0 * x_max / max(levels, 1)
+    xq = jnp.clip(x, -x_max, x_max)
+    return jnp.round(xq / step) * step
+
+
+def _pwm_vjp_fwd(x, bits, x_max):
+    return _pwm_fwd(x, bits, x_max), x
+
+
+def _pwm_vjp_bwd(bits, x_max, res, ct):
+    x = res
+    pass_through = (x >= -x_max) & (x <= x_max)
+    return (jnp.where(pass_through, ct, 0.0),)
+
+
+pwm_quantize.defvjp(_pwm_vjp_fwd, _pwm_vjp_bwd)

@@ -1,0 +1,1 @@
+"""Deterministic synthetic data pipelines (GSCD/PTB are gated offline)."""

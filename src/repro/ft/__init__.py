@@ -1,0 +1,1 @@
+"""Fault tolerance: failure detection, retrying executor, elastic plans."""

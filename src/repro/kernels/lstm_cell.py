@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: fused LSTM elementwise tail (paper Eq. 5 / Fig. S6).
+
+After the crossbar MAC produces the four raw gate pre-activations, the paper
+pipelines the digital tail (2 mults, 1 add, 1 tanh, 1 mult) through k
+processors.  On TPU the whole tail is one VMEM-resident elementwise pass:
+
+    f, i, o = sigmoid-NLADC(g_f, g_i, g_o);  a = tanh-NLADC(g_a)
+    c' = f*c + i*a;   h' = o * tanh-NLADC(c')
+
+Five NL-ADC quantizations + three multiplies + one add, fused — one HBM
+read of (gates, c) and one write of (h', c').  Gate blocks are sliced from
+the packed (B, 4H) layout inside the kernel so the matmul upstream can stay
+a single wide GEMM.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.nladc import Ramp
+from repro.kernels.ref import closed_form_decode, decode_mode, decode_params
+
+DEFAULT_BLOCK = (256, 256)   # (batch, hidden) tile
+
+
+def _quant(x, thr, y0, lsb_l, lsb_r, m, mode):
+    n = jnp.zeros(x.shape, jnp.float32)
+    for t in range(thr.shape[0]):
+        n = n + (x > thr[t]).astype(jnp.float32)
+    return closed_form_decode(n, mode, y0, lsb_l, lsb_r, m)
+
+
+def _kernel(gf_ref, ga_ref, gi_ref, go_ref, c_ref, sthr_ref, tthr_ref,
+            h_ref, c_out_ref, *, sp, tp):
+    sthr, tthr = sthr_ref[...], tthr_ref[...]
+    f = _quant(gf_ref[...].astype(jnp.float32), sthr, *sp)
+    a = _quant(ga_ref[...].astype(jnp.float32), tthr, *tp)
+    i = _quant(gi_ref[...].astype(jnp.float32), sthr, *sp)
+    o = _quant(go_ref[...].astype(jnp.float32), sthr, *sp)
+    c_new = f * c_ref[...].astype(jnp.float32) + i * a
+    h_new = o * _quant(c_new, tthr, *tp)
+    h_ref[...] = h_new.astype(h_ref.dtype)
+    c_out_ref[...] = c_new.astype(c_out_ref.dtype)
+
+
+def lstm_gates_pallas(gates, c, sig_ramp: Ramp, tanh_ramp: Ramp, *,
+                      block: Tuple[int, int] = DEFAULT_BLOCK,
+                      interpret: bool = True):
+    """gates: (B, 4H) [f|a|i|o], c: (B, H) -> (h', c')."""
+    b_dim, h4 = gates.shape
+    h_dim = h4 // 4
+    assert 4 * h_dim == h4
+    bb = min(block[0], b_dim)
+    bh = min(block[1], h_dim)
+    grid = (pl.cdiv(b_dim, bb), pl.cdiv(h_dim, bh))
+    sp = decode_params(sig_ramp) + (decode_mode(sig_ramp),)
+    tp = decode_params(tanh_ramp) + (decode_mode(tanh_ramp),)
+    sthr = jnp.asarray(sig_ramp.thresholds, jnp.float32)
+    tthr = jnp.asarray(tanh_ramp.thresholds, jnp.float32)
+    gf, ga, gi, go = jnp.split(gates, 4, axis=-1)
+    kernel = functools.partial(_kernel, sp=sp, tp=tp)
+    gate_spec = pl.BlockSpec((bb, bh), lambda i, j: (i, j))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[gate_spec, gate_spec, gate_spec, gate_spec, gate_spec,
+                  pl.BlockSpec((sthr.shape[0],), lambda i, j: (0,)),
+                  pl.BlockSpec((tthr.shape[0],), lambda i, j: (0,))],
+        out_specs=[gate_spec, gate_spec],
+        out_shape=[jax.ShapeDtypeStruct((b_dim, h_dim), gates.dtype),
+                   jax.ShapeDtypeStruct((b_dim, h_dim), c.dtype)],
+        interpret=interpret,
+    )(gf, ga, gi, go, c, sthr, tthr)

@@ -1,0 +1,118 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Handles: leading-dim flattening, padding to block multiples, the
+interpret-mode switch (TPU target, CPU container: ``interpret=True``
+executes the kernel bodies in Python for correctness validation), and
+straight-through-estimator gradients matching :mod:`repro.core.nladc`.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.nladc import Ramp
+from repro.kernels import crossbar_mac as _cb
+from repro.kernels import flash_decode as _fd
+from repro.kernels import fused_matmul_nladc as _fm
+from repro.kernels import lstm_cell as _lc
+from repro.kernels import nladc_kernel as _nk
+
+
+def _interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def nladc(x, ramp: Ramp, *, block=None):
+    """Elementwise NL-ADC of any-shaped x (flattened to 2D tiles)."""
+    shape = x.shape
+    flat = x.reshape(-1, shape[-1]) if x.ndim > 1 else x.reshape(1, -1)
+    blk = block or _nk.DEFAULT_BLOCK
+    m0, n0 = flat.shape
+    flat = _pad_to(_pad_to(flat, blk[0], 0), blk[1], 1)
+    out = _nk.nladc_pallas(flat, ramp, block=blk, interpret=_interpret())
+    return out[:m0, :n0].reshape(shape)
+
+
+def fused_matmul_nladc(x, w, ramp: Ramp, bias=None, *, blocks=None):
+    """NLADC(x @ w + bias) with batch-dims flattened into M."""
+    blk = blocks or _fm.DEFAULT_BLOCKS
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    n = w.shape[-1]
+    xf = x.reshape(-1, k)
+    m0 = xf.shape[0]
+    xf = _pad_to(_pad_to(xf, blk[0], 0), blk[2], 1)
+    wp = _pad_to(_pad_to(w, blk[2], 0), blk[1], 1)
+    bp = None
+    if bias is not None:
+        bp = _pad_to(bias, blk[1], 0)
+    out = _fm.fused_matmul_nladc_pallas(xf, wp, ramp, bp, blocks=blk,
+                                        interpret=_interpret())
+    return out[:m0, :n].reshape(lead + (n,))
+
+
+def analog_tile(x, w, ramp: Ramp, *, input_bits: Optional[int] = None,
+                input_clip: float = 1.0, w_noise=None, blocks=None):
+    blk = blocks or _cb.DEFAULT_BLOCKS
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    n = w.shape[-1]
+    xf = x.reshape(-1, k)
+    m0 = xf.shape[0]
+    xf = _pad_to(_pad_to(xf, blk[0], 0), blk[2], 1)
+    wp = _pad_to(_pad_to(w, blk[2], 0), blk[1], 1)
+    nz = None
+    if w_noise is not None:
+        nz = _pad_to(_pad_to(w_noise, blk[2], 0), blk[1], 1)
+    out = _cb.analog_tile_pallas(xf, wp, ramp, input_bits=input_bits,
+                                 input_clip=input_clip, w_noise=nz,
+                                 blocks=blk, interpret=_interpret())
+    return out[:m0, :n].reshape(lead + (n,))
+
+
+def lstm_gates(gates, c, sig_ramp: Ramp, tanh_ramp: Ramp, *, block=None):
+    """Fused LSTM tail. gates: (B, 4H), c: (B, H) -> (h', c')."""
+    blk = block or _lc.DEFAULT_BLOCK
+    b0, h4 = gates.shape
+    h0 = h4 // 4
+    # pad batch and hidden separately (gates padded per-gate inside kernel
+    # wrapper: split, pad, re-concat keeps the [f|a|i|o] packing intact)
+    gf, ga, gi, go = jnp.split(gates, 4, axis=-1)
+    parts = [_pad_to(_pad_to(g, blk[0], 0), blk[1], 1)
+             for g in (gf, ga, gi, go)]
+    gp = jnp.concatenate(parts, axis=-1)
+    cp = _pad_to(_pad_to(c, blk[0], 0), blk[1], 1)
+    h, c_new = _lc.lstm_gates_pallas(gp, cp, sig_ramp, tanh_ramp,
+                                     block=blk, interpret=_interpret())
+    return h[:b0, :h0], c_new[:b0, :h0]
+
+
+def flash_decode_int8(q, k8, k_scale, v8, v_scale, length, *, block_s=None):
+    """One-token flash attention over an int8 KV cache (fused dequant)."""
+    bs = block_s or _fd.DEFAULT_BLOCK_S
+    s_len = k8.shape[1]
+    pad = (-s_len) % bs
+    if pad:
+        k8 = _pad_to(k8, bs, 1)
+        v8 = _pad_to(v8, bs, 1)
+        k_scale = _pad_to(k_scale, bs, 1)
+        v_scale = _pad_to(v_scale, bs, 1)
+    return _fd.flash_decode_int8(q, k8, k_scale, v8, v_scale, length,
+                                 block_s=bs, interpret=_interpret())

@@ -1,0 +1,126 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references).
+
+Each function mirrors one kernel's semantics exactly, including the
+closed-form NL-ADC decode (thermometer count -> affine / split-affine y),
+so ``assert_allclose(kernel(x), ref(x))`` is a strict contract.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.nladc import Ramp
+
+
+MODE_AFFINE = 0       # uniform y:              y(n) = y0 + n * lsb
+MODE_VSHAPE = 1       # extremum split (S12):   y(n) = y0 + |n - m| * lsb_s
+MODE_SIGNED = 2       # monotonic split (selu): y(n) = y0 + (n - m) * lsb_s
+
+
+def decode_mode(ramp: Ramp) -> int:
+    if ramp.split_index < 0:
+        return MODE_AFFINE
+    return MODE_SIGNED if ramp.monotonic_split else MODE_VSHAPE
+
+
+def decode_params(ramp: Ramp) -> Tuple[float, float, float, int]:
+    """(y0, lsb_left, lsb_right, m) of the closed-form thermometer decode."""
+    yt = np.asarray(ramp.y_table, dtype=np.float64)
+    if ramp.split_index < 0:
+        lsb = (yt[-1] - yt[0]) / (len(yt) - 1)
+        return float(yt[0]), float(lsb), float(lsb), 0
+    m = ramp.split_index
+    if ramp.monotonic_split:
+        lsb_left = (yt[m] - yt[0]) / m
+    else:
+        lsb_left = (yt[0] - yt[m]) / m
+    lsb_right = (yt[-1] - yt[m]) / (len(yt) - 1 - m)
+    return float(yt[m]), float(lsb_left), float(lsb_right), m
+
+
+def closed_form_decode(n, mode, y0, lsb_l, lsb_r, m):
+    """Shared by the ref oracle and the Pallas kernel bodies."""
+    if mode == MODE_AFFINE:
+        return y0 + n * lsb_l
+    if mode == MODE_VSHAPE:
+        return jnp.where(n <= m, y0 + (m - n) * lsb_l, y0 + (n - m) * lsb_r)
+    return jnp.where(n <= m, y0 - (m - n) * lsb_l, y0 + (n - m) * lsb_r)
+
+
+def nladc_decode(n, ramp: Ramp):
+    """Closed-form y(n) (matches ramp.y_table up to fp rounding)."""
+    y0, lsb_l, lsb_r, m = decode_params(ramp)
+    return closed_form_decode(n.astype(jnp.float32), decode_mode(ramp),
+                              y0, lsb_l, lsb_r, m)
+
+
+def nladc(x, ramp: Ramp):
+    """Elementwise NL-ADC: thermometer count vs thresholds, affine decode."""
+    thr = jnp.asarray(ramp.thresholds, jnp.float32)
+    n = jnp.sum(x.astype(jnp.float32)[..., None] > thr, axis=-1)
+    return nladc_decode(n, ramp).astype(x.dtype)
+
+
+def fused_matmul_nladc(x, w, ramp: Ramp, bias=None):
+    """y = NLADC(x @ w + bias), f32 accumulation."""
+    acc = jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32))
+    if bias is not None:
+        acc = acc + bias.astype(jnp.float32)
+    return nladc(acc, ramp).astype(x.dtype)
+
+
+def pwm_quantize(x, bits: int, x_max: float):
+    levels = (1 << bits) - 2
+    step = 2.0 * x_max / max(levels, 1)
+    return jnp.round(jnp.clip(x, -x_max, x_max) / step) * step
+
+
+def analog_tile(x, w, ramp: Ramp, *, input_bits: Optional[int] = None,
+                input_clip: float = 1.0, w_noise=None):
+    """One crossbar tile end-to-end: PWM-quantized inputs, (pre-sampled)
+    read-noisy weights, MAC, in-memory NL-ADC."""
+    if input_bits is not None:
+        x = pwm_quantize(x, input_bits, input_clip)
+    if w_noise is not None:
+        w = w + w_noise
+    return fused_matmul_nladc(x, w, ramp)
+
+
+def lstm_gates(gates, c, sig_ramp: Ramp, tanh_ramp: Ramp):
+    """Fused LSTM elementwise tail (paper Eq. 5 / Fig. S6).
+
+    gates: (B, 4H) raw crossbar MAC results, gate order [f, a, i, o];
+    c: (B, H) previous cell state.  Returns (h_new, c_new).
+    """
+    h4 = gates.shape[-1]
+    h = h4 // 4
+    gf, ga, gi, go = (gates[..., :h], gates[..., h:2 * h],
+                      gates[..., 2 * h:3 * h], gates[..., 3 * h:])
+    f = nladc(gf, sig_ramp)
+    a = nladc(ga, tanh_ramp)
+    i = nladc(gi, sig_ramp)
+    o = nladc(go, sig_ramp)
+    c_new = f * c + i * a
+    h_new = o * nladc(c_new, tanh_ramp)
+    return h_new, c_new
+
+
+def flash_decode_int8(q, k8, k_scale, v8, v_scale, length):
+    """Oracle: dequantize fully, masked softmax attention for one token."""
+    b, h, d = q.shape
+    hkv = k8.shape[2]
+    g = h // hkv
+    k = k8.astype(jnp.float32) * k_scale.astype(jnp.float32)[..., None]
+    v = v8.astype(jnp.float32) * v_scale.astype(jnp.float32)[..., None]
+    qg = q.astype(jnp.float32).reshape(b, hkv, g, d) / jnp.sqrt(float(d))
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k)
+    slot = jnp.arange(k8.shape[1])
+    valid = slot[None, :] < length[:, None]
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", p, v)
+    return o.reshape(b, h, d)

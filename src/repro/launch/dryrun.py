@@ -1,0 +1,312 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: 512 placeholder
+CPU devices host the production meshes; every cell must ``.lower().compile()``
+and report memory/cost analysis.  Results land in ``results/dryrun/*.json``
+and feed EXPERIMENTS.md §Dry-run / §Roofline.
+
+Accounting note: XLA cost_analysis counts while-loop bodies ONCE, so the
+scan-over-layers lowering (used for the real compile + memory analysis)
+undercounts FLOPs/collectives.  The analysis pass therefore also compiles
+two *unrolled* shallow variants (depth d1 < d2 differing by exactly one scan
+trip) and extrapolates linearly:
+
+    metric(full) = metric(d1) + (trips_full - 1) * (metric(d2) - metric(d1))
+
+which is exact for uniform layer stacks (all of ours are).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-32b \
+        --shape train_4k [--multi-pod] [--no-analysis] [--out results/dryrun]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import sys           # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import numpy as np   # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__),
+                                "..", "..", ".."))  # for benchmarks/
+
+from repro import configs                            # noqa: E402
+from repro.dist import sharding as SH                # noqa: E402
+from repro.launch import specs as SPECS              # noqa: E402
+from repro.launch.mesh import make_production_mesh   # noqa: E402
+from repro.launch.steps import build_all, make_optimizer  # noqa: E402
+
+from benchmarks import roofline as RL                # noqa: E402
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _sh(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _depth_variants(cfg):
+    """Two reduced-depth configs whose scan trip counts differ by one."""
+    if cfg.family == "encdec":
+        v1 = cfg.replace(n_layers=2, n_enc_layers=1, n_dec_layers=1)
+        v2 = cfg.replace(n_layers=4, n_enc_layers=2, n_dec_layers=2)
+        return v1, v2, cfg.n_enc_layers
+    if cfg.family == "hybrid":
+        pat = len(cfg.block_pattern)
+        tail = cfg.n_layers % pat
+        v1 = cfg.replace(n_layers=pat + tail)
+        v2 = cfg.replace(n_layers=2 * pat + tail)
+        return v1, v2, cfg.n_layers // pat
+    return (cfg.replace(n_layers=1), cfg.replace(n_layers=2), cfg.n_layers)
+
+
+def _compile_step(cfg, shape, kind, mesh, *, unroll: bool):
+    """Lower+compile one step for one config; return (compiled, t_l, t_c)."""
+    model, train_step, prefill_step, serve_step = build_all(cfg)
+    model.unroll = unroll
+    params_sds = SPECS.param_shape_specs(cfg)
+    if kind != "train" and cfg.serve_params_dtype != "float32":
+        dt = jax.numpy.dtype(cfg.serve_params_dtype)
+        params_sds = jax.tree.map(
+            lambda l: SDS(l.shape, dt)
+            if l.dtype == jax.numpy.float32 else l, params_sds)
+    pspecs = SH.param_specs(params_sds, mesh,
+                            replicate_all=(cfg.family == "ssm"))
+    psh = _sh(mesh, pspecs)
+
+    t0 = time.time()
+    # ``with mesh`` = legacy context; ``jax.set_mesh`` additionally exposes
+    # the abstract mesh to shard_map-based layers (EP) during tracing.
+    with mesh, jax.set_mesh(mesh):
+        if kind == "train":
+            batch = SPECS.train_batch_specs(cfg, shape)
+            opt = make_optimizer(cfg)
+            opt_sds = jax.eval_shape(opt.init, params_sds)
+            osh = type(opt_sds)(count=NamedSharding(mesh, P()),
+                                mu=_sh(mesh, pspecs), nu=_sh(mesh, pspecs))
+            bsh = _sh(mesh, SH.batch_specs(batch, mesh))
+            seed = SDS((), jax.numpy.int32)
+            lowered = jax.jit(
+                train_step,
+                in_shardings=(psh, osh, bsh, NamedSharding(mesh, P())),
+                out_shardings=(psh, osh, None),
+            ).lower(params_sds, opt_sds, batch, seed)
+        elif kind == "prefill":
+            batch = SPECS.prefill_batch_specs(cfg, shape)
+            bsh = _sh(mesh, SH.batch_specs(batch, mesh))
+            lowered = jax.jit(
+                prefill_step, in_shardings=(psh, bsh),
+            ).lower(params_sds, batch)
+        else:
+            tokens, state_sds = SPECS.decode_specs(cfg, shape)
+            ssh = _sh(mesh, SH.decode_state_specs(state_sds, mesh))
+            tsh = _sh(mesh, SH.batch_specs({"t": tokens}, mesh))["t"]
+            lowered = jax.jit(
+                serve_step, in_shardings=(psh, ssh, tsh),
+                out_shardings=(None, ssh),
+            ).lower(params_sds, state_sds, tokens)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    return compiled, t_lower, t_compile
+
+
+def _metrics(compiled, with_hlo=True):
+    cost = RL.cost_dict(compiled)
+    coll = RL.CollectiveStats({}, {})
+    if with_hlo:
+        try:
+            coll = RL.parse_collectives(compiled.as_text())
+        except Exception:
+            pass
+    cb = 0
+    if with_hlo:
+        try:
+            cb = RL.convert_bytes(compiled.as_text())
+        except Exception:
+            pass
+    return {
+        "flops": cost.get("flops", 0.0),
+        "bytes": cost.get("bytes accessed", 0.0),
+        "convert_bytes": float(cb),
+        "coll_bytes": float(coll.total_bytes),
+        "coll_counts": coll.counts,
+        "coll_by_kind": coll.bytes_by_kind,
+    }
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               analysis: bool = True, overrides: dict | None = None,
+               microbatches: int = 1):
+    """``microbatches > 1``: lower the per-microbatch train step (the
+    production loop runs gradient accumulation over the full assigned
+    global batch; peak activation memory scales ~1/microbatches while
+    per-global-step roofline terms are microbatch-count invariant)."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    cfg, shape, kind, _ = SPECS.input_specs(arch, shape_name)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    if microbatches > 1 and kind == "train":
+        import dataclasses as _dc
+        shape = _dc.replace(shape,
+                            global_batch=shape.global_batch // microbatches)
+
+    # 1) full-depth scan compile: the deliverable (memory + compile proof).
+    compiled, t_lower, t_compile = _compile_step(cfg, shape, kind, mesh,
+                                                 unroll=False)
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "peak_memory_in_bytes"):
+            v = getattr(ma, k, None)
+            if v is not None:
+                mem[k] = int(v)
+    except Exception as e:          # pragma: no cover
+        mem["error"] = str(e)
+    raw = _metrics(compiled)
+    del compiled
+
+    # 2) exact accounting from unrolled shallow variants.
+    corrected = dict(raw)
+    analysis_info = {"mode": "raw-scan (loop bodies counted once)"}
+    if analysis:
+        v1, v2, trips = _depth_variants(cfg)
+        c1, _, t1 = _compile_step(v1, shape, kind, mesh, unroll=True)
+        m1 = _metrics(c1)
+        del c1
+        c2, _, t2 = _compile_step(v2, shape, kind, mesh, unroll=True)
+        m2 = _metrics(c2)
+        del c2
+        for k in ("flops", "bytes", "coll_bytes", "convert_bytes"):
+            corrected[k] = m1[k] + (trips - 1) * (m2[k] - m1[k])
+        ck = {}
+        for kind_ in set(m1["coll_by_kind"]) | set(m2["coll_by_kind"]):
+            a, b = m1["coll_by_kind"].get(kind_, 0), \
+                m2["coll_by_kind"].get(kind_, 0)
+            ck[kind_] = int(a + (trips - 1) * (b - a))
+        corrected["coll_by_kind"] = ck
+        cc = {}
+        for kind_ in set(m1["coll_counts"]) | set(m2["coll_counts"]):
+            a, b = m1["coll_counts"].get(kind_, 0), \
+                m2["coll_counts"].get(kind_, 0)
+            cc[kind_] = int(a + (trips - 1) * (b - a))
+        corrected["coll_counts"] = cc
+        analysis_info = {
+            "mode": "unrolled-extrapolation",
+            "trips": trips,
+            "variant_compile_s": [round(t1, 2), round(t2, 2)],
+            "variant_flops": [m1["flops"], m2["flops"]],
+        }
+
+    # cost_analysis + the partitioned HLO are PER-DEVICE under SPMD
+    # (verified empirically) — scale to global so the Roofline formulas
+    # (which divide by chips) hold.
+    roof = RL.Roofline(
+        arch=arch, shape=shape_name,
+        mesh="2x16x16" if multi_pod else "16x16", chips=chips,
+        hlo_flops=corrected["flops"] * chips,
+        hlo_bytes=corrected["bytes"] * chips,
+        collective_bytes=corrected["coll_bytes"] * chips,
+        collective_counts=corrected["coll_counts"],
+        collective_bytes_by_kind={k: v * chips for k, v in
+                                  corrected["coll_by_kind"].items()},
+        model_flops=RL.model_flops_for(cfg, shape, kind),
+        per_device_peak_memory=mem.get("temp_size_in_bytes"),
+        hlo_bytes_adjusted=max(corrected["bytes"]
+                               - corrected.get("convert_bytes", 0.0), 0.0)
+        * chips,
+    )
+    info = {"memory_analysis": mem, "raw_scan_metrics": raw,
+            "analysis": analysis_info,
+            "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+            "kind": kind}
+    return roof, info
+
+
+def run_cell(arch, shape_name, multi_pod, out_dir, verbose=True,
+             analysis=True, overrides=None, tag_suffix="",
+             microbatches=1):
+    tag = f"{arch}__{shape_name}__{'2x16x16' if multi_pod else '16x16'}"
+    tag += tag_suffix
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, tag + ".json")
+    try:
+        roof, info = lower_cell(arch, shape_name, multi_pod=multi_pod,
+                                analysis=analysis, overrides=overrides,
+                                microbatches=microbatches)
+        info["microbatches"] = microbatches
+        rec = roof.to_json()
+        rec.update(info)
+        rec["status"] = "ok"
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=2)
+        if verbose:
+            print(f"[dryrun] {tag}: OK compile={info['compile_s']}s "
+                  f"flops={roof.hlo_flops:.3e} coll={roof.collective_bytes:.3e} "
+                  f"dominant={roof.dominant} "
+                  f"frac={roof.roofline_fraction:.3f} "
+                  f"useful={roof.useful_flops_ratio:.3f}", flush=True)
+        return True
+    except Exception as e:
+        rec = {"status": "error", "arch": arch, "shape": shape_name,
+               "multi_pod": multi_pod, "error": str(e),
+               "traceback": traceback.format_exc()}
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=2)
+        if verbose:
+            print(f"[dryrun] {tag}: FAIL {e}", flush=True)
+        return False
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-analysis", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg override key=value (perf iterations)")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--tag", default="", help="result filename suffix")
+    args = ap.parse_args()
+    overrides = {}
+    for kv in args.override:
+        k, v = kv.split("=", 1)
+        try:
+            import ast
+            v = ast.literal_eval(v)
+        except (ValueError, SyntaxError):
+            pass
+        overrides[k] = v
+
+    if args.all:
+        ok = True
+        for arch, shape_name, skip in configs.cells():
+            ok &= run_cell(arch, shape_name, args.multi_pod, args.out,
+                           analysis=not args.no_analysis)
+        sys.exit(0 if ok else 1)
+
+    assert args.arch and args.shape, "--arch/--shape or --all required"
+    ok = run_cell(args.arch, args.shape, args.multi_pod, args.out,
+                  analysis=not args.no_analysis, overrides=overrides or None,
+                  tag_suffix=args.tag, microbatches=args.microbatches)
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

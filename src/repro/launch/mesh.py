@@ -1,0 +1,35 @@
+"""Production mesh construction (single-pod 16x16, multi-pod 2x16x16).
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before any jax import).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    if len(jax.devices()) == n:
+        return jax.make_mesh(shape, axes)
+    # Fewer/more devices than the mesh needs (e.g. single-pod 256 on a
+    # 512-device dry-run host): build from an explicit device slice.
+    devices = jax.devices()
+    if len(devices) < n:
+        raise ValueError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} "
+            "(run under XLA_FLAGS=--xla_force_host_platform_device_count=512)")
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_host_mesh(axes=("data", "model")) -> Mesh:
+    """Degenerate mesh over however many devices this host has (tests)."""
+    n = len(jax.devices())
+    shape = (1, n) if len(axes) == 2 else (n,)
+    return Mesh(np.asarray(jax.devices()).reshape(shape), axes)

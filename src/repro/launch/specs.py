@@ -1,0 +1,72 @@
+"""ShapeDtypeStruct stand-ins for every (arch x shape) dry-run cell.
+
+``input_specs(arch, shape)`` returns the batch pytree of ShapeDtypeStructs
+(weak-type-correct, shardable, no device allocation) for the step the cell
+lowers: ``train_step`` (tokens+labels), ``prefill_step`` (tokens), or
+``serve_step`` (one new token + the full decode state).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.nn.model import build
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _extras(cfg: ModelConfig, batch: int) -> Dict[str, Any]:
+    if cfg.modality == "vision":
+        return {"patch_embeds": SDS((batch, cfg.n_patches, cfg.d_model),
+                                    jnp.bfloat16)}
+    if cfg.modality == "audio":
+        return {"frames": SDS((batch, cfg.enc_len, cfg.d_model),
+                              jnp.bfloat16)}
+    return {}
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    batch = {
+        "tokens": SDS((b, s), jnp.int32),
+        "labels": SDS((b, s), jnp.int32),
+    }
+    batch.update(_extras(cfg, b))
+    return batch
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    batch = {"tokens": SDS((b, s), jnp.int32)}
+    batch.update(_extras(cfg, b))
+    return batch
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """(tokens, state) ShapeDtypeStructs for serve_step."""
+    b, s = shape.global_batch, shape.seq_len
+    model = build(cfg)
+    state = jax.eval_shape(lambda: model.init_decode_state(b, s))
+    tokens = SDS((b, 1), jnp.int32)
+    return tokens, state
+
+
+def param_shape_specs(cfg: ModelConfig):
+    model = build(cfg)
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+def input_specs(arch: str, shape_name: str):
+    """Public entry: (cfg, shape, kind, batch-or-(tokens,state))."""
+    cfg = get(arch)
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return cfg, shape, "train", train_batch_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return cfg, shape, "prefill", prefill_batch_specs(cfg, shape)
+    return cfg, shape, "decode", decode_specs(cfg, shape)

@@ -1,0 +1,73 @@
+"""Step factories: train_step / prefill_step / serve_step for any arch.
+
+These are the functions the dry-run lowers and the real drivers execute.
+All randomness is derived from an int32 ``seed`` input so steps take only
+arrays (ShapeDtypeStruct-friendly).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.nn.model import build
+from repro.train import optim
+
+
+def make_optimizer(cfg: ModelConfig, total_steps: int = 10000) -> optim.Adam:
+    return optim.Adam(
+        lr=optim.cosine_schedule(3e-4, warmup_steps=min(500, total_steps // 10 + 1),
+                                 total_steps=total_steps),
+        weight_decay=0.1,
+        grad_clip_norm=1.0,
+    )
+
+
+def make_train_step(model, optimizer: optim.Adam,
+                    *, remat: bool = True) -> Callable:
+    def train_step(params, opt_state, batch, seed):
+        key = jax.random.PRNGKey(seed)
+
+        def loss_fn(p):
+            return model.loss(p, batch, key=key, remat=remat)
+
+        (_, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        metrics = dict(metrics, grad_norm=optim.global_norm(grads))
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(model) -> Callable:
+    def prefill_step(params, batch):
+        tokens = batch["tokens"]
+        extra = {k: v for k, v in batch.items() if k != "tokens"}
+        logits = model.prefill(params, tokens, extra or None)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, logits
+
+    return prefill_step
+
+
+def make_serve_step(model) -> Callable:
+    """One decode step: token in, greedy next token + updated state out."""
+
+    def serve_step(params, state, tokens):
+        logits, new_state = model.decode_step(params, state, tokens)
+        next_token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_token, new_state
+
+    return serve_step
+
+
+def build_all(cfg: ModelConfig):
+    """(model, train_step, prefill_step, serve_step) for one config."""
+    model = build(cfg)
+    opt = make_optimizer(cfg)
+    return (model, make_train_step(model, opt), make_prefill_step(model),
+            make_serve_step(model))

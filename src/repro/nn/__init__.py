@@ -1,0 +1,1 @@
+"""Model substrate: pure-JAX (pytree params) layers for all assigned archs."""

@@ -1,0 +1,47 @@
+"""Exact (float) activations used as the software baseline.
+
+The NL-ADC path (:mod:`repro.core.analog_layer`) quantizes these; ``exact``
+is both the baseline mode and the reference the quantizer is validated
+against.  Names match :mod:`repro.core.functions`'s registry.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+_SELU_ALPHA = 2.0
+_SELU_SLOPE = 0.5
+
+
+def _selu_paper(x):
+    # The paper's simplified selu (Tab. S1): 0.5x (x>=0), 2(e^x - 1) (x<0).
+    return jnp.where(x >= 0, _SELU_SLOPE * x, _SELU_ALPHA * jnp.expm1(x))
+
+
+def _softsign(x):
+    return x / (1.0 + jnp.abs(x))
+
+
+_EXACT = {
+    "sigmoid": jax.nn.sigmoid,
+    "tanh": jnp.tanh,
+    "softplus": jax.nn.softplus,
+    "softsign": _softsign,
+    "elu": jax.nn.elu,
+    "selu": _selu_paper,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=False),
+    "swish": jax.nn.silu,
+    "silu": jax.nn.silu,
+    "relu": jax.nn.relu,
+    "identity": lambda x: x,
+}
+
+
+def exact(name: str) -> Callable:
+    try:
+        return _EXACT[name]
+    except KeyError:
+        raise KeyError(f"unknown activation {name!r}; known: {sorted(_EXACT)}")

@@ -1,0 +1,23 @@
+"""Modality frontend STUBS (per the assignment: backbone only).
+
+``input_specs()`` provides precomputed frame/patch embeddings for the
+dry-run; these host-side generators provide deterministic stand-ins for
+smoke tests and examples.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def vision_patch_stub(key, batch: int, n_patches: int, d_model: int,
+                      dtype=jnp.float32):
+    """Pixtral-ViT stand-in: unit-variance patch embeddings."""
+    return jax.random.normal(key, (batch, n_patches, d_model), dtype)
+
+
+def audio_frame_stub(key, batch: int, n_frames: int, d_model: int,
+                     dtype=jnp.float32):
+    """Whisper conv-frontend stand-in: unit-variance frame embeddings."""
+    return jax.random.normal(key, (batch, n_frames, d_model), dtype)

@@ -1,0 +1,148 @@
+"""Primitive layers: init helpers, Dense, Embedding, norms, RoPE.
+
+Conventions (the whole substrate follows these):
+
+* params are nested dicts of jnp arrays (pytrees) — no framework objects;
+* every layer is an ``init(key, ...) -> params`` + ``apply(params, x, ...)``
+  pair of pure functions;
+* compute dtype is the model's (bf16 by default), params are stored f32 and
+  cast at use ("master weights" convention); norms accumulate in f32.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def trunc_normal(key, shape, scale: float, dtype=jnp.float32):
+    """Truncated-normal fan-in init (the MaxText/T5 convention)."""
+    stddev = scale / np.sqrt(max(shape[0], 1))
+    return stddev * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense
+# ---------------------------------------------------------------------------
+
+def dense_init(key, n_in: int, n_out: int, *, bias: bool = False,
+               scale: float = 1.0, dtype=jnp.float32):
+    p = {"w": trunc_normal(key, (n_in, n_out), scale, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((n_out,), dtype)
+    return p
+
+
+def dense_apply(p, x, *, compute_dtype=None):
+    """Matmul in x's dtype by default (params are f32 master weights)."""
+    w = p["w"]
+    dt = compute_dtype or x.dtype
+    y = x.astype(dt) @ w.astype(dt)
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+# ---------------------------------------------------------------------------
+
+def embedding_init(key, vocab: int, d_model: int, dtype=jnp.float32):
+    return {"table": trunc_normal(key, (vocab, d_model), 1.0, dtype)}
+
+
+def embedding_apply(p, tokens, *, compute_dtype=jnp.bfloat16):
+    return jnp.take(p["table"], tokens, axis=0).astype(compute_dtype)
+
+
+def embedding_attend(p, x):
+    """Tied readout: logits = x @ table.T (f32 accumulation)."""
+    return jnp.einsum(
+        "...d,vd->...v", x, p["table"],
+        preferred_element_type=jnp.float32,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Norms (f32 accumulation regardless of compute dtype)
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm_apply(p, x, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"]).astype(dt)
+
+
+def layernorm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm_apply(p, x, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies, shape (head_dim // 2,)."""
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)
+
+
+def apply_rope(x, positions, theta: float):
+    """Rotate pairs (x[..., ::2], x[..., 1::2]).
+
+    x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq).
+    """
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)                  # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (.., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                        # (.., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1 = x[..., 0::2].astype(jnp.float32)
+    x2 = x[..., 1::2].astype(jnp.float32)
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    out = jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Causal / local masks
+# ---------------------------------------------------------------------------
+
+def causal_mask(q_len: int, kv_len: int, *, q_offset=0,
+                window: int = 0) -> jnp.ndarray:
+    """Boolean (q_len, kv_len) mask; True = attend.
+
+    ``q_offset`` shifts query positions (decode with a cache).  ``window`` > 0
+    restricts to a local band of that width (recurrentgemma local attention).
+    """
+    q_pos = jnp.arange(q_len)[:, None] + q_offset
+    k_pos = jnp.arange(kv_len)[None, :]
+    mask = k_pos <= q_pos
+    if window > 0:
+        mask = mask & (k_pos > q_pos - window)
+    return mask
+
+
+def segment_mask(q_seg, kv_seg) -> jnp.ndarray:
+    """Block cross-segment attention (packed sequences)."""
+    return q_seg[..., :, None] == kv_seg[..., None, :]

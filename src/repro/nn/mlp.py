@@ -1,0 +1,62 @@
+"""MLPs with the NL-ADC epilogue on the gate nonlinearity.
+
+Three variants, chosen per family (DESIGN.md §Arch-applicability):
+
+* ``swiglu`` — silu-gated (llama/qwen/moe experts): the silu output is the
+  paper's non-monotonic swish NL-ADC.
+* ``geglu``  — gelu-gated (recurrentgemma): gelu NL-ADC (extremum split).
+* ``plain``  — two-matrix act MLP (whisper, granite-34b/gptbigcode): the
+  activation after the up-projection is NL-ADC'd.
+
+This is the paper's insight mapped to TPU: the activation quantizer fuses
+into the matmul epilogue (kernels/fused_matmul_nladc.py on the kernel path).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.analog_layer import AnalogActivation, AnalogConfig
+from repro.nn import layers as L
+
+
+def mlp_type_for(cfg) -> str:
+    if cfg.family == "encdec" or (cfg.family == "dense"
+                                  and cfg.hidden_act == "gelu"):
+        return "plain"
+    if cfg.family == "hybrid":
+        return "geglu"
+    return "swiglu"
+
+
+def make_activation(cfg) -> AnalogActivation:
+    """The model's NL-ADC'd hidden activation (shared across layers)."""
+    a = cfg.analog
+    name = a.activation or cfg.hidden_act
+    acfg = AnalogConfig(enabled=a.enabled, adc_bits=a.adc_bits,
+                        input_bits=a.input_bits, mode=a.mode)
+    return AnalogActivation(name, acfg)
+
+
+def mlp_init(key, d_model: int, d_ff: int, kind: str, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {
+            "wi_gate": L.dense_init(ks[0], d_model, d_ff, dtype=dtype),
+            "wi_up": L.dense_init(ks[1], d_model, d_ff, dtype=dtype),
+            "wo": L.dense_init(ks[2], d_ff, d_model, dtype=dtype),
+        }
+    return {
+        "wi": L.dense_init(ks[0], d_model, d_ff, dtype=dtype),
+        "wo": L.dense_init(ks[2], d_ff, d_model, dtype=dtype),
+    }
+
+
+def mlp_apply(p, x, kind: str, act: AnalogActivation, *, key=None):
+    if kind in ("swiglu", "geglu"):
+        gate = act(L.dense_apply(p["wi_gate"], x), key=key)
+        up = L.dense_apply(p["wi_up"], x)
+        return L.dense_apply(p["wo"], gate * up)
+    h = act(L.dense_apply(p["wi"], x), key=key)
+    return L.dense_apply(p["wo"], h)

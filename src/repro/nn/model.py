@@ -1,0 +1,19 @@
+"""Model factory: one entry point for every assigned architecture."""
+
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+
+
+def build(cfg: ModelConfig):
+    """Return the model object (LM / EncDecLM) for a config."""
+    if cfg.family == "encdec":
+        from repro.nn.encdec import EncDecLM
+
+        return EncDecLM(cfg)
+    if cfg.family == "lstm":
+        raise ValueError(
+            "LSTM workloads use repro.nn.lstm directly (see examples/)")
+    from repro.nn.transformer import LM
+
+    return LM(cfg)

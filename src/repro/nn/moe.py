@@ -1,0 +1,168 @@
+"""Mixture-of-Experts: token-choice top-k routing with capacity + shared experts.
+
+Deepseek-MoE / Moonlight style fine-grained MoE: 64 routed experts (top-6)
+plus always-on shared experts.  Dispatch uses the sort-based capacity
+formulation (no (N, E, C) one-hot tensors):
+
+  1. top-k per token -> (token, expert, gate) slot triples;
+  2. stable-sort slots by expert; position-within-expert via exclusive
+     cumsum of expert counts; slots beyond capacity C are dropped;
+  3. tokens gathered into an (E, C, d) buffer (explicitly sharded
+     ``experts -> model`` = expert parallelism), per-expert SwiGLU einsum,
+     weighted scatter-add back.
+
+Routing softmax stays full precision (not an elementwise bijection — see
+DESIGN §Arch-applicability); the expert gate activation is NL-ADC'd.
+A sigmoid router (``router_score='sigmoid'``, moonlight-style) *is*
+elementwise and gets the NL-ADC treatment.
+
+The pjit/GSPMD version here is the paper-faithful baseline; the shard_map
+all-to-all expert-parallel variant lives in repro.dist.ep and is a §Perf
+iteration.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.analog_layer import AnalogActivation
+from repro.nn import layers as L
+
+
+def _maybe_shard(x, spec: P):
+    """Apply a sharding constraint only when a mesh with the axes exists.
+
+    Keeps the layer usable in single-device smoke tests while pinning the
+    expert-parallel layout under the production mesh.
+    """
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh.empty:
+        return x
+    names = set(mesh.axis_names)
+    if any(ax not in names for ax in jax.tree.leaves(tuple(spec)) or []):
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def moe_init(key, d_model: int, d_ff: int, n_experts: int,
+             n_shared: int, kind: str = "swiglu", dtype=jnp.float32):
+    kr, ke, ks = jax.random.split(key, 3)
+    scale = 1.0 / math.sqrt(d_model)
+    p = {
+        "router": L.trunc_normal(kr, (d_model, n_experts), 1.0, dtype),
+        # Routed experts: stacked (E, d, ff) / (E, ff, d).
+        "w_gate": scale * jax.random.normal(ke, (n_experts, d_model, d_ff), dtype),
+        "w_up": scale * jax.random.normal(
+            jax.random.fold_in(ke, 1), (n_experts, d_model, d_ff), dtype),
+        "w_down": scale * jax.random.normal(
+            jax.random.fold_in(ke, 2), (n_experts, d_ff, d_model), dtype) \
+            / math.sqrt(d_ff / d_model),
+    }
+    if n_shared > 0:
+        from repro.nn.mlp import mlp_init
+        p["shared"] = mlp_init(ks, d_model, n_shared * d_ff, kind, dtype)
+    return p
+
+
+def _router_gates(logits, top_k: int, score: str,
+                  router_act: Optional[AnalogActivation]):
+    """Top-k gates. softmax: probs then top-k; sigmoid: NL-ADC'd scores,
+    top-k, then normalized (deepseek-v3/moonlight convention)."""
+    if score == "sigmoid":
+        probs = (router_act(logits) if router_act is not None
+                 else jax.nn.sigmoid(logits))
+        gates, idx = jax.lax.top_k(probs, top_k)
+        gates = gates / jnp.maximum(
+            jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+    else:
+        probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+        gates, idx = jax.lax.top_k(probs, top_k)
+    return gates.astype(logits.dtype), idx, (
+        probs if score != "sigmoid" else
+        jax.nn.softmax(logits.astype(jnp.float32), axis=-1))
+
+
+def aux_load_balance_loss(probs_f32, idx, n_experts: int):
+    """Switch-style load-balance auxiliary loss (mean prob x mean load)."""
+    n = probs_f32.shape[0]
+    load = jnp.zeros((n_experts,), jnp.float32).at[idx.reshape(-1)].add(1.0)
+    load = load / jnp.maximum(jnp.sum(load), 1.0)
+    imp = jnp.mean(probs_f32, axis=0)
+    return n_experts * jnp.sum(imp * load)
+
+
+def moe_apply(p, x, *, top_k: int, capacity_factor: float,
+              act: AnalogActivation, router_score: str = "softmax",
+              router_act: Optional[AnalogActivation] = None,
+              key=None, ep_axis: Optional[str] = "model",
+              return_aux: bool = False):
+    """x: (..., d) -> (..., d).  Flattens leading dims for routing."""
+    orig_shape = x.shape
+    d = x.shape[-1]
+    xf = x.reshape(-1, d)
+    n = xf.shape[0]
+    n_experts = p["router"].shape[-1]
+
+    logits = xf @ p["router"].astype(xf.dtype)
+    gates, idx, probs_f32 = _router_gates(logits, top_k, router_score,
+                                          router_act)
+
+    # --- slot assignment (sort by expert, capacity-crop) ---
+    capacity = int(math.ceil(n * top_k / n_experts * capacity_factor))
+    capacity = max(capacity, top_k)
+    slot_expert = idx.reshape(-1)                       # (N*k,)
+    slot_token = jnp.repeat(jnp.arange(n), top_k)       # (N*k,)
+    slot_gate = gates.reshape(-1)
+    order = jnp.argsort(slot_expert, stable=True)
+    se = slot_expert[order]
+    st = slot_token[order]
+    sg = slot_gate[order]
+    counts = jnp.zeros((n_experts,), jnp.int32).at[se].add(1)
+    offsets = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
+    pos_in_e = jnp.arange(se.shape[0], dtype=jnp.int32) - offsets[se]
+    valid = pos_in_e < capacity
+    dump = n_experts * capacity                          # overflow slot
+    dest = jnp.where(valid, se * capacity + jnp.minimum(pos_in_e,
+                                                        capacity - 1), dump)
+
+    # --- dispatch: gather tokens into the (E, C, d) expert buffer ---
+    token_for_slot = jnp.full((n_experts * capacity + 1,), 0, jnp.int32)
+    token_for_slot = token_for_slot.at[dest].set(st)
+    slot_used = jnp.zeros((n_experts * capacity + 1,), xf.dtype)
+    slot_used = slot_used.at[dest].set(jnp.where(valid, 1.0, 0.0).astype(xf.dtype))
+    x_buf = xf[token_for_slot[:-1]] * slot_used[:-1, None]
+    x_buf = x_buf.reshape(n_experts, capacity, d)
+    if ep_axis is not None:
+        x_buf = _maybe_shard(x_buf, P(ep_axis, None, None))
+
+    # --- expert FFN (EP einsum over the sharded expert axis) ---
+    gate_h = act(jnp.einsum("ecd,edf->ecf", x_buf,
+                            p["w_gate"].astype(x_buf.dtype)), key=key)
+    up_h = jnp.einsum("ecd,edf->ecf", x_buf, p["w_up"].astype(x_buf.dtype))
+    h = jnp.einsum("ecf,efd->ecd", gate_h * up_h,
+                   p["w_down"].astype(x_buf.dtype))
+    if ep_axis is not None:
+        h = _maybe_shard(h, P(ep_axis, None, None))
+
+    # --- combine: weighted scatter-add back to tokens ---
+    h_flat = h.reshape(n_experts * capacity, d)
+    contrib = h_flat[jnp.minimum(dest, n_experts * capacity - 1)] \
+        * (sg * valid.astype(sg.dtype))[:, None]
+    out = jnp.zeros_like(xf).at[st].add(contrib)
+
+    # --- shared experts (always-on) ---
+    if "shared" in p:
+        from repro.nn.mlp import mlp_apply
+        out = out + mlp_apply(p["shared"], xf, "swiglu", act, key=key)
+
+    out = out.reshape(orig_shape)
+    if return_aux:
+        aux = aux_load_balance_loss(probs_f32, idx, n_experts)
+        return out, aux
+    return out

@@ -1,0 +1,173 @@
+"""RG-LRU recurrent block (recurrentgemma / Griffin, arXiv:2402.19427).
+
+Block:  u = W_x x ; conv1d(width 4) ; gated linear recurrence
+        r_t = sigmoid(W_a u_t)          (recurrence gate)   <- NL-ADC
+        i_t = sigmoid(W_i u_t)          (input gate)        <- NL-ADC
+        a_t = exp(c * softplus(Lambda) * (-r_t))            (per-channel decay)
+        h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+        y   = W_o (gelu(W_g x) * h)
+
+The two sigmoid gates are the paper's closest analogue of the LSTM gating it
+NL-ADC's, so both run through the analog ramp quantizer.  The linear
+recurrence is evaluated with ``jax.lax.associative_scan`` (log-depth on TPU)
+for full sequences and as an O(1) state update for decode.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.analog_layer import AnalogActivation, AnalogConfig
+from repro.nn import layers as L
+
+_C = 8.0  # Griffin's fixed gate sharpness
+
+
+def make_gate_act(analog_spec) -> AnalogActivation:
+    acfg = AnalogConfig(enabled=analog_spec.enabled,
+                        adc_bits=analog_spec.adc_bits,
+                        input_bits=analog_spec.input_bits,
+                        mode=analog_spec.mode)
+    return AnalogActivation("sigmoid", acfg)
+
+
+def rglru_init(key, d_model: int, width: int, conv_width: int = 4,
+               gate_blocks: int = 0, dtype=jnp.float32):
+    """``gate_blocks > 0``: Griffin's block-diagonal gates (one block per
+    head) — a (nb, w/nb, w/nb) stack; model-axis sharding on nb makes the
+    gate matmuls fully local (no activation gather)."""
+    ks = jax.random.split(key, 6)
+    if gate_blocks > 0:
+        bw = width // gate_blocks
+        scale = 1.0 / (bw ** 0.5)
+        wa = scale * jax.random.normal(ks[2], (gate_blocks, bw, bw), dtype)
+        wi = scale * jax.random.normal(ks[3], (gate_blocks, bw, bw), dtype)
+    else:
+        wa = L.dense_init(ks[2], width, width, dtype=dtype)
+        wi = L.dense_init(ks[3], width, width, dtype=dtype)
+    p = {
+        "wx": L.dense_init(ks[0], d_model, width, dtype=dtype),
+        "wg": L.dense_init(ks[1], d_model, width, dtype=dtype),
+        "wa": wa,
+        "wi": wi,
+        "wo": L.dense_init(ks[4], width, d_model, dtype=dtype),
+        "conv": 0.1 * jax.random.normal(ks[5], (conv_width, width), dtype),
+        # Lambda init so a^c in (~0.9, ~0.999): softplus^-1 of desired range.
+        "lam": jnp.linspace(0.3, 1.5, width).astype(dtype),
+    }
+    return p
+
+
+def _gate_matmul(w, u):
+    """Dense (dict) or block-diagonal (stacked array) gate projection."""
+    if isinstance(w, dict):
+        return L.dense_apply(w, u)
+    nb, bw, _ = w.shape
+    lead = u.shape[:-1]
+    ub = u.reshape(lead + (nb, bw))
+    out = jnp.einsum("...nw,nwv->...nv", ub, w.astype(u.dtype))
+    return out.reshape(lead + (nb * bw,))
+
+
+def _log_decay(p, r):
+    """log a_t = -c * softplus(lam) * r_t  (elementwise, (B,S,W))."""
+    lam = jax.nn.softplus(p["lam"].astype(jnp.float32))
+    return -_C * lam * r.astype(jnp.float32)
+
+
+def _causal_conv(u, w):
+    """Depthwise causal conv along time. u: (B,S,W), w: (K,W)."""
+    k = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u, dtype=jnp.float32)
+    for i in range(k):
+        out = out + pad[:, i:i + u.shape[1], :].astype(jnp.float32) \
+            * w[k - 1 - i].astype(jnp.float32)
+    return out.astype(u.dtype)
+
+
+def _linear_recurrence(a, b, *, chunk: int = 0):
+    """h_t = a_t h_{t-1} + b_t over axis 1 (associative scan).
+
+    ``chunk > 0`` blocks the sequence (§Perf C3): intra-chunk scans touch
+    (B, n_chunks, Q, W) once with log2(Q) sweeps instead of log2(S), and a
+    tiny cross-chunk scan carries the state — fewer full-width sweeps ->
+    fewer materialized intermediates.
+    """
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a2 * a1, a2 * b1 + b2
+
+    s = a.shape[1]
+    if chunk <= 0 or s <= chunk or s % chunk:
+        _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+        return h
+    bsz, _, w = a.shape
+    nc = s // chunk
+    ac = a.reshape(bsz, nc, chunk, w)
+    bc = b.reshape(bsz, nc, chunk, w)
+    pa, ph = jax.lax.associative_scan(combine, (ac, bc), axis=2)
+    # carry across chunks: state after chunk i obeys the same recurrence
+    # with coefficients (prod a in chunk, last intra state)
+    _, carry = jax.lax.associative_scan(
+        combine, (pa[:, :, -1], ph[:, :, -1]), axis=1)
+    carry_in = jnp.concatenate(
+        [jnp.zeros_like(carry[:, :1]), carry[:, :-1]], axis=1)
+    h = ph + pa * carry_in[:, :, None, :]
+    return h.reshape(bsz, s, w)
+
+
+def rglru_apply(p, x, gate_act: AnalogActivation, hidden_act, *, key=None,
+                scan_dtype=jnp.float32, chunk: int = 0):
+    """Full-sequence forward.  x: (B, S, d) -> (B, S, d)."""
+    u = L.dense_apply(p["wx"], x)
+    u = _causal_conv(u, p["conv"])
+    r = gate_act(_gate_matmul(p["wa"], u), key=key)
+    i = gate_act(_gate_matmul(p["wi"], u), key=key)
+    log_a = _log_decay(p, r)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9)) \
+        * (i.astype(jnp.float32) * u.astype(jnp.float32))
+
+    # h_t = a_t h_{t-1} + b_t.  §Perf C2: decays are in (0,1] and the sum
+    # is a contraction, so the scan is stable in bf16 (validated vs f32).
+    a = a.astype(scan_dtype)
+    b = b.astype(scan_dtype)
+    h = _linear_recurrence(a, b, chunk=chunk).astype(jnp.float32)
+    g = hidden_act(L.dense_apply(p["wg"], x), key=key)
+    y = L.dense_apply(p["wo"], (g.astype(jnp.float32) * h).astype(x.dtype))
+    return y
+
+
+def rglru_init_state(batch: int, width: int, conv_width: int = 4,
+                     dtype=jnp.float32):
+    return {
+        "h": jnp.zeros((batch, width), jnp.float32),
+        "conv": jnp.zeros((batch, conv_width - 1, width), dtype),
+    }
+
+
+def rglru_decode(p, x, state, gate_act: AnalogActivation, hidden_act,
+                 *, key=None):
+    """One-token step. x: (B, 1, d) -> (y, new_state)."""
+    u = L.dense_apply(p["wx"], x)[:, 0]                      # (B, W)
+    hist = jnp.concatenate([state["conv"], u[:, None]], axis=1)  # (B, K, W)
+    w = p["conv"]
+    # hist[:, j] holds u_{t-K+1+j}; _causal_conv weights it by w[K-1-j].
+    uc = jnp.sum(hist.astype(jnp.float32)
+                 * w[::-1][None, :, :].astype(jnp.float32),
+                 axis=1).astype(u.dtype)
+    r = gate_act(_gate_matmul(p["wa"], uc), key=key)
+    i = gate_act(_gate_matmul(p["wi"], uc), key=key)
+    lam = jax.nn.softplus(p["lam"].astype(jnp.float32))
+    a = jnp.exp(-_C * lam * r.astype(jnp.float32))
+    h = a * state["h"] + jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-9)) \
+        * (i.astype(jnp.float32) * uc.astype(jnp.float32))
+    g = hidden_act(L.dense_apply(p["wg"], x[:, 0]), key=key)
+    y = L.dense_apply(p["wo"], (g.astype(jnp.float32) * h).astype(x.dtype))
+    new_state = {"h": h, "conv": hist[:, 1:]}
+    return y[:, None, :], new_state

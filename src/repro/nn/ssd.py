@@ -1,0 +1,225 @@
+"""Mamba-2 SSD block (state-space duality, arXiv:2405.21060).
+
+Selective state space with scalar-per-head decay:
+
+    a_t = exp(-dt_t * softplus-ish A)            dt_t = softplus(dt_raw)
+    S_t = a_t S_{t-1} + dt_t * x_t B_t^T         S: (H, P, N) state
+    y_t = C_t S_t + D * x_t
+
+computed with the **chunked SSD algorithm**: the sequence is cut into chunks
+of length ``Q``; within a chunk the quadratic (attention-like) form is used,
+across chunks a (short) scan carries the state — O(S*Q) instead of O(S^2).
+
+NL-ADC insertion points (DESIGN §Arch-applicability): ``dt = softplus(.)``
+is the paper's softplus ramp; the ``z`` gate silu is the swish NL-ADC.
+Decode is the O(1) recurrent update on a carried (H, P, N) state.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.analog_layer import AnalogActivation, AnalogConfig
+from repro.nn import layers as L
+
+
+def make_dt_act(analog_spec) -> AnalogActivation:
+    acfg = AnalogConfig(enabled=analog_spec.enabled,
+                        adc_bits=analog_spec.adc_bits,
+                        input_bits=analog_spec.input_bits,
+                        mode=analog_spec.mode)
+    return AnalogActivation("softplus", acfg)
+
+
+def ssd_init(key, d_model: int, *, expand: int = 2, headdim: int = 64,
+             d_state: int = 128, conv_width: int = 4, dtype=jnp.float32):
+    d_inner = expand * d_model
+    n_heads = d_inner // headdim
+    ks = jax.random.split(key, 5)
+    # in_proj packs [z (d_inner), x (d_inner), B (N), C (N), dt (H)].
+    d_in_proj = 2 * d_inner + 2 * d_state + n_heads
+    p = {
+        "in_proj": L.dense_init(ks[0], d_model, d_in_proj, dtype=dtype),
+        "conv": 0.1 * jax.random.normal(
+            ks[1], (conv_width, d_inner + 2 * d_state), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(dtype),
+        "dt_bias": jnp.zeros((n_heads,), dtype),
+        "d_skip": jnp.ones((n_heads,), dtype),
+        "out_proj": L.dense_init(ks[3], d_inner, d_model, dtype=dtype),
+        "norm": L.rmsnorm_init(d_inner),
+    }
+    return p
+
+
+def _split_proj(zxbcdt, d_inner, d_state, n_heads):
+    z = zxbcdt[..., :d_inner]
+    x = zxbcdt[..., d_inner:2 * d_inner]
+    b = zxbcdt[..., 2 * d_inner:2 * d_inner + d_state]
+    c = zxbcdt[..., 2 * d_inner + d_state:2 * d_inner + 2 * d_state]
+    dt = zxbcdt[..., 2 * d_inner + 2 * d_state:]
+    return z, x, b, c, dt
+
+
+def _causal_conv(u, w):
+    """Depthwise causal conv along time. u: (B,S,C), w: (K,C)."""
+    k = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros(u.shape, jnp.float32)
+    for i in range(k):
+        out = out + pad[:, i:i + u.shape[1], :].astype(jnp.float32) \
+            * w[k - 1 - i].astype(jnp.float32)
+    return out.astype(u.dtype)
+
+
+def ssd_chunked(x, dt, a_log, b, c, *, chunk: int):
+    """Chunked SSD scan.
+
+    x:  (B, S, H, P)   values
+    dt: (B, S, H)      positive step sizes
+    a_log: (H,)        log decay rates (A = exp(a_log))
+    b, c: (B, S, N)    input/output projections (single group)
+    Returns y: (B, S, H, P) and final state (B, H, P, N).
+    """
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    q = chunk
+    nc = s // q
+    assert nc * q == s, f"seq {s} not divisible by chunk {q}"
+
+    a = jnp.exp(a_log.astype(jnp.float32))                  # (H,)
+    # Per-step log decay: log a_t = -dt_t * A   (B, S, H)
+    log_a = -dt.astype(jnp.float32) * a[None, None, :]
+    xw = x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]
+
+    # chunked views
+    log_a_c = log_a.reshape(bsz, nc, q, h)
+    cum = jnp.cumsum(log_a_c, axis=2)                       # within-chunk cumsum
+    xc = xw.reshape(bsz, nc, q, h, p)
+    bc = b.astype(jnp.float32).reshape(bsz, nc, q, n)
+    cc = c.astype(jnp.float32).reshape(bsz, nc, q, n)
+
+    # --- intra-chunk (quadratic) term ---
+    # decay from step j to step i (i >= j): exp(cum_i - cum_j)
+    li = cum[:, :, :, None, :]                              # (B,NC,Q,1,H)
+    lj = cum[:, :, None, :, :]                              # (B,NC,1,Q,H)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    # mask BEFORE exp so out-of-band pairs are exp(-inf)=0, never inf.
+    decay = jnp.exp(jnp.where(mask[None, None, :, :, None],
+                              li - lj, -jnp.inf))           # (B,NC,Q,Q,H)
+    scores = jnp.einsum("zcin,zcjn->zcij", cc, bc)          # (B,NC,Q,Q)
+    y_intra = jnp.einsum("zcij,zcijh,zcjhp->zcihp",
+                         scores, decay, xc)
+
+    # --- chunk states: state contributed by each chunk at its end ---
+    tail = cum[:, :, -1:, :] - cum                          # decay j..end
+    states = jnp.einsum("zcjh,zcjn,zcjhp->zchpn",
+                        jnp.exp(tail), bc, xc)              # (B,NC,H,P,N)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                 # (B,NC,H)
+
+    # --- inter-chunk scan (carry state across chunks) ---
+    def combine(s1, s2):
+        d1, st1 = s1
+        d2, st2 = s2
+        return d1 * d2, st1 * d2[..., None, None] + st2
+
+    dec_scan, st_scan = jax.lax.associative_scan(
+        combine, (chunk_decay, states), axis=1)
+    # state entering chunk i = scanned state of chunk i-1 (zero for chunk 0)
+    st_in = jnp.concatenate(
+        [jnp.zeros_like(st_scan[:, :1]), st_scan[:, :-1]], axis=1)
+
+    # --- inter-chunk output: y_i += C_i exp(cum_i) . state_in ---
+    y_inter = jnp.einsum("zcin,zcih,zchpn->zcihp",
+                         cc, jnp.exp(cum), st_in)
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    final_state = st_scan[:, -1]                            # (B,H,P,N)
+    return y, final_state
+
+
+def ssd_apply(p, x, *, expand, headdim, d_state, chunk,
+              dt_act: AnalogActivation, gate_act, key=None,
+              return_state: bool = False):
+    """Full-sequence SSD block. x: (B, S, d) -> (B, S, d)."""
+    bsz, s, d = x.shape
+    d_inner = expand * d
+    n_heads = d_inner // headdim
+    zxbcdt = L.dense_apply(p["in_proj"], x)
+    z, xin, b, c, dt_raw = _split_proj(zxbcdt, d_inner, d_state, n_heads)
+    xbc = jnp.concatenate([xin, b, c], axis=-1)
+    xbc = _causal_conv(xbc, p["conv"])
+    xbc = jax.nn.silu(xbc)
+    xin, b, c = (xbc[..., :d_inner],
+                 xbc[..., d_inner:d_inner + d_state],
+                 xbc[..., d_inner + d_state:])
+    dt = dt_act(dt_raw + p["dt_bias"].astype(dt_raw.dtype), key=key)
+    xh = xin.reshape(bsz, s, n_heads, headdim)
+    # Pad to a chunk multiple with dt=0 steps: decay exp(0)=1 and xw=0, so
+    # padded steps are exact no-ops for both outputs and the final state.
+    pad = (-s) % chunk
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    y, state = ssd_chunked(xh, dt, p["a_log"], b, c, chunk=chunk)
+    if pad:
+        y = y[:, :s]
+        xh = xh[:, :s]
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] \
+        * xh.astype(jnp.float32)
+    y = y.reshape(bsz, s, d_inner).astype(x.dtype)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    y = L.rmsnorm_apply(p["norm"], y * gate_act(z, key=key))
+    out = L.dense_apply(p["out_proj"], y)
+    if return_state:
+        return out, state
+    return out
+
+
+def ssd_init_state(batch, d_model, *, expand, headdim, d_state,
+                   conv_width=4, dtype=jnp.float32):
+    d_inner = expand * d_model
+    n_heads = d_inner // headdim
+    return {
+        "ssm": jnp.zeros((batch, n_heads, headdim, d_state), jnp.float32),
+        "conv": jnp.zeros((batch, conv_width - 1, d_inner + 2 * d_state),
+                          dtype),
+    }
+
+
+def ssd_decode(p, x, state, *, expand, headdim, d_state,
+               dt_act: AnalogActivation, gate_act, key=None):
+    """One-token step. x: (B, 1, d) -> (y, new_state)."""
+    bsz, _, d = x.shape
+    d_inner = expand * d
+    n_heads = d_inner // headdim
+    zxbcdt = L.dense_apply(p["in_proj"], x[:, 0])
+    z, xin, b, c, dt_raw = _split_proj(zxbcdt, d_inner, d_state, n_heads)
+    xbc = jnp.concatenate([xin, b, c], axis=-1)              # (B, C)
+    hist = jnp.concatenate([state["conv"], xbc[:, None]], axis=1)
+    w = p["conv"]
+    xbc = jnp.sum(hist.astype(jnp.float32)
+                  * w[::-1][None, :, :].astype(jnp.float32),
+                  axis=1).astype(xbc.dtype)
+    xbc = jax.nn.silu(xbc)
+    xin, b, c = (xbc[..., :d_inner],
+                 xbc[..., d_inner:d_inner + d_state],
+                 xbc[..., d_inner + d_state:])
+    dt = dt_act(dt_raw + p["dt_bias"].astype(dt_raw.dtype), key=key)
+    a = jnp.exp(p["a_log"].astype(jnp.float32))
+    decay = jnp.exp(-dt.astype(jnp.float32) * a[None, :])    # (B, H)
+    xh = xin.reshape(bsz, n_heads, headdim).astype(jnp.float32)
+    dbx = dt.astype(jnp.float32)[..., None, None] \
+        * xh[..., None] * b.astype(jnp.float32)[:, None, None, :]
+    new_ssm = state["ssm"] * decay[..., None, None] + dbx     # (B,H,P,N)
+    y = jnp.einsum("bhpn,bn->bhp", new_ssm, c.astype(jnp.float32))
+    y = y + p["d_skip"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(bsz, d_inner).astype(x.dtype)
+    y = L.rmsnorm_apply(p["norm"], y * gate_act(z, key=key))
+    out = L.dense_apply(p["out_proj"], y)
+    new_state = {"ssm": new_ssm, "conv": hist[:, 1:]}
+    return out[:, None, :], new_state

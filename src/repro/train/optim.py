@@ -1,0 +1,112 @@
+"""Optimizers (Adam/AdamW from scratch) + LR schedules + grad utilities.
+
+No optax dependency: states are plain pytrees so they shard/checkpoint with
+the same logical rules as params (opt state mirrors the param tree).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    count: jnp.ndarray     # ()
+    mu: object             # pytree like params
+    nu: object             # pytree like params
+
+
+@dataclasses.dataclass(frozen=True)
+class Adam:
+    """Adam/AdamW. ``lr`` may be a float or a schedule fn(step) -> lr."""
+
+    lr: Callable | float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip_norm: float = 0.0
+
+    def init(self, params) -> OptState:
+        zeros = lambda p: jnp.zeros_like(p)
+        return OptState(
+            count=jnp.zeros((), jnp.int32),
+            mu=jax.tree.map(zeros, params),
+            nu=jax.tree.map(zeros, params),
+        )
+
+    def _lr(self, count):
+        if callable(self.lr):
+            return self.lr(count)
+        return self.lr
+
+    def update(self, grads, state: OptState, params):
+        count = state.count + 1
+        if self.grad_clip_norm > 0:
+            grads = clip_by_global_norm(grads, self.grad_clip_norm)
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g,
+                          state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g),
+                          state.nu, grads)
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+        lr = self._lr(count)
+
+        def upd(p, m, v):
+            step = (m / c1) / (jnp.sqrt(v / c2) + self.eps)
+            if self.weight_decay > 0:
+                step = step + self.weight_decay * p
+            return p - lr * step
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, OptState(count=count, mu=mu, nu=nu)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda x: x * scale.astype(x.dtype), tree)
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+def cosine_schedule(peak_lr: float, warmup_steps: int, total_steps: int,
+                    final_frac: float = 0.1):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps)
+                        / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup_steps, warm, peak_lr * cos)
+
+    return fn
+
+
+def wsd_schedule(peak_lr: float, warmup_steps: int, total_steps: int,
+                 decay_frac: float = 0.2):
+    """Warmup-stable-decay (the modern LM default)."""
+    decay_start = int(total_steps * (1 - decay_frac))
+
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        prog = jnp.clip((step - decay_start)
+                        / max(total_steps - decay_start, 1), 0.0, 1.0)
+        decay = peak_lr * (1.0 - prog * 0.9)
+        mid = jnp.where(step >= decay_start, decay, peak_lr)
+        return jnp.where(step < warmup_steps, warm, mid)
+
+    return fn

@@ -1,0 +1,89 @@
+"""Crossbar model: mapping, noise, drift, tiling, phased VMM (paper Methods)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import crossbar as CB
+
+
+def test_weight_conductance_roundtrip(rng):
+    w = rng.uniform(-2, 2, (64, 32))
+    gp, gn = CB.weights_to_conductance_pairs(w)
+    assert gp.max() <= 150.0 and gn.max() <= 150.0
+    assert np.all(gp * gn == 0)          # differential: one side active
+    back = CB.conductance_pairs_to_weights(gp, gn)
+    np.testing.assert_allclose(back, w, atol=1e-12)
+
+
+def test_weight_clipping():
+    w = jnp.asarray([-5.0, -2.0, 0.3, 2.0, 7.0])
+    np.testing.assert_allclose(CB.clip_weights(w),
+                               [-2.0, -2.0, 0.3, 2.0, 2.0])
+
+
+def test_noise_sigmas_in_weight_units():
+    np.testing.assert_allclose(CB.WRITE_SIGMA_W, 2.67 / 75.0)
+    np.testing.assert_allclose(CB.READ_SIGMA_W, 3.5 / 75.0)
+    np.testing.assert_allclose(CB.TRAIN_SIGMA_W, 5.0 / 75.0)
+
+
+def test_write_noise_statistics():
+    key = jax.random.PRNGKey(0)
+    w = jnp.zeros((200, 200))
+    noisy = CB.write_noise_weights(key, w)
+    sd = float(jnp.std(noisy))
+    np.testing.assert_allclose(sd, CB.WRITE_SIGMA_W, rtol=0.05)
+
+
+def test_stuck_at_off():
+    key = jax.random.PRNGKey(1)
+    w = jnp.ones((100, 100))
+    out = CB.stuck_at_off(key, w, 0.1)
+    frac = float(jnp.mean(out == 0.0))
+    assert 0.05 < frac < 0.15
+
+
+def test_drift_model_shape():
+    dm = CB.DriftModel()
+    g = np.array([10.0, 75.0, 140.0])
+    g_t = dm.drift(g, 5e5)
+    # low states drift up, high states sag (toward mid-range)
+    assert g_t[0] > g[0]
+    assert g_t[2] < g[2]
+    np.testing.assert_allclose(dm.drift(g, 0.0), g, atol=1e-9)
+
+
+def test_tile_plan_nlp():
+    """Paper: 633x8064 -> 16 crossbars of 633x512, 3 input phases."""
+    plan = CB.plan_tiles(633, 8064, tile_rows=633, tile_cols=512,
+                         max_active_rows=256)
+    assert plan.n_crossbars == 16
+    assert plan.n_phases == 3
+
+
+def test_tile_plan_kws():
+    plan = CB.plan_tiles(72, 128, tile_rows=128, tile_cols=128,
+                         max_active_rows=256)
+    assert plan.n_crossbars == 1
+    assert plan.n_phases == 1
+
+
+def test_phased_vmm_exact_equals_plain(rng):
+    x = jnp.asarray(rng.normal(0, 1, (4, 633)), jnp.float32)
+    w = jnp.asarray(rng.normal(0, 0.1, (633, 64)), jnp.float32)
+    plan = CB.plan_tiles(633, 64)
+    np.testing.assert_allclose(CB.phased_vmm(x, w, plan), x @ w,
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_noisy_vmm_quantizes_inputs(rng):
+    x = jnp.asarray(rng.normal(0, 0.4, (8, 16)), jnp.float32)
+    w = jnp.asarray(rng.normal(0, 0.2, (16, 8)), jnp.float32)
+    y5 = CB.noisy_vmm(x, w, input_bits=5)
+    y_inf = CB.noisy_vmm(x, w)
+    assert not np.allclose(y5, y_inf)
+    # 8-bit closer to unquantized than 3-bit
+    e3 = float(jnp.mean(jnp.abs(CB.noisy_vmm(x, w, input_bits=3) - y_inf)))
+    e8 = float(jnp.mean(jnp.abs(CB.noisy_vmm(x, w, input_bits=8) - y_inf)))
+    assert e8 < e3

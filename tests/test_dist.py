@@ -1,0 +1,157 @@
+"""Distribution layer: sharding rules, EP-vs-GSPMD equivalence, hierarchical
+collectives, elastic plans.  Multi-device cases run in subprocesses with
+their own XLA_FLAGS (the main process must keep 1 device)."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.dist import sharding as SH
+from repro.ft.elastic import plan_for_devices
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_subprocess(code: str, devices: int = 8) -> str:
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=420)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+class _FakeMesh:
+    axis_names = ("data", "model")
+    shape = {"data": 16, "model": 16}
+
+
+def test_param_specs_divisible():
+    """Every sharded dim in every arch divides the 16-way model axis."""
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.specs import param_shape_specs
+
+    for arch in configs.ARCH_NAMES[:10]:
+        cfg = configs.get(arch)
+        sds = param_shape_specs(cfg)
+        specs = SH.param_specs(sds, _FakeMesh(),
+                               replicate_all=(cfg.family == "ssm"))
+        spec_leaves = jax.tree.leaves(specs,
+                                      is_leaf=lambda s: isinstance(s, P))
+        sds_leaves = jax.tree.leaves(sds)
+        assert len(spec_leaves) == len(sds_leaves)
+        n_sharded = 0
+        for spec, leaf in zip(spec_leaves, sds_leaves):
+            for dim, ax in enumerate(tuple(spec)):
+                if ax is None:
+                    continue
+                n_sharded += 1
+                assert leaf.shape[dim] % 16 == 0, (arch, leaf.shape, spec)
+        if cfg.family != "ssm":
+            assert n_sharded > 0, arch
+
+
+def test_elastic_plan():
+    plan = plan_for_devices(192, global_batch=256, model_parallel=16)
+    assert plan.new_shape["model"] == 16
+    # 192/16 = 12 data replicas, shrunk to 8 so it divides batch 256
+    assert plan.new_shape["data"] == 8
+    assert 256 % plan.new_shape["data"] == 0
+
+
+def test_elastic_plan_odd_device_count():
+    plan = plan_for_devices(100, global_batch=64, model_parallel=16)
+    n = plan.new_shape["data"] * plan.new_shape["model"]
+    assert n <= 100
+    assert 64 % plan.new_shape["data"] == 0
+
+
+def test_moe_ep_matches_gspmd_subprocess():
+    """ep_shardmap == gspmd MoE on an 8-device (2 data x 4 model) mesh."""
+    out = _run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro import configs
+        from repro.configs.base import AnalogSpec
+        from repro.nn.model import build
+        mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
+        c0 = configs.get_smoke("deepseek-moe-16b")
+        cfg = c0.replace(dtype="float32", analog=AnalogSpec(enabled=False),
+                         capacity_factor=8.0)
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0,
+                                    cfg.vocab)
+        outs = {}
+        for impl in ("gspmd", "ep_shardmap"):
+            model = build(cfg.replace(moe_impl=impl))
+            params = model.init(jax.random.PRNGKey(0))
+            with jax.set_mesh(mesh):
+                sh = NamedSharding(mesh, P("data", None))
+                logits = jax.jit(model.forward)(params,
+                                                jax.device_put(tokens, sh))
+            outs[impl] = np.asarray(logits)
+        err = np.max(np.abs(outs["gspmd"] - outs["ep_shardmap"]))
+        rel = err / np.max(np.abs(outs["gspmd"]))
+        print("REL", rel)
+        assert rel < 2e-4, rel
+    """)
+    assert "REL" in out
+
+
+def test_hierarchical_allreduce_subprocess():
+    """pod-local RS -> cross-pod AR -> AG == plain psum over both axes."""
+    out = _run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.dist.collectives import hierarchical_grad_allreduce
+        mesh = Mesh(np.array(jax.devices()).reshape(2, 4),
+                    ("pod", "data"))
+        g = jnp.arange(24.0).reshape(4, 6)
+
+        def naive(x):
+            return jax.lax.psum(x, ("pod", "data"))
+
+        def hier(x):
+            return hierarchical_grad_allreduce(x, data_axis="data",
+                                               pod_axis="pod")
+
+        f1 = jax.jit(jax.shard_map(naive, mesh=mesh, in_specs=P(None, None),
+                                   out_specs=P(None, None)))
+        f2 = jax.jit(jax.shard_map(hier, mesh=mesh, in_specs=P(None, None),
+                                   out_specs=P(None, None),
+                                   check_vma=False))
+        np.testing.assert_allclose(np.asarray(f1(g)), np.asarray(f2(g)),
+                                   rtol=1e-6)
+        print("HIER OK")
+    """)
+    assert "HIER OK" in out
+
+
+def test_compressed_psum_subprocess():
+    out = _run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.dist.compress import compressed_psum
+        mesh = Mesh(np.array(jax.devices()).reshape(8,), ("data",))
+        x = jax.random.normal(jax.random.PRNGKey(0), (8, 4096))
+
+        def f(xs):
+            return compressed_psum(xs[0], "data")
+
+        got = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("data", None),
+                                    out_specs=P(None)))(x)
+        want = np.sum(np.asarray(x), axis=0)
+        rel = np.max(np.abs(np.asarray(got) - want)) / np.max(np.abs(want))
+        print("REL", rel)
+        assert rel < 0.02, rel   # shared-scale int8 wire
+    """, devices=8)
+    assert "REL" in out

@@ -1,0 +1,125 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype/activation sweeps."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.nladc import build_ramp, nladc_reference
+from repro.kernels import ops, ref
+
+SHAPES_2D = [(8, 8), (70, 130), (256, 512), (257, 513), (1, 640)]
+ACTS = ["sigmoid", "tanh", "softplus", "elu", "selu", "gelu", "swish"]
+
+
+@pytest.mark.parametrize("name", ACTS)
+@pytest.mark.parametrize("shape", SHAPES_2D[:3])
+def test_nladc_kernel_sweep(name, shape, rng):
+    ramp = build_ramp(name, 5)
+    x = jnp.asarray(rng.normal(0, 2, shape).astype(np.float32))
+    np.testing.assert_allclose(ops.nladc(x, ramp), ref.nladc(x, ramp),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("bits", [3, 4, 5, 8])
+def test_nladc_kernel_bits(bits, rng):
+    ramp = build_ramp("sigmoid", bits)
+    x = jnp.asarray(rng.normal(0, 2, (64, 257)).astype(np.float32))
+    np.testing.assert_allclose(ops.nladc(x, ramp), ref.nladc(x, ramp),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_nladc_kernel_matches_table_oracle(rng):
+    """Closed-form kernel decode == y_table-lookup core oracle."""
+    for name in ACTS:
+        ramp = build_ramp(name, 5)
+        x = rng.normal(0, 2, (33, 65)).astype(np.float32)
+        got = np.asarray(ops.nladc(jnp.asarray(x), ramp))
+        want = nladc_reference(x, ramp)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("mkn", [(16, 32, 8), (37, 100, 67), (256, 512, 256),
+                                 (129, 300, 140)])
+def test_fused_matmul_sweep(mkn, dtype, rng):
+    m, k, n = mkn
+    ramp = build_ramp("swish", 5)
+    x = jnp.asarray(rng.normal(0, 0.4, (m, k)).astype(np.float32), dtype)
+    w = jnp.asarray(rng.normal(0, 0.2, (k, n)).astype(np.float32), dtype)
+    got = ops.fused_matmul_nladc(x, w, ramp)
+    want = ref.fused_matmul_nladc(x, w, ramp)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=1e-2, atol=2e-2)
+
+
+def test_fused_matmul_batch_dims(rng):
+    ramp = build_ramp("sigmoid", 5)
+    x = jnp.asarray(rng.normal(0, 0.4, (2, 3, 40)).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 0.2, (40, 24)).astype(np.float32))
+    got = ops.fused_matmul_nladc(x, w, ramp)
+    want = ref.fused_matmul_nladc(x.reshape(-1, 40), w, ramp).reshape(2, 3, 24)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("bits_in", [3, 5, None])
+def test_analog_tile_sweep(bits_in, rng):
+    ramp = build_ramp("tanh", 5)
+    x = jnp.asarray(rng.normal(0, 0.5, (50, 72)).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 0.2, (72, 128)).astype(np.float32))
+    nz = jnp.asarray(rng.normal(0, 2.67 / 75, (72, 128)).astype(np.float32))
+    got = ops.analog_tile(x, w, ramp, input_bits=bits_in, w_noise=nz)
+    want = ref.analog_tile(x, w, ramp, input_bits=bits_in, w_noise=nz)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("bh", [(4, 32), (33, 50), (64, 2016)])
+def test_lstm_gates_sweep(bh, rng):
+    b, h = bh
+    sig, tnh = build_ramp("sigmoid", 5), build_ramp("tanh", 5)
+    g = jnp.asarray(rng.normal(0, 1.5, (b, 4 * h)).astype(np.float32))
+    c = jnp.asarray(rng.normal(0, 0.5, (b, h)).astype(np.float32))
+    h1, c1 = ops.lstm_gates(g, c, sig, tnh)
+    h2, c2 = ref.lstm_gates(g, c, sig, tnh)
+    np.testing.assert_allclose(h1, h2, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(c1, c2, rtol=1e-5, atol=1e-5)
+
+
+def test_lstm_gates_matches_analog_lstm_cell(rng):
+    """Kernel tail == nn.lstm cell (exact mode) given identical gates."""
+    import jax
+    from repro.core.analog_layer import AnalogConfig
+    from repro.nn import lstm as NN
+
+    spec = NN.LSTMSpec(n_in=8, n_hidden=16,
+                       analog=AnalogConfig(enabled=True, adc_bits=5,
+                                           input_bits=None, mode="exact"))
+    acts = NN.make_gate_acts(spec.analog)
+    p = NN.lstm_init(jax.random.PRNGKey(0), spec)
+    x = jnp.asarray(rng.normal(0, 1, (4, 8)).astype(np.float32))
+    hprev = jnp.zeros((4, 16), jnp.float32)
+    c = jnp.asarray(rng.normal(0, 0.5, (4, 16)).astype(np.float32))
+    h_nn, c_nn = NN.lstm_cell(p, x, hprev, c, spec, acts)
+    gates = jnp.concatenate([x, hprev], -1) @ p["w_gates"]
+    sig, tnh = build_ramp("sigmoid", 5), build_ramp("tanh", 5)
+    h_k, c_k = ops.lstm_gates(gates, c, sig, tnh)
+    np.testing.assert_allclose(h_nn, h_k, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(c_nn, c_k, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("cfg", [(2, 8, 2, 32, 100), (1, 16, 1, 128, 513),
+                                 (3, 4, 4, 64, 256)])
+def test_flash_decode_int8_sweep(cfg, rng):
+    """Flash-decode kernel (fused int8 dequant) vs the dequantize-all oracle."""
+    b, h, hkv, d, s_len = cfg
+    q = jnp.asarray(rng.normal(0, 1, (b, h, d)).astype(np.float32))
+    k8 = jnp.asarray(rng.integers(-127, 128, (b, s_len, hkv, d)), jnp.int8)
+    v8 = jnp.asarray(rng.integers(-127, 128, (b, s_len, hkv, d)), jnp.int8)
+    ks = jnp.asarray(rng.uniform(1e-3, 2e-2, (b, s_len, hkv))
+                     .astype(np.float32))
+    vs = jnp.asarray(rng.uniform(1e-3, 2e-2, (b, s_len, hkv))
+                     .astype(np.float32))
+    ln = jnp.asarray(rng.integers(1, s_len, (b,)), jnp.int32)
+    got = ops.flash_decode_int8(q, k8, ks, v8, vs, ln)
+    want = ref.flash_decode_int8(q, k8, ks, v8, vs, ln)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)

@@ -1,0 +1,95 @@
+"""The paper's analog LSTM: modes, noise behaviour, Alg. 1 gradient flow."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.analog_layer import AnalogConfig
+from repro.nn import lstm as NN
+
+
+def _spec(mode="exact", enabled=True, bits=5):
+    return NN.LSTMSpec(
+        n_in=10, n_hidden=12,
+        analog=AnalogConfig(enabled=enabled, adc_bits=bits, input_bits=5,
+                            mode=mode))
+
+
+def test_shapes_and_projection():
+    spec = NN.LSTMSpec(n_in=128, n_hidden=64, n_proj=24,
+                       analog=AnalogConfig(enabled=False))
+    p = NN.lstm_init(jax.random.PRNGKey(0), spec)
+    acts = NN.make_gate_acts(spec.analog)
+    xs = jnp.zeros((3, 7, 128))
+    ys, (h, c) = NN.lstm_scan(p, xs, spec, acts)
+    assert ys.shape == (3, 7, 24)
+    assert h.shape == (3, 24) and c.shape == (3, 64)
+
+
+def test_quantized_close_to_exact():
+    spec_q = _spec()
+    spec_f = NN.LSTMSpec(n_in=10, n_hidden=12,
+                         analog=AnalogConfig(enabled=False))
+    p = NN.lstm_init(jax.random.PRNGKey(1), spec_q)
+    acts_q = NN.make_gate_acts(spec_q.analog)
+    acts_f = NN.make_gate_acts(spec_f.analog)
+    xs = 0.5 * jax.random.normal(jax.random.PRNGKey(2), (4, 9, 10))
+    yq, _ = NN.lstm_scan(p, xs, spec_q, acts_q)
+    yf, _ = NN.lstm_scan(p, xs, spec_f, acts_f)
+    err = float(jnp.max(jnp.abs(yq - yf)))
+    assert err < 0.25          # a few output LSBs accumulated over 9 steps
+    assert err > 0             # quantization is actually happening
+
+
+def test_infer_mode_noise_varies_by_key():
+    spec = _spec(mode="infer")
+    p = NN.lstm_init(jax.random.PRNGKey(1), spec)
+    acts = NN.make_gate_acts(spec.analog)
+    xs = 0.5 * jax.random.normal(jax.random.PRNGKey(2), (2, 5, 10))
+    y1, _ = NN.lstm_scan(p, xs, spec, acts, key=jax.random.PRNGKey(10))
+    y2, _ = NN.lstm_scan(p, xs, spec, acts, key=jax.random.PRNGKey(11))
+    assert not np.allclose(y1, y2)
+
+
+def test_train_mode_gradients_flow_to_clean_weights():
+    """Alg. 1: noise in forward, gradient on the clean shadow weights."""
+    spec = _spec(mode="train")
+    p = NN.classifier_init(jax.random.PRNGKey(0), spec, n_classes=3)
+    acts = NN.make_gate_acts(spec.analog)
+    xs = 0.5 * jax.random.normal(jax.random.PRNGKey(2), (4, 6, 10))
+    labels = jnp.asarray([0, 1, 2, 0])
+
+    def loss_fn(params, key):
+        logits = NN.classifier_apply(params, xs, spec, acts, key=key)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], 1))
+
+    g = jax.grad(loss_fn)(p, jax.random.PRNGKey(3))
+    gn = float(jnp.sqrt(sum(jnp.sum(jnp.square(x))
+                            for x in jax.tree.leaves(g))))
+    assert np.isfinite(gn) and gn > 0
+
+
+def test_kws_crossbar_dimensions():
+    """The KWS model maps onto the paper's 72x128 crossbar: 9216 weights."""
+    from repro import configs
+
+    cfg = configs.get("kws_lstm")
+    n_in = cfg.n_input_features + cfg.lstm_hidden      # 40 + 32 = 72
+    n_out = 4 * cfg.lstm_hidden                        # 128
+    assert (n_in, n_out) == (72, 128)
+    assert n_in * n_out == 9216
+
+
+def test_ptb_crossbar_dimensions():
+    """PTB: 633x8064 logical crossbar (128+504+1 x 4*2016), 16 tiles."""
+    from repro import configs
+    from repro.core.crossbar import plan_tiles
+
+    cfg = configs.get("ptb_lstm")
+    n_in = cfg.n_input_features + cfg.lstm_proj + 1    # bias row
+    n_out = 4 * cfg.lstm_hidden
+    assert (n_in, n_out) == (633, 8064)
+    plan = plan_tiles(n_in, n_out, tile_rows=633, tile_cols=512,
+                      max_active_rows=256)
+    assert plan.n_crossbars == 16 and plan.n_phases == 3

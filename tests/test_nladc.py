@@ -1,0 +1,124 @@
+"""NL-ADC core: ramp construction vs paper Tab. S2, quantizer, STE, PWM."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import functions as F
+from repro.core.nladc import (NLADC, build_ramp, build_nonmonotonic_ramp,
+                              nladc_reference, pwm_quantize, transfer_mse)
+
+BITS = 5
+
+# Paper Supp. Tab. S2 (5-bit): sum |dV_k| and the first step per function.
+TAB_S2 = {
+    "sigmoid": dict(total=6.992, first=0.724, last=0.724),
+    "softplus": dict(total=4.813, first=0.728, last=0.077),
+    "tanh": dict(total=3.498, first=0.362, last=0.362),
+    "softsign": dict(total=8.0, first=1.0, last=1.0),
+    "elu": dict(total=7.849, first=1.386, last=0.188),
+    "selu": dict(total=7.849, first=1.386, last=0.188),
+}
+
+
+@pytest.mark.parametrize("name", sorted(TAB_S2))
+def test_ramp_matches_tab_s2(name):
+    ramp = build_ramp(name, BITS)
+    steps = np.abs(ramp.steps)
+    row = TAB_S2[name]
+    assert steps.shape == (32,)
+    np.testing.assert_allclose(steps.sum(), row["total"], rtol=2e-2)
+    np.testing.assert_allclose(steps[0], row["first"], rtol=3e-2)
+    np.testing.assert_allclose(steps[-1], row["last"], rtol=3e-2)
+
+
+@pytest.mark.parametrize("name", sorted(TAB_S2))
+def test_sram_cell_counts_direction(name):
+    """Fig. 2e: memristor needs 32 cells; SRAM needs round(dV/min dV) each."""
+    ramp = build_ramp(name, BITS)
+    steps = np.abs(ramp.steps)
+    sram_cells = np.round(steps / steps.min()).sum()
+    assert sram_cells >= 32  # memristor advantage = sram_cells / 32 >= 1
+    if name == "sigmoid":
+        np.testing.assert_allclose(sram_cells, 58, atol=3)  # Tab. S2 sum
+    if name == "softsign":
+        np.testing.assert_allclose(sram_cells, 150, atol=5)
+
+
+@pytest.mark.parametrize("name", ["sigmoid", "tanh", "softplus", "softsign",
+                                  "elu", "selu"])
+@pytest.mark.parametrize("bits", [3, 4, 5, 8])
+def test_quantizer_error_bounded(name, bits):
+    """|quantized - exact| <= 1 output LSB inside the ramp domain."""
+    ramp = build_ramp(name, bits)
+    spec = F.get(name)
+    xs = np.linspace(spec.x_lo + 1e-3, spec.x_hi - 1e-3, 2000)
+    yq = nladc_reference(xs, ramp)
+    y = spec.fwd(xs)
+    max_dy = np.max(np.abs(np.diff(ramp.y_table)))  # selu: per-branch lsb
+    assert np.max(np.abs(yq - y)) <= max_dy * (1 + 1e-6)
+
+
+def test_bits_ordering_mse():
+    """5-bit beats 4-bit beats 3-bit in transfer MSE (paper Fig. 4d trend)."""
+    mses = [transfer_mse(build_ramp("sigmoid", b)) for b in (3, 4, 5)]
+    assert mses[0] > mses[1] > mses[2]
+
+
+def test_sigmoid_5bit_mse_near_paper():
+    """Paper: ideal 5-bit SRAM sigmoid MSE ~= 0.0008."""
+    mse = transfer_mse(build_ramp("sigmoid", 5))
+    assert mse < 0.0012
+
+
+@pytest.mark.parametrize("name", ["gelu", "swish"])
+def test_nonmonotonic_split(name):
+    ramp = build_ramp(name, 5)
+    assert ramp.split_index > 0
+    assert np.all(np.diff(ramp.thresholds) > 0)  # ascending in x
+    spec = F.get(name)
+    xs = np.linspace(spec.x_lo + 1e-2, spec.x_hi - 1e-2, 1500)
+    yq = nladc_reference(xs, ramp)
+    err = np.abs(yq - spec.fwd(xs))
+    assert np.max(err) <= 2.1 * ramp.lsb
+
+
+def test_extra_negative_points_improves_left_branch():
+    spec = F.get("gelu")
+    base = build_nonmonotonic_ramp("gelu", 5)
+    fine = build_nonmonotonic_ramp("gelu", 5, extra_negative_points=4)
+    xs = np.linspace(spec.x_lo + 1e-2, float(spec.x_extremum), 400)
+    e_base = np.abs(nladc_reference(xs, base) - spec.fwd(xs)).mean()
+    e_fine = np.abs(nladc_reference(xs, fine) - spec.fwd(xs)).mean()
+    assert e_fine < e_base
+
+
+def test_ste_gradient():
+    adc = NLADC(build_ramp("sigmoid", 5))
+    x = jnp.linspace(-3.0, 3.0, 41)
+    g = jax.vmap(jax.grad(lambda v: adc(v)))(x)
+    s = jax.nn.sigmoid(x)
+    np.testing.assert_allclose(g, s * (1 - s), atol=1e-5)
+    # outside the domain the STE is gated to zero
+    g_out = jax.grad(lambda v: adc(v))(jnp.asarray(9.0))
+    assert g_out == 0.0
+
+
+def test_pwm_quantize_grid_and_ste():
+    x = jnp.linspace(-2, 2, 101)
+    y = pwm_quantize(x, 5, 1.0)
+    step = 2.0 / 30
+    assert float(jnp.max(jnp.abs(y / step - jnp.round(y / step)))) < 1e-5
+    g = jax.vmap(jax.grad(lambda v: pwm_quantize(v, 5, 1.0)))(x)
+    np.testing.assert_allclose(g, (jnp.abs(x) <= 1.0).astype(jnp.float32))
+
+
+def test_codes_are_thermometer_counts():
+    ramp = build_ramp("tanh", 5)
+    adc = NLADC(ramp)
+    x = jnp.asarray(np.random.default_rng(0).normal(0, 1, (257,)),
+                    jnp.float32)
+    n = adc.codes(x)
+    brute = jnp.sum(x[:, None] > jnp.asarray(ramp.thresholds), axis=1)
+    np.testing.assert_array_equal(np.asarray(n), np.asarray(brute))
