@@ -1,0 +1,103 @@
+"""Host-device-count scaling sweep for the distribution layer.
+
+For each forced host-device count (``xla_force_host_platform_device_count``
+= 1/2/4/8) a subprocess times the smoke-config train step two ways:
+
+* **replicated** — the plain jitted step on one device (the no-dist
+  baseline every count is normalized against);
+* **sharded**    — the shard_map data-parallel step from
+  :func:`repro.launch.steps.make_dp_train_step` with the batch split over
+  the ``data`` axis and an explicit psum gradient all-reduce.
+
+Reported as tokens/s.  On the CPU host the forced devices share the same
+cores, so this measures *correct scaling plumbing* (the sharded step must
+not regress as devices multiply), not real speedup — the dry-run roofline
+covers projected hardware numbers.
+
+    PYTHONPATH=src python -m benchmarks.dist_scaling [--full]
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_CHILD = """
+    import json, time
+    import jax, jax.numpy as jnp
+    from repro import configs
+    from repro.data.pipeline import SyntheticLM
+    from repro.dist import sharding as SH
+    from repro.ft.elastic import build_mesh, plan_for_devices
+    from repro.launch.steps import (build_all, make_dp_train_step,
+                                    make_optimizer)
+
+    BATCH, SEQ, STEPS = 8, 64, 3
+    cfg = configs.get_smoke("qwen2.5-3b")
+    model, train_step, _, _ = build_all(cfg)
+    opt = make_optimizer(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = opt.init(params)
+    pipe = SyntheticLM(cfg.vocab, SEQ, BATCH)
+    batches = [{k: jnp.asarray(v) for k, v in pipe.batch_at(s).items()}
+               for s in range(STEPS + 1)]
+
+    def bench(step_fn, put):
+        p, o = params, opt_state
+        p, o, _ = step_fn(p, o, put(batches[0]), 0)       # compile+warmup
+        jax.block_until_ready(p)
+        t0 = time.perf_counter()
+        for s in range(1, STEPS + 1):
+            p, o, _ = step_fn(p, o, put(batches[s]), s)
+        jax.block_until_ready(p)
+        return BATCH * SEQ * STEPS / (time.perf_counter() - t0)
+
+    n = len(jax.devices())
+    rep_tps = bench(jax.jit(train_step), lambda b: b)
+
+    plan = plan_for_devices(n, global_batch=BATCH, model_parallel=1)
+    mesh = build_mesh(plan)
+    dp = jax.jit(make_dp_train_step(model, opt, mesh, grad_comm="psum"))
+    bsh = SH.shardings_for(SH.batch_specs(batches[0], mesh), mesh)
+    shard_tps = bench(dp, lambda b: jax.tree.map(jax.device_put, b, bsh))
+
+    print(json.dumps({"devices": n, "data_parallel": plan.new_shape["data"],
+                      "replicated_tokens_per_s": round(rep_tps, 1),
+                      "sharded_tokens_per_s": round(shard_tps, 1)}))
+"""
+
+
+def _sweep_one(devices: int) -> dict:
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(_CHILD)],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    if out.returncode != 0:
+        return {"devices": devices, "error": out.stderr[-800:]}
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def run(quick: bool = True) -> dict:
+    counts = (1, 2) if quick else (1, 2, 4, 8)
+    rows = [_sweep_one(n) for n in counts]
+    for r in rows:
+        if "error" in r:
+            print(f"  devices={r['devices']}: FAILED {r['error'][:200]}")
+            continue
+        print(f"  devices={r['devices']} (dp={r['data_parallel']}): "
+              f"replicated {r['replicated_tokens_per_s']:9.1f} tok/s   "
+              f"sharded {r['sharded_tokens_per_s']:9.1f} tok/s")
+    ok = [r for r in rows if "error" not in r]
+    assert ok, rows
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    run(quick="--full" not in sys.argv)

@@ -1,0 +1,69 @@
+"""Forward-compat shims pinning the newer-JAX mesh API onto jax 0.4.x.
+
+The codebase (and its tests) are written against the post-0.5 JAX surface:
+
+* ``jax.set_mesh(mesh)``          — context manager exposing the mesh to
+  sharding-constraint resolution and shard_map;
+* ``jax.shard_map(f, mesh=..., in_specs=..., out_specs=..., check_vma=...)``
+  — top-level shard_map with the ``check_vma`` keyword;
+* ``jax.sharding.get_abstract_mesh()`` — the mesh visible at trace time.
+
+On jax 0.4.x these live elsewhere (``jax.experimental.shard_map.shard_map``
+with ``check_rep``; the legacy ``with mesh:`` thread-resource context).
+:func:`install` bridges the gap in-place, and is a no-op on any jax that
+already provides the attribute (so an eventual toolchain upgrade silently
+switches to the native implementations).
+
+Installed from ``repro/__init__.py`` so that importing any ``repro``
+module — including in the multi-device subprocess tests that only import
+``repro.dist.collectives`` — makes the newer API available.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+class _SetMesh:
+    """``with jax.set_mesh(mesh):`` backport.
+
+    Delegates to the legacy mesh context (``Mesh.__enter__``), which is what
+    0.4.x consults both for bare-PartitionSpec ``with_sharding_constraint``
+    resolution and for :func:`get_abstract_mesh` below.
+    """
+
+    def __init__(self, mesh):
+        self.mesh = mesh
+
+    def __enter__(self):
+        self.mesh.__enter__()
+        return self.mesh
+
+    def __exit__(self, *exc):
+        return self.mesh.__exit__(*exc)
+
+
+def _get_abstract_mesh():
+    from jax._src.mesh import thread_resources
+
+    return thread_resources.env.physical_mesh
+
+
+def _shard_map(f, *, mesh=None, in_specs, out_specs, check_vma=True,
+               **kwargs):
+    from jax.experimental.shard_map import shard_map as _legacy
+
+    if mesh is None:
+        mesh = _get_abstract_mesh()
+    return _legacy(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_rep=check_vma, **kwargs)
+
+
+def install() -> None:
+    """Idempotently attach the newer API onto the installed jax."""
+    if not hasattr(jax.sharding, "get_abstract_mesh"):
+        jax.sharding.get_abstract_mesh = _get_abstract_mesh
+    if not hasattr(jax, "set_mesh"):
+        jax.set_mesh = _SetMesh
+    if not hasattr(jax, "shard_map"):
+        jax.shard_map = _shard_map

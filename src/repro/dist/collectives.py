@@ -1,0 +1,92 @@
+"""Hierarchical gradient collectives (shard_map-level, named-axis code).
+
+On a multi-pod mesh the ICI/DCN bandwidth gap makes a flat two-axis
+``psum`` waste cross-pod bandwidth: every byte of the gradient crosses the
+slow link once per *pod-local device*.  The standard fix is hierarchical:
+
+    1. pod-local **reduce-scatter** over ``data``   (fast links, 1/N bytes
+       per device leave this stage),
+    2. cross-pod **all-reduce** of the 1/N shard over ``pod``  (slow link
+       carries 1/N of the gradient instead of all of it),
+    3. pod-local **all-gather** over ``data`` to rematerialize the full
+       reduced gradient.
+
+The composition is numerically identical to ``psum(x, (pod, data))`` —
+every element is produced by the same summation tree, just partitioned
+differently — which :mod:`tests.test_dist` asserts to rtol 1e-6.
+
+All functions here are *per-device* code: call them inside ``shard_map``
+with the relevant axes mapped.  They accept a single array or a pytree.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _leading_pad(x, mult: int):
+    """Pad dim 0 of ``x`` up to a multiple of ``mult`` (zeros)."""
+    n = x.shape[0] if x.ndim else 0
+    pad = (-n) % mult
+    if pad == 0:
+        return x, 0
+    widths = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, widths), pad
+
+
+def _hier_one(x, data_axis: str, pod_axis: Optional[str]):
+    n_data = jax.lax.psum(1, data_axis)
+    if x.ndim == 0:
+        # Scalars can't reduce-scatter; flat psum is already minimal.
+        axes = (pod_axis, data_axis) if pod_axis else (data_axis,)
+        return jax.lax.psum(x, axes)
+    orig_len = x.shape[0]
+    x, pad = _leading_pad(x, n_data)
+    shard = jax.lax.psum_scatter(x, data_axis, scatter_dimension=0,
+                                 tiled=True)
+    if pod_axis is not None:
+        shard = jax.lax.psum(shard, pod_axis)
+    full = jax.lax.all_gather(shard, data_axis, axis=0, tiled=True)
+    if pad:
+        full = full[:orig_len]
+    return full
+
+
+def hierarchical_grad_allreduce(grads: Any, data_axis: str = "data",
+                                pod_axis: Optional[str] = "pod") -> Any:
+    """Pod-local RS -> cross-pod AR -> pod-local AG over a gradient pytree.
+
+    ``pod_axis=None`` degenerates to a single-level RS->AG all-reduce
+    (still useful: the reduce-scatter form is what compressed/sharded
+    optimizer variants build on).  Leaves whose leading dim is smaller than
+    the data-axis size are zero-padded for the scatter and cropped after
+    the gather, so arbitrary parameter shapes are safe.
+    """
+    return jax.tree.map(lambda g: _hier_one(g, data_axis, pod_axis), grads)
+
+
+def grad_allreduce(grads: Any, *, mode: str = "psum",
+                   data_axis: str = "data",
+                   pod_axis: Optional[str] = None) -> Any:
+    """Dispatch table for the train step's gradient-reduction path.
+
+    ``psum``         — flat all-reduce over the data-like axes;
+    ``hierarchical`` — :func:`hierarchical_grad_allreduce`;
+    ``int8``         — shared-scale int8 wire format
+                       (:func:`repro.dist.compress.compressed_psum`).
+    """
+    if mode == "psum":
+        axes = (pod_axis, data_axis) if pod_axis else (data_axis,)
+        return jax.tree.map(lambda g: jax.lax.psum(g, axes), grads)
+    if mode == "hierarchical":
+        return hierarchical_grad_allreduce(grads, data_axis=data_axis,
+                                           pod_axis=pod_axis)
+    if mode == "int8":
+        from repro.dist.compress import compressed_psum
+
+        axes = (pod_axis, data_axis) if pod_axis else (data_axis,)
+        return compressed_psum(grads, axes)
+    raise ValueError(f"unknown grad_allreduce mode {mode!r}")

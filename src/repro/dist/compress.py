@@ -1,0 +1,107 @@
+"""Compressed gradient collectives: blockwise int8 wire format + error
+feedback.
+
+``quantize_int8`` flattens a tensor into 2048-element blocks with one f32
+scale per block (symmetric, round-to-nearest, |err| <= scale/2).  Two
+consumers:
+
+* :func:`compressed_psum` — a *shared-scale* int8 all-reduce: the block
+  scales are first maxed across the axis so every device quantizes onto the
+  same grid, then the codes are summed exactly in integer arithmetic and
+  dequantized once.  Worst-case per-element error is
+  ``n_devices * scale / 2`` — <2% of the reduced gradient's magnitude for
+  normal-ish gradients, independent of the reduction order.  The *wire
+  format* is the int8 codes plus one f32 scale per 2048 elements (~4x
+  smaller than f32); note this XLA-level emulation widens the codes to
+  int32 for the psum, so the collective payload is only reduced once a
+  backend int8/int16 reduce-scatter realizes the format (ROADMAP follow-up)
+  — what this module pins down is the numerics and the grid agreement.
+* :func:`ef_compress` — error-feedback compression (Seide et al. / EF-SGD):
+  the quantization residual is carried to the next step, making the
+  *time-averaged* compressed gradient unbiased.  Not yet threaded through
+  the train loop (the residual is per-host optimizer-adjacent state);
+  exposed and property-tested here for that integration.
+
+All functions take a single array or a pytree and preserve structure/dtype.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 2048
+
+
+def quantize_int8(x) -> Tuple[jnp.ndarray, jnp.ndarray, int]:
+    """-> (codes int8 (n_blocks, BLOCK), scales f32 (n_blocks,), pad)."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scales = block_scales(blocks)
+    q = jnp.clip(jnp.round(blocks / scales[:, None]), -127, 127) \
+        .astype(jnp.int8)
+    return q, scales, pad
+
+
+def block_scales(blocks) -> jnp.ndarray:
+    """Per-block symmetric scale; 1.0 for all-zero blocks (codes stay 0)."""
+    amax = jnp.max(jnp.abs(blocks), axis=-1)
+    return jnp.where(amax > 0, amax / 127.0, 1.0).astype(jnp.float32)
+
+
+def dequantize_int8(q, scales, pad: int, shape) -> jnp.ndarray:
+    flat = (q.astype(jnp.float32) * scales[:, None]).reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    return flat.reshape(shape)
+
+
+def ef_init(g) -> Any:
+    """Zero error-feedback residual matching ``g``'s structure (f32)."""
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), g)
+
+
+def _ef_one(g, res):
+    corrected = g.astype(jnp.float32) + res
+    q, s, pad = quantize_int8(corrected)
+    approx = dequantize_int8(q, s, pad, g.shape)
+    return approx.astype(g.dtype), corrected - approx
+
+
+def ef_compress(g: Any, res: Any) -> Tuple[Any, Any]:
+    """(g + residual) -> int8 grid; returns (approx, new_residual)."""
+    flat_g, treedef = jax.tree_util.tree_flatten(g)
+    flat_r = treedef.flatten_up_to(res)
+    out = [_ef_one(a, b) for a, b in zip(flat_g, flat_r)]
+    approx = treedef.unflatten([o[0] for o in out])
+    new_res = treedef.unflatten([o[1] for o in out])
+    return approx, new_res
+
+
+def _compressed_psum_one(x, axis_name: Union[str, Tuple[str, ...]]):
+    xf = x.astype(jnp.float32).reshape(-1)
+    pad = (-xf.shape[0]) % BLOCK
+    blocks = jnp.pad(xf, (0, pad)).reshape(-1, BLOCK)
+    # Shared grid: max block scale across the axis, so every device's codes
+    # are commensurable and the int32 sum is exact on the wire.
+    scales = jax.lax.pmax(block_scales(blocks), axis_name)
+    q = jnp.clip(jnp.round(blocks / scales[:, None]), -127, 127) \
+        .astype(jnp.int8)
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    flat = (total.astype(jnp.float32) * scales[:, None]).reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    return flat.reshape(x.shape).astype(x.dtype)
+
+
+def compressed_psum(x: Any, axis_name: Union[str, Tuple[str, ...]]) -> Any:
+    """Shared-scale int8 all-reduce over ``axis_name`` (array or pytree).
+
+    Per-device code: call inside ``shard_map``.  Exact for all-zero inputs
+    and on a single-device axis (the local grid is then the shared grid and
+    round-trips within scale/2)."""
+    return jax.tree.map(lambda g: _compressed_psum_one(g, axis_name), x)

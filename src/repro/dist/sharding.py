@@ -1,0 +1,161 @@
+"""PartitionSpec derivation: params, batches, decode state.
+
+The layout contract (DESIGN-level, every launch path goes through here):
+
+* **Params** — megatron tensor parallelism on the ``model`` axis, replicated
+  over ``pod``/``data``.  QKV / MLP-in projections are column-parallel
+  (shard the output feature dim), attention-out / MLP-out are row-parallel
+  (shard the input feature dim), MoE expert stacks are expert-parallel
+  (shard the expert dim), embeddings / LM heads are vocab-parallel, and
+  RG-LRU block-diagonal gates are block-parallel.  A dim is only sharded
+  when it divides the mesh's model-axis size — anything indivisible (and
+  every norm scale / bias-free 1-D param) stays replicated, so the same
+  rules serve the 16-way production mesh and a 1-device host mesh.
+* **Batches** — leading (batch) dim sharded over every data-like axis
+  present in the mesh (``pod`` and ``data``), features replicated.
+* **Decode state** — per-layer caches are stacked on a leading layer dim;
+  the batch dim (1 for stacked subtrees, 0 for unstacked tails) shards over
+  the data-like axes.
+
+``param_specs`` accepts either real arrays or ShapeDtypeStructs — only
+``.shape`` is consulted — so the same function derives shardings for the
+dry-run (abstract) and for elastic resharding (concrete host arrays).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# Dense projections whose *output* features are sharded (column-parallel);
+# their biases shard the same way.
+_COL_PARALLEL = frozenset((
+    "wq", "wk", "wv",            # attention QKV
+    "wi", "wi_gate", "wi_up",    # MLP in-projections
+    "wx", "wg",                  # RG-LRU in/gate projections
+    "in_proj",                   # SSD fused in-projection
+    "lm_head",                   # untied readout (vocab-parallel)
+    "w_gates", "w_proj",         # LSTM workloads
+))
+# Dense projections whose *input* features are sharded (row-parallel); the
+# preceding column-parallel layer produces exactly that shard.
+_ROW_PARALLEL = frozenset(("wo", "out_proj"))
+# Raw (non-dict) block-diagonal gate stacks: shard the block dim.
+_BLOCK_PARALLEL = frozenset(("wa",))
+# Raw stacked expert weights: shard the expert dim.
+_EXPERT_PARALLEL = frozenset(("w_gate", "w_up", "w_down"))
+
+# Decode-state subtrees stacked on a leading layer dim (batch dim is 1).
+_STACKED_STATE = frozenset(("layers", "groups", "self", "cross_k", "cross_v"))
+
+
+def _axis_sizes(mesh) -> dict:
+    return dict(mesh.shape)
+
+
+def data_axes(mesh) -> Tuple[str, ...]:
+    """Data-parallel-like mesh axes, outermost first."""
+    return tuple(ax for ax in ("pod", "data") if ax in mesh.axis_names)
+
+
+def _path_keys(path) -> Tuple[str, ...]:
+    out = []
+    for k in path:
+        out.append(str(getattr(k, "key", getattr(k, "idx", k))))
+    return tuple(out)
+
+
+def _single_axis_spec(ndim: int, dim: int, axis: str) -> P:
+    return P(*(axis if i == dim else None for i in range(ndim)))
+
+
+def _param_spec(keys: Tuple[str, ...], shape: Tuple[int, ...],
+                msize: int, model_axis: str) -> P:
+    """The megatron rule table for one parameter leaf."""
+    ndim = len(shape)
+    name = keys[-1] if keys else ""
+    parent = keys[-2] if len(keys) > 1 else ""
+
+    def sharded(dim: int) -> P:
+        if 0 <= dim < ndim and shape[dim] % msize == 0:
+            return _single_axis_spec(ndim, dim, model_axis)
+        return P()
+
+    if name == "table":                      # embedding: vocab-parallel
+        return sharded(ndim - 2)
+    if name in ("w", "b") and parent in _COL_PARALLEL:
+        return sharded(ndim - 1)
+    if name == "w" and parent in _ROW_PARALLEL:
+        return sharded(ndim - 2)
+    if name in _EXPERT_PARALLEL and ndim >= 3:
+        return sharded(ndim - 3)
+    if name in _BLOCK_PARALLEL and ndim >= 3:
+        return sharded(ndim - 3)
+    if name == "wi" and ndim >= 3:           # RG-LRU raw gate stack (not the
+        return sharded(ndim - 3)             # dict-valued MLP "wi")
+    return P()
+
+
+def param_specs(tree: Any, mesh, *, replicate_all: bool = False,
+                model_axis: str = "model") -> Any:
+    """PartitionSpec pytree (same structure as ``tree``) for parameters.
+
+    ``replicate_all`` keeps every param replicated (SSM-family models whose
+    mixers have no clean megatron split run pure data-parallel).
+    """
+    sizes = _axis_sizes(mesh)
+    msize = sizes.get(model_axis, 1) if model_axis in mesh.axis_names else 1
+
+    def spec(path, leaf) -> P:
+        if replicate_all or msize <= 1:
+            return P()
+        return _param_spec(_path_keys(path), tuple(leaf.shape), msize,
+                           model_axis)
+
+    return jax.tree_util.tree_map_with_path(spec, tree)
+
+
+def batch_specs(batch: Any, mesh) -> Any:
+    """Shard the leading (global-batch) dim over the data-like axes."""
+    baxes = data_axes(mesh)
+    sizes = _axis_sizes(mesh)
+    degree = 1
+    for ax in baxes:
+        degree *= sizes[ax]
+
+    def spec(leaf) -> P:
+        shape = tuple(leaf.shape)
+        if not shape or not baxes or shape[0] % degree:
+            return P()
+        return P(*((baxes,) + (None,) * (len(shape) - 1)))
+
+    return jax.tree.map(spec, batch)
+
+
+def decode_state_specs(state: Any, mesh) -> Any:
+    """Shard decode-state caches over the data-like axes on the batch dim."""
+    baxes = data_axes(mesh)
+    sizes = _axis_sizes(mesh)
+    degree = 1
+    for ax in baxes:
+        degree *= sizes[ax]
+
+    def spec(path, leaf) -> P:
+        keys = _path_keys(path)
+        shape = tuple(leaf.shape)
+        if not shape or not baxes:
+            return P()
+        bdim = 1 if (keys and keys[0] in _STACKED_STATE) else 0
+        if bdim >= len(shape) or shape[bdim] % degree:
+            return P()
+        return P(*(baxes if i == bdim else None for i in range(len(shape))))
+
+    return jax.tree_util.tree_map_with_path(spec, state)
+
+
+def shardings_for(specs: Any, mesh) -> Any:
+    """PartitionSpec pytree -> NamedSharding pytree on ``mesh``."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

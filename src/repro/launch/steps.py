@@ -26,21 +26,80 @@ def make_optimizer(cfg: ModelConfig, total_steps: int = 10000) -> optim.Adam:
     )
 
 
+def _loss_and_grads(model, params, batch, key, remat: bool):
+    """The shared per-(device|program) gradient core of every train step."""
+
+    def loss_fn(p):
+        return model.loss(p, batch, key=key, remat=remat)
+
+    (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+    return grads, metrics
+
+
 def make_train_step(model, optimizer: optim.Adam,
                     *, remat: bool = True) -> Callable:
     def train_step(params, opt_state, batch, seed):
-        key = jax.random.PRNGKey(seed)
-
-        def loss_fn(p):
-            return model.loss(p, batch, key=key, remat=remat)
-
-        (_, metrics), grads = jax.value_and_grad(
-            loss_fn, has_aux=True)(params)
+        grads, metrics = _loss_and_grads(model, params, batch,
+                                         jax.random.PRNGKey(seed), remat)
         new_params, new_opt = optimizer.update(grads, opt_state, params)
         metrics = dict(metrics, grad_norm=optim.global_norm(grads))
         return new_params, new_opt, metrics
 
     return train_step
+
+
+def make_dp_train_step(model, optimizer: optim.Adam, mesh,
+                       *, grad_comm: str = "psum",
+                       remat: bool = True) -> Callable:
+    """Data-parallel train step with *explicit* gradient collectives.
+
+    The GSPMD train step leaves gradient reduction to the partitioner; this
+    variant shard_maps the whole step over the mesh's data-like axes so the
+    reduction path is chosen by ``grad_comm``:
+
+    * ``psum``         — flat all-reduce (the GSPMD-equivalent baseline);
+    * ``hierarchical`` — pod-local reduce-scatter -> cross-pod all-reduce ->
+      all-gather (:mod:`repro.dist.collectives`);
+    * ``int8``         — shared-scale int8 wire format
+      (:mod:`repro.dist.compress`).
+
+    Params/optimizer state are replicated; the batch is sharded on dim 0
+    over the data-like axes (the caller guarantees divisibility — see
+    :func:`repro.ft.elastic.plan_for_devices`).  Trace this step *outside*
+    any mesh context: inside the shard_map body the model must not emit
+    sharding constraints.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist.collectives import grad_allreduce
+
+    pod_axis = "pod" if "pod" in mesh.axis_names else None
+    axes = (pod_axis, "data") if pod_axis else ("data",)
+
+    def local_step(params, opt_state, batch, seed):
+        # Per-replica key: fold in the linearized replica index so model
+        # noise is independent across shards (matching the GSPMD step's
+        # one-key-over-the-global-batch draws in distribution).
+        rep = jnp.zeros((), jnp.int32)
+        for ax in axes:
+            rep = rep * jax.lax.psum(1, ax) + jax.lax.axis_index(ax)
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), rep)
+        grads, metrics = _loss_and_grads(model, params, batch, key, remat)
+        n_rep = jax.lax.psum(1, axes)
+        grads = grad_allreduce(grads, mode=grad_comm, data_axis="data",
+                               pod_axis=pod_axis)
+        grads = jax.tree.map(lambda g: g / n_rep, grads)
+        metrics = {k: jax.lax.pmean(v, axes) for k, v in metrics.items()}
+        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        metrics = dict(metrics, grad_norm=optim.global_norm(grads))
+        return new_params, new_opt, metrics
+
+    return shard_map(
+        local_step, mesh=mesh,
+        in_specs=(P(), P(), P(axes), P()),
+        out_specs=(P(), P(), P()),
+        check_rep=False)
 
 
 def make_prefill_step(model) -> Callable:

@@ -3,24 +3,37 @@
 Runs a real (CPU-sized or cluster-sized) training job with the full stack:
 deterministic pipeline -> jitted sharded train step -> checkpoints -> FT
 executor.  On this container use ``--smoke`` for the reduced configs.
+
+Distribution is wired through :mod:`repro.dist`:
+
+* ``--grad-comm gspmd`` (default) — params/optimizer state are placed with
+  the megatron ``param_specs`` layout, the batch with ``batch_specs``, and
+  the jitted step lets the GSPMD partitioner insert collectives;
+* ``--grad-comm psum|hierarchical|int8`` — a shard_map data-parallel step
+  with the explicit gradient-reduction path from
+  :mod:`repro.dist.collectives` / :mod:`repro.dist.compress`; the mesh is
+  sized by :func:`repro.ft.elastic.plan_for_devices` so the data axis
+  always divides the global batch (elastic shrink/grow reuses the same
+  plan + ``reshard`` round-trip on restore).
 """
 
 from __future__ import annotations
 
 import argparse
-import os
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import configs
 from repro.data.pipeline import SyntheticLM
 from repro.dist import sharding as SH
+from repro.ft.elastic import build_mesh, plan_for_devices, reshard
 from repro.launch.mesh import make_host_mesh, make_production_mesh
-from repro.launch.steps import build_all, make_optimizer
+from repro.launch.steps import build_all, make_dp_train_step, make_optimizer
 from repro.nn.frontends import audio_frame_stub, vision_patch_stub
 from repro.train.loop import TrainState, Trainer
+
+GRAD_COMM_MODES = ("gspmd", "psum", "hierarchical", "int8")
 
 
 def main():
@@ -34,6 +47,8 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--production-mesh", action="store_true",
                     help="16x16 mesh (needs 256 devices)")
+    ap.add_argument("--grad-comm", choices=GRAD_COMM_MODES, default="gspmd",
+                    help="gradient-reduction path (see repro.dist)")
     args = ap.parse_args()
 
     cfg = configs.get_smoke(args.arch) if args.smoke \
@@ -41,15 +56,28 @@ def main():
     model, train_step, _, _ = build_all(cfg)
     opt = make_optimizer(cfg, total_steps=args.steps)
 
-    mesh = (make_production_mesh() if args.production_mesh
-            else make_host_mesh())
+    replicate = cfg.family == "ssm"
+    if args.grad_comm == "gspmd":
+        mesh = (make_production_mesh() if args.production_mesh
+                else make_host_mesh())
+    else:
+        # Explicit-collective DP: the elastic planner picks the largest
+        # (data, model=1) mesh whose data axis divides the global batch.
+        plan = plan_for_devices(len(jax.devices()),
+                                global_batch=args.batch, model_parallel=1)
+        mesh = build_mesh(plan)
+        train_step = make_dp_train_step(model, opt,
+                                        mesh, grad_comm=args.grad_comm)
+
     key = jax.random.PRNGKey(0)
-    params = model.init(key)
-    opt_state = opt.init(params)
+    params = reshard(model.init(key), mesh, replicate_all=replicate)
+    opt_state = jax.jit(opt.init)(params)
 
     pipeline = SyntheticLM(cfg.vocab, args.seq, args.batch)
+    batch_sh = None
 
     def put_batch(b):
+        nonlocal batch_sh
         batch = {k: jnp.asarray(v) for k, v in b.items()}
         if cfg.modality == "vision":
             batch["patch_embeds"] = vision_patch_stub(
@@ -58,7 +86,9 @@ def main():
         if cfg.modality == "audio":
             batch["frames"] = audio_frame_stub(
                 jax.random.PRNGKey(7), args.batch, cfg.enc_len, cfg.d_model)
-        return batch
+        if batch_sh is None:
+            batch_sh = SH.shardings_for(SH.batch_specs(batch, mesh), mesh)
+        return jax.tree.map(jax.device_put, batch, batch_sh)
 
     trainer = Trainer(model, opt, train_step, pipeline,
                       ckpt_dir=args.ckpt_dir, put_batch=put_batch)

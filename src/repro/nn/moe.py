@@ -96,6 +96,59 @@ def aux_load_balance_loss(probs_f32, idx, n_experts: int):
     return n_experts * jnp.sum(imp * load)
 
 
+def dispatch_plan(idx, gates, n_tokens: int, n_experts: int, capacity: int):
+    """Sort-based slot assignment shared by the GSPMD and EP paths.
+
+    Returns (st, sg, dest, valid): source token, gate weight, destination
+    slot in the flattened (E*C [+1 overflow]) buffer, and the
+    within-capacity mask, one entry per (token, expert) routing slot.
+    """
+    top_k = idx.shape[-1]
+    slot_expert = idx.reshape(-1)                       # (N*k,)
+    slot_token = jnp.repeat(jnp.arange(n_tokens), top_k)  # (N*k,)
+    slot_gate = gates.reshape(-1)
+    order = jnp.argsort(slot_expert, stable=True)
+    se = slot_expert[order]
+    st = slot_token[order]
+    sg = slot_gate[order]
+    counts = jnp.zeros((n_experts,), jnp.int32).at[se].add(1)
+    offsets = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
+    pos_in_e = jnp.arange(se.shape[0], dtype=jnp.int32) - offsets[se]
+    valid = pos_in_e < capacity
+    dump = n_experts * capacity                          # overflow slot
+    dest = jnp.where(valid, se * capacity + jnp.minimum(pos_in_e,
+                                                        capacity - 1), dump)
+    return st, sg, dest, valid
+
+
+def gather_expert_buffer(xf, st, dest, valid, n_experts: int, capacity: int):
+    """Gather routed tokens into the (E, C, d) expert input buffer."""
+    d = xf.shape[-1]
+    token_for_slot = jnp.full((n_experts * capacity + 1,), 0, jnp.int32)
+    token_for_slot = token_for_slot.at[dest].set(st)
+    slot_used = jnp.zeros((n_experts * capacity + 1,), xf.dtype)
+    slot_used = slot_used.at[dest].set(
+        jnp.where(valid, 1.0, 0.0).astype(xf.dtype))
+    x_buf = xf[token_for_slot[:-1]] * slot_used[:-1, None]
+    return x_buf.reshape(n_experts, capacity, d)
+
+
+def combine_expert_buffer(h, xf, st, sg, dest, valid):
+    """Weighted scatter-add of expert outputs back onto the tokens."""
+    n_slots = h.shape[0] * h.shape[1]
+    h_flat = h.reshape(n_slots, h.shape[-1])
+    contrib = h_flat[jnp.minimum(dest, n_slots - 1)] \
+        * (sg * valid.astype(sg.dtype))[:, None]
+    return jnp.zeros_like(xf).at[st].add(contrib)
+
+
+def expert_capacity(n_tokens: int, top_k: int, n_experts: int,
+                    capacity_factor: float) -> int:
+    return max(int(math.ceil(n_tokens * top_k / n_experts
+                             * capacity_factor)), top_k)
+
+
 def moe_apply(p, x, *, top_k: int, capacity_factor: float,
               act: AnalogActivation, router_score: str = "softmax",
               router_act: Optional[AnalogActivation] = None,
@@ -113,31 +166,11 @@ def moe_apply(p, x, *, top_k: int, capacity_factor: float,
                                           router_act)
 
     # --- slot assignment (sort by expert, capacity-crop) ---
-    capacity = int(math.ceil(n * top_k / n_experts * capacity_factor))
-    capacity = max(capacity, top_k)
-    slot_expert = idx.reshape(-1)                       # (N*k,)
-    slot_token = jnp.repeat(jnp.arange(n), top_k)       # (N*k,)
-    slot_gate = gates.reshape(-1)
-    order = jnp.argsort(slot_expert, stable=True)
-    se = slot_expert[order]
-    st = slot_token[order]
-    sg = slot_gate[order]
-    counts = jnp.zeros((n_experts,), jnp.int32).at[se].add(1)
-    offsets = jnp.concatenate(
-        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
-    pos_in_e = jnp.arange(se.shape[0], dtype=jnp.int32) - offsets[se]
-    valid = pos_in_e < capacity
-    dump = n_experts * capacity                          # overflow slot
-    dest = jnp.where(valid, se * capacity + jnp.minimum(pos_in_e,
-                                                        capacity - 1), dump)
+    capacity = expert_capacity(n, top_k, n_experts, capacity_factor)
+    st, sg, dest, valid = dispatch_plan(idx, gates, n, n_experts, capacity)
 
     # --- dispatch: gather tokens into the (E, C, d) expert buffer ---
-    token_for_slot = jnp.full((n_experts * capacity + 1,), 0, jnp.int32)
-    token_for_slot = token_for_slot.at[dest].set(st)
-    slot_used = jnp.zeros((n_experts * capacity + 1,), xf.dtype)
-    slot_used = slot_used.at[dest].set(jnp.where(valid, 1.0, 0.0).astype(xf.dtype))
-    x_buf = xf[token_for_slot[:-1]] * slot_used[:-1, None]
-    x_buf = x_buf.reshape(n_experts, capacity, d)
+    x_buf = gather_expert_buffer(xf, st, dest, valid, n_experts, capacity)
     if ep_axis is not None:
         x_buf = _maybe_shard(x_buf, P(ep_axis, None, None))
 
@@ -151,10 +184,7 @@ def moe_apply(p, x, *, top_k: int, capacity_factor: float,
         h = _maybe_shard(h, P(ep_axis, None, None))
 
     # --- combine: weighted scatter-add back to tokens ---
-    h_flat = h.reshape(n_experts * capacity, d)
-    contrib = h_flat[jnp.minimum(dest, n_experts * capacity - 1)] \
-        * (sg * valid.astype(sg.dtype))[:, None]
-    out = jnp.zeros_like(xf).at[st].add(contrib)
+    out = combine_expert_buffer(h, xf, st, sg, dest, valid)
 
     # --- shared experts (always-on) ---
     if "shared" in p:

@@ -3,7 +3,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="optional dev dep (pip install hypothesis)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.nladc import build_ramp, nladc_reference, pwm_quantize
 from repro.dist.compress import (dequantize_int8, ef_compress, ef_init,
