@@ -20,12 +20,10 @@ covers projected hardware numbers.
 from __future__ import annotations
 
 import json
-import os
 import subprocess
 import sys
-import textwrap
 
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+from repro.subproc import run_in_subprocess
 
 _CHILD = """
     import json, time
@@ -34,37 +32,46 @@ _CHILD = """
     from repro.data.pipeline import SyntheticLM
     from repro.dist import sharding as SH
     from repro.ft.elastic import build_mesh, plan_for_devices
-    from repro.launch.steps import (build_all, make_dp_train_step,
-                                    make_optimizer)
+    from repro.launch.steps import (make_dp_train_step, make_optimizer,
+                                    make_train_step)
+    from repro.nn.model import build
 
     BATCH, SEQ, STEPS = 8, 64, 3
     cfg = configs.get_smoke("qwen2.5-3b")
-    model, train_step, _, _ = build_all(cfg)
+    # One optimizer for both paths so the comparison isolates the gradient
+    # path (same reasoning as launch/train.py).
+    model = build(cfg)
     opt = make_optimizer(cfg)
+    train_step = make_train_step(model, opt)
     params = model.init(jax.random.PRNGKey(0))
     opt_state = opt.init(params)
     pipe = SyntheticLM(cfg.vocab, SEQ, BATCH)
     batches = [{k: jnp.asarray(v) for k, v in pipe.batch_at(s).items()}
                for s in range(STEPS + 1)]
 
-    def bench(step_fn, put):
+    # Batches are pre-placed *outside* the timed region for both paths, so
+    # the replicated-vs-sharded comparison measures the step, not host->
+    # device transfer.
+    def bench(step_fn, placed):
         p, o = params, opt_state
-        p, o, _ = step_fn(p, o, put(batches[0]), 0)       # compile+warmup
+        p, o, _ = step_fn(p, o, placed[0], 0)             # compile+warmup
         jax.block_until_ready(p)
         t0 = time.perf_counter()
         for s in range(1, STEPS + 1):
-            p, o, _ = step_fn(p, o, put(batches[s]), s)
+            p, o, _ = step_fn(p, o, placed[s], s)
         jax.block_until_ready(p)
         return BATCH * SEQ * STEPS / (time.perf_counter() - t0)
 
     n = len(jax.devices())
-    rep_tps = bench(jax.jit(train_step), lambda b: b)
+    rep_tps = bench(jax.jit(train_step), batches)
 
     plan = plan_for_devices(n, global_batch=BATCH, model_parallel=1)
     mesh = build_mesh(plan)
     dp = jax.jit(make_dp_train_step(model, opt, mesh, grad_comm="psum"))
     bsh = SH.shardings_for(SH.batch_specs(batches[0], mesh), mesh)
-    shard_tps = bench(dp, lambda b: jax.tree.map(jax.device_put, b, bsh))
+    placed = [jax.tree.map(jax.device_put, b, bsh) for b in batches]
+    jax.block_until_ready(placed)
+    shard_tps = bench(dp, placed)
 
     print(json.dumps({"devices": n, "data_parallel": plan.new_shape["data"],
                       "replicated_tokens_per_s": round(rep_tps, 1),
@@ -73,12 +80,10 @@ _CHILD = """
 
 
 def _sweep_one(devices: int) -> dict:
-    env = dict(os.environ,
-               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
-               PYTHONPATH=os.path.join(REPO, "src"))
-    out = subprocess.run([sys.executable, "-c", textwrap.dedent(_CHILD)],
-                         capture_output=True, text=True, env=env,
-                         timeout=600)
+    try:
+        out = run_in_subprocess(_CHILD, devices, timeout=600)
+    except subprocess.TimeoutExpired:
+        return {"devices": devices, "error": "timeout after 600s"}
     if out.returncode != 0:
         return {"devices": devices, "error": out.stderr[-800:]}
     return json.loads(out.stdout.strip().splitlines()[-1])

@@ -25,18 +25,29 @@ import jax
 
 
 class _SetMesh:
-    """``with jax.set_mesh(mesh):`` backport.
+    """``jax.set_mesh(mesh)`` backport — context manager *and* bare call.
 
     Delegates to the legacy mesh context (``Mesh.__enter__``), which is what
     0.4.x consults both for bare-PartitionSpec ``with_sharding_constraint``
-    resolution and for :func:`get_abstract_mesh` below.
+    resolution and for :func:`get_abstract_mesh` below.  The mesh is entered
+    at call time, matching both post-0.5 usages: ``with jax.set_mesh(m):``
+    pops it on block exit, while a bare ``jax.set_mesh(m)`` leaves it
+    installed (the legacy analog of setting the global mesh).  The object
+    stays reusable: the first ``with`` adopts the call-time frame, and any
+    further entry — reuse after exit, or nesting the same object — pushes
+    its own frame, so every ``__exit__`` pops a frame this object pushed.
     """
 
     def __init__(self, mesh):
         self.mesh = mesh
+        self._adopt_pending = True      # call-time (bare-call) entry below
+        mesh.__enter__()
 
     def __enter__(self):
-        self.mesh.__enter__()
+        if self._adopt_pending:
+            self._adopt_pending = False
+        else:
+            self.mesh.__enter__()
         return self.mesh
 
     def __exit__(self, *exc):

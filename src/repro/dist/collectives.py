@@ -27,6 +27,19 @@ import jax
 import jax.numpy as jnp
 
 
+def replica_index(axes) -> jnp.ndarray:
+    """Linearized index of this shard over ``axes`` (outermost first).
+
+    The canonical per-shard PRNG derivation: every shard_map body that
+    draws model noise folds this into its key, so draws are independent
+    across shards while both the DP train step and the EP MoE path agree
+    on the scheme."""
+    rep = jnp.zeros((), jnp.int32)
+    for ax in axes:
+        rep = rep * jax.lax.psum(1, ax) + jax.lax.axis_index(ax)
+    return rep
+
+
 def _leading_pad(x, mult: int):
     """Pad dim 0 of ``x`` up to a multiple of ``mult`` (zeros)."""
     n = x.shape[0] if x.ndim else 0
@@ -56,10 +69,13 @@ def _hier_one(x, data_axis: str, pod_axis: Optional[str]):
 
 
 def hierarchical_grad_allreduce(grads: Any, data_axis: str = "data",
-                                pod_axis: Optional[str] = "pod") -> Any:
+                                pod_axis: Optional[str] = None) -> Any:
     """Pod-local RS -> cross-pod AR -> pod-local AG over a gradient pytree.
 
-    ``pod_axis=None`` degenerates to a single-level RS->AG all-reduce
+    ``pod_axis`` defaults to ``None`` (same as :func:`grad_allreduce`) —
+    single-host meshes have no ``pod`` axis, and naming an unbound axis
+    fails at trace time.  ``pod_axis=None`` degenerates to a single-level
+    RS->AG all-reduce
     (still useful: the reduce-scatter form is what compressed/sharded
     optimizer variants build on).  Leaves whose leading dim is smaller than
     the data-axis size are zero-padded for the scatter and cropped after

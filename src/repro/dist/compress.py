@@ -35,22 +35,34 @@ import jax.numpy as jnp
 BLOCK = 2048
 
 
-def quantize_int8(x) -> Tuple[jnp.ndarray, jnp.ndarray, int]:
-    """-> (codes int8 (n_blocks, BLOCK), scales f32 (n_blocks,), pad)."""
+def _blockify(x) -> Tuple[jnp.ndarray, int]:
+    """Flatten + zero-pad to (n_blocks, BLOCK); returns (blocks, pad)."""
     flat = x.astype(jnp.float32).reshape(-1)
     pad = (-flat.shape[0]) % BLOCK
-    flat = jnp.pad(flat, (0, pad))
-    blocks = flat.reshape(-1, BLOCK)
-    scales = block_scales(blocks)
-    q = jnp.clip(jnp.round(blocks / scales[:, None]), -127, 127) \
+    return jnp.pad(flat, (0, pad)).reshape(-1, BLOCK), pad
+
+
+def _encode(blocks, scales) -> jnp.ndarray:
+    """Symmetric round-to-nearest int8 codes on the given per-block grid."""
+    return jnp.clip(jnp.round(blocks / scales[:, None]), -127, 127) \
         .astype(jnp.int8)
-    return q, scales, pad
 
 
-def block_scales(blocks) -> jnp.ndarray:
-    """Per-block symmetric scale; 1.0 for all-zero blocks (codes stay 0)."""
+def quantize_int8(x) -> Tuple[jnp.ndarray, jnp.ndarray, int]:
+    """-> (codes int8 (n_blocks, BLOCK), scales f32 (n_blocks,), pad)."""
+    blocks, pad = _blockify(x)
+    scales = block_scales(blocks)
+    return _encode(blocks, scales), scales, pad
+
+
+def block_scales(blocks, zero_fill: float = 1.0) -> jnp.ndarray:
+    """Per-block symmetric scale; ``zero_fill`` for all-zero blocks.
+
+    The local-quantization default of 1.0 keeps the codes (all 0) on a
+    sane grid; :func:`compressed_psum` passes 0.0 so a locally-zero block
+    never wins the cross-device scale pmax."""
     amax = jnp.max(jnp.abs(blocks), axis=-1)
-    return jnp.where(amax > 0, amax / 127.0, 1.0).astype(jnp.float32)
+    return jnp.where(amax > 0, amax / 127.0, zero_fill).astype(jnp.float32)
 
 
 def dequantize_int8(q, scales, pad: int, shape) -> jnp.ndarray:
@@ -83,19 +95,19 @@ def ef_compress(g: Any, res: Any) -> Tuple[Any, Any]:
 
 
 def _compressed_psum_one(x, axis_name: Union[str, Tuple[str, ...]]):
-    xf = x.astype(jnp.float32).reshape(-1)
-    pad = (-xf.shape[0]) % BLOCK
-    blocks = jnp.pad(xf, (0, pad)).reshape(-1, BLOCK)
+    blocks, pad = _blockify(x)
     # Shared grid: max block scale across the axis, so every device's codes
-    # are commensurable and the int32 sum is exact on the wire.
-    scales = jax.lax.pmax(block_scales(blocks), axis_name)
-    q = jnp.clip(jnp.round(blocks / scales[:, None]), -127, 127) \
-        .astype(jnp.int8)
-    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
-    flat = (total.astype(jnp.float32) * scales[:, None]).reshape(-1)
-    if pad:
-        flat = flat[:-pad]
-    return flat.reshape(x.shape).astype(x.dtype)
+    # are commensurable and the int32 sum is exact on the wire.  A locally
+    # all-zero block contributes 0.0 to the pmax — not the local 1.0
+    # placeholder — so it can never coarsen the grid of a peer whose block
+    # is live but small (sparse grads: a 1e-3 block would round to zero on
+    # a grid of 1.0).  The 1.0 fill is applied only after the pmax, when
+    # the block is zero on *every* device and the codes are 0 anyway.
+    shared = jax.lax.pmax(block_scales(blocks, zero_fill=0.0), axis_name)
+    scales = jnp.where(shared > 0, shared, 1.0)
+    total = jax.lax.psum(_encode(blocks, scales).astype(jnp.int32),
+                         axis_name)
+    return dequantize_int8(total, scales, pad, x.shape).astype(x.dtype)
 
 
 def compressed_psum(x: Any, axis_name: Union[str, Tuple[str, ...]]) -> Any:

@@ -25,10 +25,10 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core.analog_layer import AnalogActivation
+from repro.dist import collectives as COLL
 from repro.dist import sharding as SH
 from repro.nn import moe as MOE
 
@@ -77,9 +77,15 @@ def moe_apply_ep(p, x, *, top_k: int, capacity_factor: float,
         xf = xl.reshape(-1, d)
         n = xf.shape[0]
         key_l = kl[0] if kl else None
+        if key_l is not None:
+            # Per-shard key so analog-activation noise is independent
+            # across shards, matching the GSPMD path's one-draw-over-the-
+            # global-buffer distribution.
+            key_l = jax.random.fold_in(key_l,
+                                       COLL.replica_index(tok_axes))
 
         logits = xf @ pl["router"].astype(xf.dtype)
-        gates, idx, probs_f32 = MOE._router_gates(
+        gates, idx, probs_f32 = MOE.router_gates(
             logits, top_k, router_score, router_act)
 
         capacity = MOE.expert_capacity(n, top_k, n_experts, capacity_factor)
@@ -132,25 +138,20 @@ def moe_apply_ep(p, x, *, top_k: int, capacity_factor: float,
         aux = n_experts * jnp.sum(imp * load)
         return out, aux
 
-    # Expert stacks shard over the model axis (same rule table as the
-    # parameter layout); everything else — router, shared experts — is
-    # replicated into the shard_map body.
-    param_specs = jax.tree_util.tree_map_with_path(
-        lambda path, leaf: (P(ep_axis, None, None)
-                            if str(getattr(path[-1], "key", "")) in
-                            SH._EXPERT_PARALLEL
-                            else P(*(None,) * leaf.ndim)),
-        p)
+    # Expert stacks shard over the model axis, everything else — router,
+    # shared experts — replicates; derived from the same rule table as the
+    # parameter layout so the two cannot drift.
+    param_specs = SH.ep_param_specs(p, ep_axis)
     x_spec = P(baxes, ep_axis, None)
     # ``key`` rides in a length-0/1 tuple so specs stay pytree-shaped.
     key_tuple = (key,) if key is not None else ()
     key_specs = tuple(P(*(None,) * jnp.asarray(k).ndim) for k in key_tuple)
 
-    mapped = shard_map(
+    mapped = jax.shard_map(
         body, mesh=mesh,
         in_specs=(x_spec, param_specs, key_specs),
         out_specs=(x_spec, P()),
-        check_rep=False)
+        check_vma=False)
     out, aux = mapped(x, p, key_tuple)
     if return_aux:
         return out, aux

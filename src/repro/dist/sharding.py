@@ -117,6 +117,27 @@ def param_specs(tree: Any, mesh, *, replicate_all: bool = False,
     return jax.tree_util.tree_map_with_path(spec, tree)
 
 
+def ep_param_specs(tree: Any, ep_axis: str = "model") -> Any:
+    """shard_map in-specs for the expert-parallel MoE body.
+
+    Expert weight stacks (the ``_EXPERT_PARALLEL`` rule-table entries, same
+    set ``param_specs`` consults) shard their leading expert dim over
+    ``ep_axis``; every other leaf — router, shared experts, biases — is
+    replicated into the body, which runs them on each shard's local tokens.
+    Kept here next to the rule table so the hand-scheduled EP path in
+    :mod:`repro.dist.ep` cannot drift from the parameter layout contract.
+    """
+
+    def spec(path, leaf) -> P:
+        keys = _path_keys(path)
+        name = keys[-1] if keys else ""
+        if name in _EXPERT_PARALLEL and leaf.ndim >= 3:
+            return _single_axis_spec(leaf.ndim, leaf.ndim - 3, ep_axis)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec, tree)
+
+
 def batch_specs(batch: Any, mesh) -> Any:
     """Shard the leading (global-batch) dim over the data-like axes."""
     baxes = data_axes(mesh)

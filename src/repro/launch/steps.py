@@ -26,21 +26,15 @@ def make_optimizer(cfg: ModelConfig, total_steps: int = 10000) -> optim.Adam:
     )
 
 
-def _loss_and_grads(model, params, batch, key, remat: bool):
-    """The shared per-(device|program) gradient core of every train step."""
-
-    def loss_fn(p):
-        return model.loss(p, batch, key=key, remat=remat)
-
-    (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
-    return grads, metrics
-
-
 def make_train_step(model, optimizer: optim.Adam,
                     *, remat: bool = True) -> Callable:
     def train_step(params, opt_state, batch, seed):
-        grads, metrics = _loss_and_grads(model, params, batch,
-                                         jax.random.PRNGKey(seed), remat)
+        key = jax.random.PRNGKey(seed)
+
+        def loss_fn(p):
+            return model.loss(p, batch, key=key, remat=remat)
+
+        grads, metrics = jax.grad(loss_fn, has_aux=True)(params)
         new_params, new_opt = optimizer.update(grads, opt_state, params)
         metrics = dict(metrics, grad_norm=optim.global_norm(grads))
         return new_params, new_opt, metrics
@@ -68,11 +62,16 @@ def make_dp_train_step(model, optimizer: optim.Adam, mesh,
     :func:`repro.ft.elastic.plan_for_devices`).  Trace this step *outside*
     any mesh context: inside the shard_map body the model must not emit
     sharding constraints.
+
+    Equivalence to the plain (GSPMD) step: exact for the CE term under any
+    label masking (per-shard gradients are valid-token-share weighted, see
+    ``tests/test_dist_edges``); the MoE router aux loss is the uniform
+    average of per-shard aux over local tokens — the standard DP
+    approximation of the global statistic.
     """
-    from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
-    from repro.dist.collectives import grad_allreduce
+    from repro.dist.collectives import grad_allreduce, replica_index
 
     pod_axis = "pod" if "pod" in mesh.axis_names else None
     axes = (pod_axis, "data") if pod_axis else ("data",)
@@ -81,25 +80,44 @@ def make_dp_train_step(model, optimizer: optim.Adam, mesh,
         # Per-replica key: fold in the linearized replica index so model
         # noise is independent across shards (matching the GSPMD step's
         # one-key-over-the-global-batch draws in distribution).
-        rep = jnp.zeros((), jnp.int32)
-        for ax in axes:
-            rep = rep * jax.lax.psum(1, ax) + jax.lax.axis_index(ax)
-        key = jax.random.fold_in(jax.random.PRNGKey(seed), rep)
-        grads, metrics = _loss_and_grads(model, params, batch, key, remat)
+        key = jax.random.fold_in(jax.random.PRNGKey(seed),
+                                 replica_index(axes))
         n_rep = jax.lax.psum(1, axes)
+        # GSPMD equivalence on masked data: the plain step normalizes the
+        # CE term by the GLOBAL valid-token count, so each shard's mean CE
+        # is weighted by its valid-token share before the sum (exact; the
+        # share depends only on the labels, not on params).  The MoE
+        # router aux loss is different: every token routes regardless of
+        # label masking and the loss is a *nonlinear* global statistic, so
+        # it gets the standard DP treatment — per-shard aux over local
+        # tokens, averaged uniformly (1/n_rep) — which approximates (not
+        # reproduces) the GSPMD-global aux.
+        n_valid = jnp.sum(batch["labels"] >= 0).astype(jnp.float32)
+        share = n_valid / jnp.maximum(jax.lax.psum(n_valid, axes), 1.0)
+
+        def loss_fn(p):
+            total, m = model.loss(p, batch, key=key, remat=remat)
+            obj = share * m["loss"]
+            if "aux_loss" in m:
+                obj = obj + model.cfg.router_aux_coef * m["aux_loss"] / n_rep
+            return obj, m
+
+        grads, metrics = jax.grad(loss_fn, has_aux=True)(params)
         grads = grad_allreduce(grads, mode=grad_comm, data_axis="data",
                                pod_axis=pod_axis)
-        grads = jax.tree.map(lambda g: g / n_rep, grads)
-        metrics = {k: jax.lax.pmean(v, axes) for k, v in metrics.items()}
+        metrics = {k: (jax.lax.psum(v, axes) if k == "tokens"
+                       else jax.lax.pmean(v, axes) if k == "aux_loss"
+                       else jax.lax.psum(v * share, axes))
+                   for k, v in metrics.items()}
         new_params, new_opt = optimizer.update(grads, opt_state, params)
         metrics = dict(metrics, grad_norm=optim.global_norm(grads))
         return new_params, new_opt, metrics
 
-    return shard_map(
+    return jax.shard_map(
         local_step, mesh=mesh,
         in_specs=(P(), P(), P(axes), P()),
         out_specs=(P(), P(), P()),
-        check_rep=False)
+        check_vma=False)
 
 
 def make_prefill_step(model) -> Callable:

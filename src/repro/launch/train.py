@@ -20,6 +20,7 @@ Distribution is wired through :mod:`repro.dist`:
 from __future__ import annotations
 
 import argparse
+import contextlib
 
 import jax
 import jax.numpy as jnp
@@ -29,8 +30,10 @@ from repro.data.pipeline import SyntheticLM
 from repro.dist import sharding as SH
 from repro.ft.elastic import build_mesh, plan_for_devices, reshard
 from repro.launch.mesh import make_host_mesh, make_production_mesh
-from repro.launch.steps import build_all, make_dp_train_step, make_optimizer
+from repro.launch.steps import (make_dp_train_step, make_optimizer,
+                                make_train_step)
 from repro.nn.frontends import audio_frame_stub, vision_patch_stub
+from repro.nn.model import build
 from repro.train.loop import TrainState, Trainer
 
 GRAD_COMM_MODES = ("gspmd", "psum", "hierarchical", "int8")
@@ -50,22 +53,35 @@ def main():
     ap.add_argument("--grad-comm", choices=GRAD_COMM_MODES, default="gspmd",
                     help="gradient-reduction path (see repro.dist)")
     args = ap.parse_args()
+    if args.production_mesh and args.grad_comm != "gspmd":
+        ap.error("--production-mesh requires --grad-comm gspmd: the "
+                 "explicit-collective DP path builds its own data-parallel "
+                 "(model=1) mesh and would silently drop the 16x16 layout")
 
     cfg = configs.get_smoke(args.arch) if args.smoke \
         else configs.get(args.arch)
-    model, train_step, _, _ = build_all(cfg)
+    # One optimizer instance (scheduled over --steps) for every grad-comm
+    # mode, so gspmd vs psum/hierarchical/int8 differ only in the gradient
+    # path, not the LR schedule.
+    model = build(cfg)
     opt = make_optimizer(cfg, total_steps=args.steps)
 
     replicate = cfg.family == "ssm"
     if args.grad_comm == "gspmd":
         mesh = (make_production_mesh() if args.production_mesh
                 else make_host_mesh())
+        train_step = make_train_step(model, opt)
     else:
         # Explicit-collective DP: the elastic planner picks the largest
         # (data, model=1) mesh whose data axis divides the global batch.
         plan = plan_for_devices(len(jax.devices()),
                                 global_batch=args.batch, model_parallel=1)
         mesh = build_mesh(plan)
+        used = plan.new_shape["data"] * plan.new_shape["model"]
+        if used < len(jax.devices()):
+            print(f"[train] note: data axis must divide --batch "
+                  f"{args.batch}; using {used} of {len(jax.devices())} "
+                  "devices")
         train_step = make_dp_train_step(model, opt,
                                         mesh, grad_comm=args.grad_comm)
 
@@ -92,7 +108,14 @@ def main():
 
     trainer = Trainer(model, opt, train_step, pipeline,
                       ckpt_dir=args.ckpt_dir, put_batch=put_batch)
-    state = trainer.fit(TrainState(params, opt_state), args.steps)
+    # GSPMD: trace under the mesh so mesh-aware model branches (sequence
+    # parallelism, moe_impl="ep_shardmap") see it, same as dryrun's
+    # lowering.  The explicit-collective DP step must trace *outside* any
+    # mesh context (see make_dp_train_step).
+    mesh_ctx = (jax.set_mesh(mesh) if args.grad_comm == "gspmd"
+                else contextlib.nullcontext())
+    with mesh_ctx:
+        state = trainer.fit(TrainState(params, opt_state), args.steps)
     print("[train] done; final loss:",
           trainer.history[-1]["loss"] if trainer.history else "n/a")
 

@@ -173,8 +173,10 @@ class EncDecLM:
         logp = jax.nn.log_softmax(logits, axis=-1)
         nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
         nll = jnp.where(valid, nll, 0.0)
-        n_valid = jnp.maximum(jnp.sum(valid), 1)
-        loss = jnp.sum(nll) / n_valid
+        # 'tokens' is the true valid count; the clamp guards only the
+        # division (see transformer.loss / the DP step's share weighting).
+        n_valid = jnp.sum(valid)
+        loss = jnp.sum(nll) / jnp.maximum(n_valid, 1)
         return loss, {"loss": loss, "tokens": n_valid.astype(jnp.float32)}
 
     def prefill(self, params, tokens, extra: Optional[Dict] = None,

@@ -69,10 +69,13 @@ def moe_init(key, d_model: int, d_ff: int, n_experts: int,
     return p
 
 
-def _router_gates(logits, top_k: int, score: str,
-                  router_act: Optional[AnalogActivation]):
+def router_gates(logits, top_k: int, score: str,
+                 router_act: Optional[AnalogActivation]):
     """Top-k gates. softmax: probs then top-k; sigmoid: NL-ADC'd scores,
-    top-k, then normalized (deepseek-v3/moonlight convention)."""
+    top-k, then normalized (deepseek-v3/moonlight convention).
+
+    Public: shared by the GSPMD path below and the expert-parallel
+    shard_map path (:mod:`repro.dist.ep`), which must route identically."""
     if score == "sigmoid":
         probs = (router_act(logits) if router_act is not None
                  else jax.nn.sigmoid(logits))
@@ -162,8 +165,8 @@ def moe_apply(p, x, *, top_k: int, capacity_factor: float,
     n_experts = p["router"].shape[-1]
 
     logits = xf @ p["router"].astype(xf.dtype)
-    gates, idx, probs_f32 = _router_gates(logits, top_k, router_score,
-                                          router_act)
+    gates, idx, probs_f32 = router_gates(logits, top_k, router_score,
+                                         router_act)
 
     # --- slot assignment (sort by expert, capacity-crop) ---
     capacity = expert_capacity(n, top_k, n_experts, capacity_factor)

@@ -331,8 +331,11 @@ class LM:
         logp = jax.nn.log_softmax(logits, axis=-1)
         nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
         nll = jnp.where(valid, nll, 0.0)
-        n_valid = jnp.maximum(jnp.sum(valid), 1)
-        loss = jnp.sum(nll) / n_valid
+        # 'tokens' reports the TRUE valid count (0 for an all-masked batch);
+        # the clamp guards only the division.  The DP train step relies on
+        # this to weight shards by token share without counting phantoms.
+        n_valid = jnp.sum(valid)
+        loss = jnp.sum(nll) / jnp.maximum(n_valid, 1)
         total = loss + cfg.router_aux_coef * aux
         metrics = {"loss": loss, "aux_loss": aux,
                    "tokens": n_valid.astype(jnp.float32)}

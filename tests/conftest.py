@@ -1,5 +1,6 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests see 1 device;
-multi-device tests spawn subprocesses with their own flags."""
+multi-device tests spawn subprocesses via repro.subproc with their own
+flags."""
 
 import numpy as np
 import pytest

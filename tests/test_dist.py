@@ -2,33 +2,14 @@
 collectives, elastic plans.  Multi-device cases run in subprocesses with
 their own XLA_FLAGS (the main process must keep 1 device)."""
 
-import json
-import os
-import subprocess
-import sys
-import textwrap
-
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro import configs
+from repro.subproc import check_in_subprocess as _run_subprocess
 from repro.dist import sharding as SH
 from repro.ft.elastic import plan_for_devices
-
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
-
-def _run_subprocess(code: str, devices: int = 8) -> str:
-    env = dict(os.environ,
-               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
-               PYTHONPATH=os.path.join(REPO, "src"))
-    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                         capture_output=True, text=True, env=env,
-                         timeout=420)
-    assert out.returncode == 0, out.stderr[-3000:]
-    return out.stdout
 
 
 class _FakeMesh:

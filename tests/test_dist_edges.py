@@ -6,41 +6,22 @@ elastic shrink path through real NamedShardings.  Single-device cases run
 in-process; multi-device cases spawn subprocesses with their own XLA_FLAGS.
 """
 
-import os
-import subprocess
-import sys
-import textwrap
-
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.dist.compress import (BLOCK, compressed_psum, dequantize_int8,
                                  ef_compress, ef_init, quantize_int8)
-
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
-
-def _run_subprocess(code: str, devices: int) -> str:
-    env = dict(os.environ,
-               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
-               PYTHONPATH=os.path.join(REPO, "src"))
-    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                         capture_output=True, text=True, env=env,
-                         timeout=420)
-    assert out.returncode == 0, out.stderr[-3000:]
-    return out.stdout
+from repro.subproc import check_in_subprocess as _run_subprocess
 
 
 def _single_device_psum(tree):
-    from jax.experimental.shard_map import shard_map
     from jax.sharding import Mesh, PartitionSpec as P
 
     mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
     specs = jax.tree.map(lambda _: P(), tree)
-    f = shard_map(lambda t: compressed_psum(t, "data"), mesh=mesh,
-                  in_specs=(specs,), out_specs=specs, check_rep=False)
+    f = jax.shard_map(lambda t: compressed_psum(t, "data"), mesh=mesh,
+                      in_specs=(specs,), out_specs=specs, check_vma=False)
     return jax.jit(f)(tree)
 
 
@@ -120,6 +101,33 @@ def test_compressed_psum_tree_multidevice_subprocess():
     assert "EDGES OK" in out
 
 
+def test_compressed_psum_zero_block_one_device_subprocess():
+    """A block that is all-zero on one device must not coarsen the shared
+    grid: small gradients (|x| << 0.5) on the other device survive the
+    reduce within the documented n_devices * scale / 2 bound instead of
+    rounding to zero against the 1.0 all-zero placeholder."""
+    out = _run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.dist.compress import compressed_psum
+        mesh = Mesh(np.array(jax.devices()).reshape(2,), ("data",))
+        small = 1e-3 * jax.random.normal(jax.random.PRNGKey(0), (257,))
+        stacked = jnp.stack([jnp.zeros_like(small), small])
+
+        got = jax.jit(jax.shard_map(
+            lambda t: compressed_psum(t[0], "data"), mesh=mesh,
+            in_specs=(P("data"),), out_specs=P()))(stacked)
+
+        want = np.asarray(small, np.float32)
+        scale = np.abs(want).max() / 127.0
+        err = np.max(np.abs(np.asarray(got, np.float32) - want))
+        assert err <= 2 * scale / 2 + 1e-9, err
+        assert np.max(np.abs(np.asarray(got))) > 0, "gradient silently lost"
+        print("SPARSE OK")
+    """, devices=2)
+    assert "SPARSE OK" in out
+
+
 def test_error_feedback_zero_and_tree():
     """EF on an all-zero gradient is a fixed point; tree structure rides
     through compress/residual untouched."""
@@ -131,6 +139,59 @@ def test_error_feedback_zero_and_tree():
     np.testing.assert_array_equal(np.asarray(approx["a"]), 0.0)
     np.testing.assert_array_equal(np.asarray(res2["a"]), 0.0)
     np.testing.assert_allclose(np.asarray(approx["b"]["c"]), 1.0, atol=0.01)
+
+
+def test_dp_step_matches_plain_uneven_masking_subprocess():
+    """The explicit-collective DP step must equal the plain (GSPMD-style)
+    step when -1-masked labels are unevenly distributed across data shards:
+    shards are weighted by valid-token share (zero-valid shards count 0,
+    not the clamped 1), so loss/tokens/grad_norm and the updated params all
+    match the global normalization."""
+    out = _run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro import configs
+        from repro.configs.base import AnalogSpec
+        from repro.ft.elastic import build_mesh, plan_for_devices
+        from repro.launch.steps import (make_dp_train_step, make_optimizer,
+                                        make_train_step)
+        from repro.nn.model import build
+
+        cfg = configs.get_smoke("qwen2.5-3b").replace(
+            dtype="float32", analog=AnalogSpec(enabled=False))
+        model = build(cfg)
+        opt = make_optimizer(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        opt_state = opt.init(params)
+
+        B, S = 8, 16
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                    cfg.vocab)
+        labels = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0,
+                                    cfg.vocab)
+        # heavy masking on the first half of the batch: some data shards
+        # end up with almost no (possibly zero) valid tokens
+        mask = jnp.concatenate(
+            [jax.random.bernoulli(jax.random.PRNGKey(3), 0.9, (B // 2, S)),
+             jax.random.bernoulli(jax.random.PRNGKey(4), 0.1, (B // 2, S))])
+        batch = {"tokens": tokens, "labels": jnp.where(mask, -1, labels)}
+
+        p1, _, m1 = jax.jit(make_train_step(model, opt))(
+            params, opt_state, batch, 0)
+        mesh = build_mesh(plan_for_devices(4, global_batch=B,
+                                           model_parallel=1))
+        p2, _, m2 = jax.jit(make_dp_train_step(model, opt, mesh,
+                                               grad_comm="psum"))(
+            params, opt_state, batch, 0)
+
+        assert float(m1["tokens"]) == float(m2["tokens"]), (m1, m2)
+        assert abs(float(m1["loss"] - m2["loss"])) < 1e-5, (m1, m2)
+        assert abs(float(m1["grad_norm"] - m2["grad_norm"])) < 1e-4
+        dmax = max(float(jnp.max(jnp.abs(a - b))) for a, b in
+                   zip(jax.tree.leaves(p1), jax.tree.leaves(p2)))
+        assert dmax < 1e-5, dmax
+        print("DP MASKING OK")
+    """, devices=4)
+    assert "DP MASKING OK" in out
 
 
 def test_elastic_reshard_roundtrip_subprocess():
