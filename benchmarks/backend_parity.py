@@ -1,0 +1,125 @@
+"""ref-vs-pallas backend parity + throughput sweep.
+
+Times the analog primitives on both backends over model-shaped workloads
+and checks quantization-exact agreement while it's at it.  Writes the
+result to ``benchmarks/BENCH_backend.json``.
+
+NOTE on the numbers: off-TPU the Pallas kernels run in **interpret mode**
+(the correctness-validation path, orders of magnitude slower than compiled
+kernels) — CPU results benchmark the *plumbing*, not the fusion win.  The
+recorded baseline is marked ``device: cpu-interpret`` accordingly; re-run
+on a TPU host for the real comparison.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import backend as BK
+from repro.core.nladc import NLADC, build_ramp
+from repro.kernels import interpret_mode
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "BENCH_backend.json")
+
+
+def _time(fn, *args, repeat=3):
+    jax.block_until_ready(fn(*args))          # compile + warm
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def _bench_matmul(results, quick):
+    shapes = [(256, 512, 512)] if quick else [(256, 512, 512),
+                                              (1024, 1024, 1024)]
+    ramp = build_ramp("swish", 5)
+    adc = NLADC(ramp)
+    rng = np.random.default_rng(0)
+    for (m, k, n) in shapes:
+        x = jnp.asarray(rng.normal(0, 0.4, (m, k)).astype(np.float32))
+        w = jnp.asarray(rng.normal(0, 0.2, (k, n)).astype(np.float32))
+        row = {}
+        outs = {}
+        for be in ("ref", "pallas"):
+            bk = BK.get_backend(be)
+            f = jax.jit(lambda x_, w_, bk=bk: bk.matmul_nladc(x_, w_, adc))
+            row[be + "_s"] = _time(f, x, w)
+            outs[be] = f(x, w)
+        row["max_abs_diff"] = float(jnp.max(jnp.abs(outs["ref"]
+                                                    - outs["pallas"])))
+        row["quantization_exact"] = bool(row["max_abs_diff"] < ramp.lsb / 2)
+        results[f"matmul_nladc_{m}x{k}x{n}"] = row
+
+
+def _bench_lstm(results, quick):
+    sig, tnh = NLADC(build_ramp("sigmoid", 5)), NLADC(build_ramp("tanh", 5))
+    rng = np.random.default_rng(1)
+    b, h = (64, 512) if quick else (256, 2016)
+    g = jnp.asarray(rng.normal(0, 1.5, (b, 4 * h)).astype(np.float32))
+    c = jnp.asarray(rng.normal(0, 0.5, (b, h)).astype(np.float32))
+    row = {}
+    outs = {}
+    for be in ("ref", "pallas"):
+        bk = BK.get_backend(be)
+        f = jax.jit(lambda g_, c_, bk=bk: bk.lstm_gates(g_, c_, sig, tnh))
+        row[be + "_s"] = _time(f, g, c)
+        outs[be] = f(g, c)
+    row["max_abs_diff"] = max(
+        float(jnp.max(jnp.abs(a - b2)))
+        for a, b2 in zip(outs["ref"], outs["pallas"]))
+    row["quantization_exact"] = bool(
+        row["max_abs_diff"] < build_ramp("sigmoid", 5).lsb / 2)
+    results[f"lstm_gates_{b}x{h}"] = row
+
+
+def _bench_flash_decode(results, quick):
+    rng = np.random.default_rng(2)
+    b, hq, hkv, d, s = (4, 8, 2, 64, 512) if quick else (16, 16, 4, 128,
+                                                         4096)
+    q = jnp.asarray(rng.normal(0, 1, (b, hq, d)).astype(np.float32))
+    k8 = jnp.asarray(rng.integers(-127, 128, (b, s, hkv, d)), jnp.int8)
+    v8 = jnp.asarray(rng.integers(-127, 128, (b, s, hkv, d)), jnp.int8)
+    ks = jnp.asarray(rng.uniform(1e-3, 2e-2, (b, s, hkv)).astype(np.float32))
+    vs = jnp.asarray(rng.uniform(1e-3, 2e-2, (b, s, hkv)).astype(np.float32))
+    ln = jnp.asarray(rng.integers(1, s, (b,)), jnp.int32)
+    row = {}
+    outs = {}
+    for be in ("ref", "pallas"):
+        bk = BK.get_backend(be)
+        f = jax.jit(lambda *a, bk=bk: bk.decode_attention_int8(*a))
+        row[be + "_s"] = _time(f, q, k8, ks, v8, vs, ln)
+        outs[be] = f(q, k8, ks, v8, vs, ln)
+    row["max_abs_diff"] = float(jnp.max(jnp.abs(outs["ref"]
+                                                - outs["pallas"])))
+    results[f"flash_decode_int8_b{b}_s{s}"] = row
+
+
+def run(quick: bool = True) -> dict:
+    results = {
+        "device": ("cpu-interpret" if interpret_mode()
+                   else jax.default_backend()),
+        "note": ("pallas timings are interpret-mode (correctness path, not "
+                 "representative of compiled-kernel throughput)"
+                 if interpret_mode() else "compiled kernels"),
+    }
+    _bench_matmul(results, quick)
+    _bench_lstm(results, quick)
+    _bench_flash_decode(results, quick)
+    with open(OUT_PATH, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    for name, row in results.items():
+        if isinstance(row, dict):
+            print(f"  {name}: ref {row.get('ref_s', 0)*1e3:.2f} ms | "
+                  f"pallas {row.get('pallas_s', 0)*1e3:.2f} ms | "
+                  f"maxdiff {row.get('max_abs_diff'):.2e}")
+    print(f"  -> {OUT_PATH}")
+    return results

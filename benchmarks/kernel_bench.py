@@ -14,7 +14,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.nladc import build_ramp
-from repro.kernels import ops, ref
+from repro import kernels
+from repro.kernels import ref
 
 
 def _time(fn, *args, n=5):
@@ -41,7 +42,7 @@ def run(quick=True):
         us1 = _time(j_nladc, x)
         us2 = _time(j_fused, x, w)
         # interpret-mode correctness at this shape
-        got = ops.nladc(x[:64, :256], ramp)
+        got = kernels.nladc(x[:64, :256], ramp)
         np.testing.assert_allclose(got, ref.nladc(x[:64, :256], ramp),
                                    rtol=1e-5, atol=1e-5)
         print(f"  {shape}: nladc {us1:8.1f} us   fused-matmul {us2:8.1f} us "

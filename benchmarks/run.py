@@ -26,6 +26,7 @@ MODULES = [
     ("fig5c_ptb", "Fig. 5c char-LM BPC vs bits"),
     ("s13_drift", "Supp. S13 drift"),
     ("kernel_bench", "kernel microbench"),
+    ("backend_parity", "ref-vs-pallas backend parity + throughput"),
     ("dist_scaling", "repro.dist device-count scaling sweep"),
     ("roofline_report", "dry-run roofline table"),
 ]

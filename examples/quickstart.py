@@ -13,7 +13,7 @@ import numpy as np
 
 from repro.core.calibration import program_ramp
 from repro.core.nladc import NLADC, build_ramp
-from repro.kernels import ops
+from repro import kernels
 
 # 1. Build the ramp: 32 thresholds = g^{-1}(uniform y-levels) (paper Eq. 3)
 ramp = build_ramp("sigmoid", bits=5)
@@ -37,7 +37,7 @@ print(f"\nprogrammed column INL: mean {mean_inl:.3f} LSB "
 # 4. The fused Pallas kernel: matmul + NL-ADC epilogue in one VMEM pass
 w = 0.1 * jax.random.normal(jax.random.PRNGKey(0), (64, 32))
 h = jax.random.normal(jax.random.PRNGKey(1), (8, 64))
-y = ops.fused_matmul_nladc(h, w, ramp)
+y = kernels.fused_matmul_nladc(h, w, ramp)
 print("\nfused matmul+NLADC output:", y.shape, "->",
       np.round(np.asarray(y[0, :4]), 3))
 print("\nquickstart OK")

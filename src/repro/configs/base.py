@@ -25,6 +25,10 @@ class AnalogSpec:
     # Which nonlinearity gets the NL-ADC treatment (must be in the registry).
     # Empty string -> use the model's hidden_act.
     activation: str = ""
+    # Analog execution backend: "" = auto (REPRO_ANALOG_BACKEND env, else
+    # "ref"); "ref" = jnp simulation; "pallas" = fused Pallas kernels
+    # (repro.core.backend).
+    backend: str = ""
 
 
 @dataclasses.dataclass(frozen=True)

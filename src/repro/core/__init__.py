@@ -1,15 +1,17 @@
 """repro.core — the paper's contribution: NL-ADC in-memory nonlinear ADC."""
 
-from repro.core import calibration, crossbar, functions, hwcost, nladc
+from repro.core import backend, calibration, crossbar, functions, hwcost, nladc
 from repro.core.analog_layer import (AnalogActivation, AnalogConfig, EXACT,
-                                     analog_matmul)
+                                     analog_matmul_act, dense_nladc)
+from repro.core.backend import get_backend, register_backend
 from repro.core.nladc import (NLADC, Ramp, build_nonmonotonic_ramp, build_ramp,
                               inl_lsb, nladc_reference, pwm_quantize,
                               transfer_mse)
 
 __all__ = [
     "AnalogActivation", "AnalogConfig", "EXACT", "NLADC", "Ramp",
-    "analog_matmul", "build_nonmonotonic_ramp", "build_ramp", "calibration",
-    "crossbar", "functions", "hwcost", "inl_lsb", "nladc", "nladc_reference",
-    "pwm_quantize", "transfer_mse",
+    "analog_matmul_act", "backend", "build_nonmonotonic_ramp", "build_ramp",
+    "calibration", "crossbar", "dense_nladc", "functions", "get_backend",
+    "hwcost", "inl_lsb", "nladc", "nladc_reference", "pwm_quantize",
+    "register_backend", "transfer_mse",
 ]

@@ -1,6 +1,6 @@
-"""AnalogDense: crossbar-mapped linear layer with in-memory NL-ADC epilogue.
+"""Analog crossbar layers: config, NL-ADC activations, matmul orchestration.
 
-This is the paper's technique packaged as a composable JAX layer:
+This is the paper's technique packaged as composable JAX pieces:
 
     y = NLADC_g( PWM_quant(x) @ (W + noise) + b )
 
@@ -16,9 +16,12 @@ Three operating modes:
 * ``infer``  — deployment simulation: per-chip write noise (drawn once,
                outside the step) + per-batch read noise + NL-ADC.
 
-The same object also powers the TPU performance path: with
-``use_kernel=True`` the matmul + NL-ADC epilogue lowers through the fused
-Pallas kernel (kernels/fused_matmul_nladc.py) instead of separate HLO ops.
+This module is *orchestration only*: mode logic, quantization, and noise
+draws are shared code, while the compute primitives (elementwise NL-ADC,
+fused matmul+NL-ADC, the LSTM tail, int8-KV decode attention) dispatch
+through :mod:`repro.core.backend` — ``AnalogConfig.backend`` selects the
+pure-jnp ``"ref"`` simulation or the fused Pallas ``"pallas"`` path (this
+field replaced the old boolean kernel switch; see README "Backends").
 """
 
 from __future__ import annotations
@@ -29,6 +32,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import backend as BK
 from repro.core import crossbar
 from repro.core.nladc import NLADC, Ramp, build_ramp, pwm_quantize
 
@@ -45,10 +49,17 @@ class AnalogConfig:
     read_sigma_w: float = crossbar.READ_SIGMA_W
     ramp_train_sigma_us: float = 5.0     # NL-ADC-aware training noise
     mode: str = "exact"                   # exact | train | infer
-    use_kernel: bool = False              # fused Pallas matmul+NL-ADC path
+    backend: str = ""                     # "" = auto (env) | ref | pallas
 
     def replace(self, **kw) -> "AnalogConfig":
         return dataclasses.replace(self, **kw)
+
+    @classmethod
+    def from_spec(cls, spec, **kw) -> "AnalogConfig":
+        """Build from a :class:`repro.configs.base.AnalogSpec`."""
+        return cls(enabled=spec.enabled, adc_bits=spec.adc_bits,
+                   input_bits=spec.input_bits, mode=spec.mode,
+                   backend=getattr(spec, "backend", ""), **kw)
 
 
 EXACT = AnalogConfig(enabled=False, mode="exact")
@@ -65,6 +76,10 @@ class AnalogActivation:
             self._adc = NLADC(build_ramp(name, cfg.adc_bits))
 
     @property
+    def adc(self) -> Optional[NLADC]:
+        return self._adc
+
+    @property
     def ramp(self) -> Optional[Ramp]:
         return self._adc.ramp if self._adc is not None else None
 
@@ -73,35 +88,62 @@ class AnalogActivation:
 
         return acts.exact(self.name)(x)
 
+    def thresholds_for(self, key=None):
+        """Comparator thresholds for one call (possibly noise-perturbed).
+
+        NL-ADC-aware training perturbs the programmed ramp *steps* (one
+        memristor each) and re-accumulates — noise compounds along the ramp
+        exactly as on-chip.  Drawn here (shared code) so every backend
+        consumes identical thresholds.
+        """
+        adc = self._adc
+        cfg = self.cfg
+        if cfg.mode == "train" and key is not None \
+                and cfg.ramp_train_sigma_us > 0:
+            ramp = adc.ramp
+            dg = cfg.ramp_train_sigma_us * jax.random.normal(
+                key, adc.thresholds.shape, dtype=adc.thresholds.dtype)
+            steps = jnp.asarray(ramp.steps, dtype=adc.thresholds.dtype)
+            noisy_steps = steps + dg * ramp.g_scale
+            # Sort: strong step noise can locally de-order the levels; the
+            # comparator bank's thermometer count is order-invariant, and
+            # sorting keeps the ref path's O(log P) searchsorted exact
+            # (searchsorted on an unsorted array returns undefined counts).
+            return jnp.sort(ramp.v_init + jnp.cumsum(noisy_steps))
+        return adc.thresholds
+
     def __call__(self, x, *, key=None):
         cfg = self.cfg
         if not cfg.enabled or self._adc is None:
             return self._exact(x)
-        adc = self._adc
-        if cfg.mode == "train" and key is not None and cfg.ramp_train_sigma_us > 0:
-            # NL-ADC-aware training: perturb the programmed ramp *steps*
-            # (one memristor each) and re-accumulate — noise compounds along
-            # the ramp exactly as on-chip.
-            ramp = adc.ramp
-            dg = cfg.ramp_train_sigma_us * jax.random.normal(
-                key, adc.thresholds.shape, dtype=adc.thresholds.dtype
-            )
-            steps = jnp.asarray(ramp.steps, dtype=adc.thresholds.dtype)
-            noisy_steps = steps + dg * ramp.g_scale
-            thresholds = ramp.v_init + jnp.cumsum(noisy_steps)
-            from repro.core.nladc import _nladc_apply
-
-            return _nladc_apply(x, thresholds, adc.y_table, ramp.name)
-        return adc(x)
+        bk = BK.get_backend(cfg.backend)
+        return bk.nladc(x, self._adc, thresholds=self.thresholds_for(key))
 
 
-def analog_matmul(x, w, cfg: AnalogConfig, *, key=None,
-                  activation: Optional[AnalogActivation] = None,
-                  bias=None, preferred_dtype=jnp.float32):
-    """Crossbar matmul with optional NL-ADC epilogue.
+def _noisy_weights(w, cfg: AnalogConfig, k_w):
+    """Clip to the programmable range and apply the mode's weight noise."""
+    w = crossbar.clip_weights(w)
+    if cfg.mode == "train" and k_w is not None and cfg.train_sigma_w > 0:
+        # Alg. 1: W_fwd = W + eps * sigma; backward hits W directly.
+        w = w + jax.lax.stop_gradient(
+            cfg.train_sigma_w
+            * jax.random.normal(k_w, w.shape, dtype=w.dtype)
+        )
+    elif cfg.mode == "infer" and k_w is not None and cfg.read_sigma_w > 0:
+        w = w + crossbar.read_noise_weights(k_w, w.shape, w.dtype,
+                                            cfg.read_sigma_w)
+    return w
+
+
+def analog_matmul_act(x, w, cfg: AnalogConfig, *, key=None,
+                      activation: Optional[AnalogActivation] = None,
+                      bias=None, preferred_dtype=jnp.float32):
+    """Crossbar matmul with optional NL-ADC epilogue (the crossbar path).
 
     ``key`` threads the per-step noise RNG (train / infer-read noise); pass
-    ``None`` in exact mode or inside the dry-run path.
+    ``None`` in exact mode or inside the dry-run path.  When an NL-ADC'd
+    activation is present, the matmul+quantizer pair goes through the
+    analog backend as one fused primitive.
     """
     if not cfg.enabled:
         y = jnp.matmul(x, w, preferred_element_type=preferred_dtype)
@@ -117,25 +159,13 @@ def analog_matmul(x, w, cfg: AnalogConfig, *, key=None,
 
     if cfg.input_bits is not None:
         x = pwm_quantize(x, cfg.input_bits, cfg.input_clip)
+    w = _noisy_weights(w, cfg, k_w)
 
-    w = crossbar.clip_weights(w)
-    if cfg.mode == "train" and k_w is not None and cfg.train_sigma_w > 0:
-        # Alg. 1: W_fwd = W + eps * sigma; backward hits W directly.
-        w = w + jax.lax.stop_gradient(
-            cfg.train_sigma_w
-            * jax.random.normal(k_w, w.shape, dtype=w.dtype)
-        )
-    elif cfg.mode == "infer" and k_w is not None and cfg.read_sigma_w > 0:
-        w = w + crossbar.read_noise_weights(k_w, w.shape, w.dtype,
-                                            cfg.read_sigma_w)
-
-    if cfg.use_kernel and activation is not None and activation.ramp is not None:
-        from repro.kernels import ops as kops
-
-        y = kops.fused_matmul_nladc(
-            x, w, activation.ramp, bias=bias
-        )
-        return y.astype(x.dtype)
+    if activation is not None and activation.ramp is not None:
+        bk = BK.get_backend(cfg.backend)
+        return bk.matmul_nladc(x, w, activation.adc, bias=bias,
+                               thresholds=activation.thresholds_for(k_act),
+                               preferred_dtype=preferred_dtype)
 
     y = jnp.matmul(x, w, preferred_element_type=preferred_dtype)
     if bias is not None:
@@ -143,3 +173,23 @@ def analog_matmul(x, w, cfg: AnalogConfig, *, key=None,
     if activation is not None:
         y = activation(y, key=k_act)
     return y.astype(x.dtype)
+
+
+def dense_nladc(p, x, act: Optional[AnalogActivation], *, key=None):
+    """Dense layer (params dict ``{w[, b]}``) with a fused NL-ADC epilogue.
+
+    The LM-family path: the analog spec quantizes *activations only* (no
+    crossbar weight/input noise), so this is dense -> NL-ADC, fused into
+    one kernel on the pallas backend.  Matches
+    ``act(layers.dense_apply(p, x))`` on the ref backend (matmul in x's
+    compute dtype).
+    """
+    w, b = p["w"], p.get("b")
+    if act is None or not act.cfg.enabled or act.ramp is None:
+        y = x @ w.astype(x.dtype)
+        if b is not None:
+            y = y + b.astype(y.dtype)
+        return act(y, key=key) if act is not None else y
+    bk = BK.get_backend(act.cfg.backend)
+    return bk.matmul_nladc(x, w, act.adc, bias=b,
+                           thresholds=act.thresholds_for(key))

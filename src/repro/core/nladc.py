@@ -265,10 +265,12 @@ def _nladc_apply(x, thresholds, y_table, grad_name):
 
 def _nladc_fwd_impl(x, thresholds, y_table):
     # Thermometer count: n = sum_k [x > V_k].  This *is* the comparator bank.
-    # searchsorted == the same count but O(log P); both lower identically well,
-    # we keep the comparison form to mirror the hardware (and the Pallas
-    # kernel uses the same form).
-    n = jnp.searchsorted(thresholds, x.astype(thresholds.dtype), side="right")
+    # searchsorted(side="left") == the same count but O(log P): it returns
+    # #{V_k < x}, the STRICT comparison of Eq. (3) — side="right" would count
+    # exact threshold hits as crossed, diverging from the numpy oracle and
+    # the Pallas kernels on exactly-representable inputs (e.g. a quantized
+    # cell state of 0.0 meeting the tanh ramp's 0.0 threshold).
+    n = jnp.searchsorted(thresholds, x.astype(thresholds.dtype), side="left")
     return jnp.take(y_table, n).astype(x.dtype)
 
 
@@ -276,14 +278,22 @@ def _nladc_vjp_fwd(x, thresholds, y_table, grad_name):
     return _nladc_fwd_impl(x, thresholds, y_table), x
 
 
-def _nladc_vjp_bwd(grad_name, res, ct):
-    x = res
+def nladc_ste(grad_name: str, x, ct):
+    """The NL-ADC straight-through backward: ``ct * g'(x)``, gated to the
+    ramp's representable domain (saturation).
+
+    Plain jnp (no custom_vjp) so both the ref path's vjp rule and the
+    Pallas backend's hand-written backwards share the identical formula.
+    """
     spec = F.get(grad_name)
     g = _jnp_grad(spec, x)
-    # Gate the STE outside the ramp's representable domain (saturation).
     in_domain = (x >= spec.x_lo) & (x <= spec.x_hi)
     gx = jnp.where(in_domain, g, 0.0).astype(ct.dtype)
-    return (ct * gx, None, None)
+    return ct * gx
+
+
+def _nladc_vjp_bwd(grad_name, res, ct):
+    return (nladc_ste(grad_name, res, ct), None, None)
 
 
 _nladc_apply.defvjp(_nladc_vjp_fwd, _nladc_vjp_bwd)
@@ -332,9 +342,9 @@ class NLADC:
         return _nladc_apply(x, self.thresholds, self.y_table, self.ramp.name)
 
     def codes(self, x):
-        """Raw thermometer count n (the chip's native output)."""
+        """Raw thermometer count n = #{V_k < x} (the chip's native output)."""
         return jnp.searchsorted(
-            self.thresholds, x.astype(self.thresholds.dtype), side="right"
+            self.thresholds, x.astype(self.thresholds.dtype), side="left"
         )
 
 

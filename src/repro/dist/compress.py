@@ -18,9 +18,12 @@ consumers:
   — what this module pins down is the numerics and the grid agreement.
 * :func:`ef_compress` — error-feedback compression (Seide et al. / EF-SGD):
   the quantization residual is carried to the next step, making the
-  *time-averaged* compressed gradient unbiased.  Not yet threaded through
-  the train loop (the residual is per-host optimizer-adjacent state);
-  exposed and property-tested here for that integration.
+  *time-averaged* compressed gradient unbiased.
+* :func:`compressed_psum_ef` — the two combined: the shared-scale int8
+  all-reduce applied to (gradient + carried residual), returning the new
+  per-device residual.  This is what the ``--grad-comm int8`` train step
+  threads through its optimizer state (the residual is per-replica,
+  optimizer-adjacent state; see ``repro.launch.steps.make_dp_opt_state``).
 
 All functions take a single array or a pytree and preserve structure/dtype.
 """
@@ -117,3 +120,36 @@ def compressed_psum(x: Any, axis_name: Union[str, Tuple[str, ...]]) -> Any:
     and on a single-device axis (the local grid is then the shared grid and
     round-trips within scale/2)."""
     return jax.tree.map(lambda g: _compressed_psum_one(g, axis_name), x)
+
+
+def _compressed_psum_ef_one(x, res, axis_name):
+    corrected = x.astype(jnp.float32) + res
+    blocks, pad = _blockify(corrected)
+    shared = jax.lax.pmax(block_scales(blocks, zero_fill=0.0), axis_name)
+    scales = jnp.where(shared > 0, shared, 1.0)
+    codes = _encode(blocks, scales)
+    total = jax.lax.psum(codes.astype(jnp.int32), axis_name)
+    reduced = dequantize_int8(total, scales, pad, x.shape).astype(x.dtype)
+    # Each device carries ITS OWN quantization error: the reduced value is
+    # the sum of per-device dequantized codes, so the total error is the
+    # sum of these residuals — feeding them back next step makes the
+    # time-averaged reduced gradient unbiased (EF-SGD).
+    local = dequantize_int8(codes, scales, pad, x.shape)
+    return reduced, corrected - local
+
+
+def compressed_psum_ef(x: Any, res: Any,
+                       axis_name: Union[str, Tuple[str, ...]]
+                       ) -> Tuple[Any, Any]:
+    """Shared-scale int8 all-reduce of ``x + res`` with error feedback.
+
+    Per-device code (inside ``shard_map``).  ``res`` is the residual pytree
+    carried from the previous step (:func:`ef_init` for step 0); returns
+    ``(reduced, new_res)``.  Identity: sum_t(reduced_t) + psum(res_T) ==
+    sum_t(psum(x_t)) exactly, so no gradient mass is ever lost."""
+    flat_x, treedef = jax.tree_util.tree_flatten(x)
+    flat_r = treedef.flatten_up_to(res)
+    out = [_compressed_psum_ef_one(a, b, axis_name)
+           for a, b in zip(flat_x, flat_r)]
+    return (treedef.unflatten([o[0] for o in out]),
+            treedef.unflatten([o[1] for o in out]))

@@ -1,3 +1,27 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Public API of the Pallas kernel layer.
+
+Import from here (``from repro.kernels import fused_matmul_nladc``) rather
+than deep-importing ``repro.kernels.ops`` / the per-kernel modules — the
+wrapper signatures are the stable surface; the module layout underneath is
+not.  The jnp oracles stay available as ``repro.kernels.ref`` (they are the
+correctness contract for every kernel and the backward rule of the
+``"pallas"`` analog backend, see :mod:`repro.core.backend`).
+
+Kernels execute in Pallas interpret mode off-TPU (``interpret_mode()``;
+force with ``REPRO_PALLAS_INTERPRET=0/1``).
+"""
+
+from repro.kernels import ref
+from repro.kernels.ops import (analog_tile, flash_decode_int8,
+                               fused_matmul_nladc, interpret_mode,
+                               lstm_gates, nladc)
+
+__all__ = [
+    "analog_tile",
+    "flash_decode_int8",
+    "fused_matmul_nladc",
+    "interpret_mode",
+    "lstm_gates",
+    "nladc",
+    "ref",
+]

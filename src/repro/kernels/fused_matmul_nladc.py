@@ -54,9 +54,14 @@ def _kernel(x_ref, w_ref, thr_ref, b_ref, acc_ref, o_ref, *,
 
 def fused_matmul_nladc_pallas(
         x, w, ramp: Ramp, bias: Optional[jax.Array] = None, *,
+        thresholds: Optional[jax.Array] = None,
         blocks: Tuple[int, int, int] = DEFAULT_BLOCKS,
         interpret: bool = True):
-    """y = NLADC(x @ w + bias).  x: (M, K), w: (K, N) -> (M, N)."""
+    """y = NLADC(x @ w + bias).  x: (M, K), w: (K, N) -> (M, N).
+
+    ``thresholds`` overrides the programmed comparator levels (traced (P,)
+    array; the closed-form decode params stay the ramp's).
+    """
     m_dim, k_dim = x.shape
     k2, n_dim = w.shape
     assert k_dim == k2, (x.shape, w.shape)
@@ -65,7 +70,8 @@ def fused_matmul_nladc_pallas(
     bk = min(blocks[2], k_dim)
     grid = (pl.cdiv(m_dim, bm), pl.cdiv(n_dim, bn), pl.cdiv(k_dim, bk))
     y0, lsb_l, lsb_r, mm = decode_params(ramp)
-    thr = jnp.asarray(ramp.thresholds, jnp.float32)
+    thr = jnp.asarray(ramp.thresholds, jnp.float32) if thresholds is None \
+        else thresholds.astype(jnp.float32)
     has_bias = bias is not None
     if bias is None:
         bias = jnp.zeros((n_dim,), jnp.float32)

@@ -49,9 +49,14 @@ def _kernel(gf_ref, ga_ref, gi_ref, go_ref, c_ref, sthr_ref, tthr_ref,
 
 
 def lstm_gates_pallas(gates, c, sig_ramp: Ramp, tanh_ramp: Ramp, *,
+                      sig_thresholds=None, tanh_thresholds=None,
                       block: Tuple[int, int] = DEFAULT_BLOCK,
                       interpret: bool = True):
-    """gates: (B, 4H) [f|a|i|o], c: (B, H) -> (h', c')."""
+    """gates: (B, 4H) [f|a|i|o], c: (B, H) -> (h', c').
+
+    ``sig_thresholds`` / ``tanh_thresholds`` override the programmed
+    comparator levels (traced (P,) arrays, NL-ADC-aware training noise).
+    """
     b_dim, h4 = gates.shape
     h_dim = h4 // 4
     assert 4 * h_dim == h4
@@ -60,8 +65,10 @@ def lstm_gates_pallas(gates, c, sig_ramp: Ramp, tanh_ramp: Ramp, *,
     grid = (pl.cdiv(b_dim, bb), pl.cdiv(h_dim, bh))
     sp = decode_params(sig_ramp) + (decode_mode(sig_ramp),)
     tp = decode_params(tanh_ramp) + (decode_mode(tanh_ramp),)
-    sthr = jnp.asarray(sig_ramp.thresholds, jnp.float32)
-    tthr = jnp.asarray(tanh_ramp.thresholds, jnp.float32)
+    sthr = jnp.asarray(sig_ramp.thresholds, jnp.float32) \
+        if sig_thresholds is None else sig_thresholds.astype(jnp.float32)
+    tthr = jnp.asarray(tanh_ramp.thresholds, jnp.float32) \
+        if tanh_thresholds is None else tanh_thresholds.astype(jnp.float32)
     gf, ga, gi, go = jnp.split(gates, 4, axis=-1)
     kernel = functools.partial(_kernel, sp=sp, tp=tp)
     gate_spec = pl.BlockSpec((bb, bh), lambda i, j: (i, j))

@@ -42,14 +42,21 @@ def _nladc_kernel(x_ref, thr_ref, o_ref, *, y0, lsb_l, lsb_r, m, mode):
     o_ref[...] = y.astype(o_ref.dtype)
 
 
-def nladc_pallas(x, ramp: Ramp, *, block: Tuple[int, int] = DEFAULT_BLOCK,
+def nladc_pallas(x, ramp: Ramp, *, thresholds=None,
+                 block: Tuple[int, int] = DEFAULT_BLOCK,
                  interpret: bool = True):
-    """2D-tiled elementwise NL-ADC.  x: (M, N) -> (M, N)."""
+    """2D-tiled elementwise NL-ADC.  x: (M, N) -> (M, N).
+
+    ``thresholds`` overrides the programmed comparator levels (a traced
+    (P,) array — NL-ADC-aware training perturbs the ramp per step); the
+    decode stays the ramp's closed form (y-levels are fixed by design).
+    """
     m_dim, n_dim = x.shape
     bm, bn = min(block[0], m_dim), min(block[1], n_dim)
     grid = (pl.cdiv(m_dim, bm), pl.cdiv(n_dim, bn))
     y0, lsb_l, lsb_r, mm = decode_params(ramp)
-    thr = jnp.asarray(ramp.thresholds, jnp.float32)
+    thr = jnp.asarray(ramp.thresholds, jnp.float32) if thresholds is None \
+        else thresholds.astype(jnp.float32)
     kernel = functools.partial(
         _nladc_kernel, y0=y0, lsb_l=lsb_l, lsb_r=lsb_r, m=mm,
         mode=decode_mode(ramp))

@@ -23,11 +23,19 @@ from repro.kernels import lstm_cell as _lc
 from repro.kernels import nladc_kernel as _nk
 
 
-def _interpret() -> bool:
-    env = os.environ.get("REPRO_PALLAS_INTERPRET")
-    if env is not None:
+def interpret_mode() -> bool:
+    """True when the kernels should run in Pallas interpret mode.
+
+    ``REPRO_PALLAS_INTERPRET`` forces it either way; default: interpret
+    everywhere except a real TPU backend.
+    """
+    env = os.environ.get("REPRO_PALLAS_INTERPRET", "")
+    if env:  # empty string == unset (CI matrix legs export "")
         return env not in ("0", "false", "False")
     return jax.default_backend() != "tpu"
+
+
+_interpret = interpret_mode  # backward-compat alias
 
 
 def _pad_to(x, mult, axis):
@@ -39,18 +47,20 @@ def _pad_to(x, mult, axis):
     return jnp.pad(x, widths)
 
 
-def nladc(x, ramp: Ramp, *, block=None):
+def nladc(x, ramp: Ramp, *, thresholds=None, block=None):
     """Elementwise NL-ADC of any-shaped x (flattened to 2D tiles)."""
     shape = x.shape
     flat = x.reshape(-1, shape[-1]) if x.ndim > 1 else x.reshape(1, -1)
     blk = block or _nk.DEFAULT_BLOCK
     m0, n0 = flat.shape
     flat = _pad_to(_pad_to(flat, blk[0], 0), blk[1], 1)
-    out = _nk.nladc_pallas(flat, ramp, block=blk, interpret=_interpret())
+    out = _nk.nladc_pallas(flat, ramp, thresholds=thresholds, block=blk,
+                           interpret=interpret_mode())
     return out[:m0, :n0].reshape(shape)
 
 
-def fused_matmul_nladc(x, w, ramp: Ramp, bias=None, *, blocks=None):
+def fused_matmul_nladc(x, w, ramp: Ramp, bias=None, *, thresholds=None,
+                       blocks=None):
     """NLADC(x @ w + bias) with batch-dims flattened into M."""
     blk = blocks or _fm.DEFAULT_BLOCKS
     lead = x.shape[:-1]
@@ -63,8 +73,9 @@ def fused_matmul_nladc(x, w, ramp: Ramp, bias=None, *, blocks=None):
     bp = None
     if bias is not None:
         bp = _pad_to(bias, blk[1], 0)
-    out = _fm.fused_matmul_nladc_pallas(xf, wp, ramp, bp, blocks=blk,
-                                        interpret=_interpret())
+    out = _fm.fused_matmul_nladc_pallas(xf, wp, ramp, bp,
+                                        thresholds=thresholds, blocks=blk,
+                                        interpret=interpret_mode())
     return out[:m0, :n].reshape(lead + (n,))
 
 
@@ -83,11 +94,12 @@ def analog_tile(x, w, ramp: Ramp, *, input_bits: Optional[int] = None,
         nz = _pad_to(_pad_to(w_noise, blk[2], 0), blk[1], 1)
     out = _cb.analog_tile_pallas(xf, wp, ramp, input_bits=input_bits,
                                  input_clip=input_clip, w_noise=nz,
-                                 blocks=blk, interpret=_interpret())
+                                 blocks=blk, interpret=interpret_mode())
     return out[:m0, :n].reshape(lead + (n,))
 
 
-def lstm_gates(gates, c, sig_ramp: Ramp, tanh_ramp: Ramp, *, block=None):
+def lstm_gates(gates, c, sig_ramp: Ramp, tanh_ramp: Ramp, *,
+               sig_thresholds=None, tanh_thresholds=None, block=None):
     """Fused LSTM tail. gates: (B, 4H), c: (B, H) -> (h', c')."""
     blk = block or _lc.DEFAULT_BLOCK
     b0, h4 = gates.shape
@@ -100,7 +112,9 @@ def lstm_gates(gates, c, sig_ramp: Ramp, tanh_ramp: Ramp, *, block=None):
     gp = jnp.concatenate(parts, axis=-1)
     cp = _pad_to(_pad_to(c, blk[0], 0), blk[1], 1)
     h, c_new = _lc.lstm_gates_pallas(gp, cp, sig_ramp, tanh_ramp,
-                                     block=blk, interpret=_interpret())
+                                     sig_thresholds=sig_thresholds,
+                                     tanh_thresholds=tanh_thresholds,
+                                     block=blk, interpret=interpret_mode())
     return h[:b0, :h0], c_new[:b0, :h0]
 
 
@@ -115,4 +129,4 @@ def flash_decode_int8(q, k8, k_scale, v8, v_scale, length, *, block_s=None):
         k_scale = _pad_to(k_scale, bs, 1)
         v_scale = _pad_to(v_scale, bs, 1)
     return _fd.flash_decode_int8(q, k8, k_scale, v8, v_scale, length,
-                                 block_s=bs, interpret=_interpret())
+                                 block_s=bs, interpret=interpret_mode())

@@ -7,12 +7,14 @@ and reports tokens/s + per-request outputs.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
 import numpy as np
 
 from repro import configs
+from repro.core.backend import backend_names
 from repro.nn.model import build
 from repro.serve.engine import Request, ServingEngine
 
@@ -25,10 +27,15 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--backend", choices=("",) + backend_names(), default="",
+                    help="analog execution backend (default: env or 'ref')")
     args = ap.parse_args()
 
     cfg = configs.get_smoke(args.arch) if args.smoke \
         else configs.get(args.arch)
+    if args.backend:
+        cfg = cfg.replace(analog=dataclasses.replace(cfg.analog,
+                                                     backend=args.backend))
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(0))
     engine = ServingEngine(model, params, max_batch=args.max_batch,

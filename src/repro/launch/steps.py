@@ -54,11 +54,17 @@ def make_dp_train_step(model, optimizer: optim.Adam, mesh,
     * ``psum``         — flat all-reduce (the GSPMD-equivalent baseline);
     * ``hierarchical`` — pod-local reduce-scatter -> cross-pod all-reduce ->
       all-gather (:mod:`repro.dist.collectives`);
-    * ``int8``         — shared-scale int8 wire format
-      (:mod:`repro.dist.compress`).
+    * ``int8``         — shared-scale int8 wire format with **error
+      feedback** (:func:`repro.dist.compress.compressed_psum_ef`): the
+      per-replica quantization residual rides in the optimizer state
+      (``opt_state = {"opt": adam, "ef": residuals}``, leading dim =
+      replica, sharded over the data-like axes — build it with
+      :func:`make_dp_opt_state`), so the time-averaged reduced gradient
+      is unbiased over long runs.
 
-    Params/optimizer state are replicated; the batch is sharded on dim 0
-    over the data-like axes (the caller guarantees divisibility — see
+    Params/optimizer state are replicated (the int8 EF residual is the one
+    per-replica exception); the batch is sharded on dim 0 over the
+    data-like axes (the caller guarantees divisibility — see
     :func:`repro.ft.elastic.plan_for_devices`).  Trace this step *outside*
     any mesh context: inside the shard_map body the model must not emit
     sharding constraints.
@@ -72,11 +78,19 @@ def make_dp_train_step(model, optimizer: optim.Adam, mesh,
     from jax.sharding import PartitionSpec as P
 
     from repro.dist.collectives import grad_allreduce, replica_index
+    from repro.dist.compress import compressed_psum_ef
 
     pod_axis = "pod" if "pod" in mesh.axis_names else None
     axes = (pod_axis, "data") if pod_axis else ("data",)
+    use_ef = grad_comm == "int8"
 
     def local_step(params, opt_state, batch, seed):
+        if use_ef:
+            inner_opt = opt_state["opt"]
+            # local residual shard: (1, ...) -> (...)
+            ef_res = jax.tree.map(lambda r: r[0], opt_state["ef"])
+        else:
+            inner_opt = opt_state
         # Per-replica key: fold in the linearized replica index so model
         # noise is independent across shards (matching the GSPMD step's
         # one-key-over-the-global-batch draws in distribution).
@@ -103,21 +117,49 @@ def make_dp_train_step(model, optimizer: optim.Adam, mesh,
             return obj, m
 
         grads, metrics = jax.grad(loss_fn, has_aux=True)(params)
-        grads = grad_allreduce(grads, mode=grad_comm, data_axis="data",
-                               pod_axis=pod_axis)
+        if use_ef:
+            grads, new_res = compressed_psum_ef(grads, ef_res, axes)
+        else:
+            grads = grad_allreduce(grads, mode=grad_comm, data_axis="data",
+                                   pod_axis=pod_axis)
         metrics = {k: (jax.lax.psum(v, axes) if k == "tokens"
                        else jax.lax.pmean(v, axes) if k == "aux_loss"
                        else jax.lax.psum(v * share, axes))
                    for k, v in metrics.items()}
-        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        new_params, new_opt = optimizer.update(grads, inner_opt, params)
         metrics = dict(metrics, grad_norm=optim.global_norm(grads))
+        if use_ef:
+            new_opt = {"opt": new_opt,
+                       "ef": jax.tree.map(lambda r: r[None], new_res)}
         return new_params, new_opt, metrics
 
+    opt_spec = {"opt": P(), "ef": P(axes)} if use_ef else P()
     return jax.shard_map(
         local_step, mesh=mesh,
-        in_specs=(P(), P(), P(axes), P()),
-        out_specs=(P(), P(), P()),
+        in_specs=(P(), opt_spec, P(axes), P()),
+        out_specs=(P(), opt_spec, P()),
         check_vma=False)
+
+
+def make_dp_opt_state(optimizer: optim.Adam, params, mesh,
+                      *, grad_comm: str = "gspmd"):
+    """Optimizer state for a train step, shaped for the grad-comm mode.
+
+    ``int8`` appends the per-replica error-feedback residual pytree
+    (``{"opt": adam_state, "ef": residuals}``; residual leaves are stacked
+    ``(n_replicas, *param_shape)`` f32, sharded over the data-like axes by
+    the step's in_specs).  Every other mode returns plain Adam state.
+    """
+    opt_state = jax.jit(optimizer.init)(params)
+    if grad_comm != "int8":
+        return opt_state
+    n_rep = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.axis_names:
+            n_rep *= mesh.shape[ax]
+    ef = jax.tree.map(
+        lambda p: jnp.zeros((n_rep,) + p.shape, jnp.float32), params)
+    return {"opt": opt_state, "ef": ef}
 
 
 def make_prefill_step(model) -> Callable:

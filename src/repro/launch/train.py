@@ -25,13 +25,16 @@ import contextlib
 import jax
 import jax.numpy as jnp
 
+import dataclasses
+
 from repro import configs
+from repro.core.backend import backend_names
 from repro.data.pipeline import SyntheticLM
 from repro.dist import sharding as SH
 from repro.ft.elastic import build_mesh, plan_for_devices, reshard
 from repro.launch.mesh import make_host_mesh, make_production_mesh
-from repro.launch.steps import (make_dp_train_step, make_optimizer,
-                                make_train_step)
+from repro.launch.steps import (make_dp_opt_state, make_dp_train_step,
+                                make_optimizer, make_train_step)
 from repro.nn.frontends import audio_frame_stub, vision_patch_stub
 from repro.nn.model import build
 from repro.train.loop import TrainState, Trainer
@@ -52,6 +55,10 @@ def main():
                     help="16x16 mesh (needs 256 devices)")
     ap.add_argument("--grad-comm", choices=GRAD_COMM_MODES, default="gspmd",
                     help="gradient-reduction path (see repro.dist)")
+    ap.add_argument("--backend", choices=("",) + backend_names(), default="",
+                    help="analog execution backend (default: "
+                         "REPRO_ANALOG_BACKEND env or 'ref'); composes "
+                         "with any --grad-comm mode")
     args = ap.parse_args()
     if args.production_mesh and args.grad_comm != "gspmd":
         ap.error("--production-mesh requires --grad-comm gspmd: the "
@@ -60,6 +67,9 @@ def main():
 
     cfg = configs.get_smoke(args.arch) if args.smoke \
         else configs.get(args.arch)
+    if args.backend:
+        cfg = cfg.replace(analog=dataclasses.replace(cfg.analog,
+                                                     backend=args.backend))
     # One optimizer instance (scheduled over --steps) for every grad-comm
     # mode, so gspmd vs psum/hierarchical/int8 differ only in the gradient
     # path, not the LR schedule.
@@ -87,7 +97,10 @@ def main():
 
     key = jax.random.PRNGKey(0)
     params = reshard(model.init(key), mesh, replicate_all=replicate)
-    opt_state = jax.jit(opt.init)(params)
+    # int8 grad-comm carries per-replica error-feedback residuals alongside
+    # the Adam state (see make_dp_opt_state); other modes get plain state.
+    opt_state = make_dp_opt_state(opt, params, mesh,
+                                  grad_comm=args.grad_comm)
 
     pipeline = SyntheticLM(cfg.vocab, args.seq, args.batch)
     batch_sh = None

@@ -212,11 +212,18 @@ def _dequant(q, scale, dtype):
 
 
 def decode_self_attention(p, x, cache, index, *, n_heads, n_kv_heads,
-                          head_dim, rope_theta, window: int = 0):
+                          head_dim, rope_theta, window: int = 0,
+                          analog_backend: str = ""):
     """One-token decode step. ``index`` = absolute position of the new token.
 
     Returns (y, new_cache).  RoPE is applied before caching; for windowed
     attention the cache is a rolling buffer indexed ``index % window``.
+
+    int8 caches attend through the analog backend's fused decode primitive
+    (``analog_backend`` selects it): the ref path is the dequantize-all
+    oracle; the pallas path is the flash-decode kernel that dequantizes
+    per KV tile in VMEM (1 byte/element of HBM cache traffic).  Rolling
+    (windowed) int8 caches keep the dequantize-all fallback.
     """
     b = x.shape[0]
     q = _split_heads(L.dense_apply(p["wq"], x), n_heads, head_dim)
@@ -241,6 +248,17 @@ def decode_self_attention(p, x, cache, index, *, n_heads, n_kv_heads,
             cache["k_scale"], ks, slot, axis=1)
         new_cache["v_scale"] = jax.lax.dynamic_update_slice_in_dim(
             cache["v_scale"], vs, slot, axis=1)
+        if window == 0:
+            from repro.core import backend as BK
+
+            length = jnp.full((b,), index + 1, jnp.int32)
+            out = BK.get_backend(analog_backend).decode_attention_int8(
+                q[:, 0], new_cache["k"], new_cache["k_scale"],
+                new_cache["v"], new_cache["v_scale"], length)
+            out = out[:, None].astype(x.dtype)       # (B, 1, H, D)
+            y = L.dense_apply(p["wo"],
+                              out.reshape(b, 1, n_heads * head_dim))
+            return y, new_cache
         k_att = _dequant(new_cache["k"], new_cache["k_scale"], x.dtype)
         v_att = _dequant(new_cache["v"], new_cache["v_scale"], x.dtype)
     else:

@@ -13,8 +13,11 @@ Faithful to Eq. (4)/(5) and the Methods:
 * hardware-aware training (Alg. 1) falls out of mode='train';
 * the optional projection (PTB model) is a separate crossbar-mapped matmul.
 
-``variant='fused_kernel'`` routes the gate step through the Pallas fused
-LSTM-cell kernel (kernels/lstm_cell.py).
+The elementwise gate tail (5 NL-ADCs + the cell update, Eq. 5 / Fig. S6)
+runs through the analog backend's ``lstm_gates`` primitive —
+``AnalogConfig(backend="pallas")`` fuses it into the Pallas LSTM-cell
+kernel (kernels/lstm_cell.py) while the upstream gate matmul stays one
+wide GEMM.
 """
 
 from __future__ import annotations
@@ -25,9 +28,10 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import backend as BK
 from repro.core import crossbar
 from repro.core.analog_layer import (AnalogActivation, AnalogConfig,
-                                     analog_matmul)
+                                     analog_matmul_act)
 from repro.nn import layers as L
 
 
@@ -68,15 +72,22 @@ def lstm_cell(p, x, h, c, spec: LSTMSpec, acts: Tuple, *, key=None):
         k_mm, k_g = jax.random.split(key)
     xh = jnp.concatenate([x, h], axis=-1)
     # Crossbar MAC: raw (pre-activation) analog dot products.
-    gates = analog_matmul(xh, p["w_gates"], cfg, key=k_mm)
-    hf, ha, hi, ho = jnp.split(gates, 4, axis=-1)
-    # Gate order per Eq. (4): [sigma, tanh, sigma, sigma].
-    hf, ha, hi, ho = sig(hf, key=k_g), tnh(ha, key=k_g), \
-        sig(hi, key=k_g), sig(ho, key=k_g)
-    c_new = hf * c + hi * ha
-    h_new = ho * tnh(c_new, key=k_g)
+    gates = analog_matmul_act(xh, p["w_gates"], cfg, key=k_mm)
+    if cfg.enabled and sig.ramp is not None and tnh.ramp is not None:
+        # Gate order per Eq. (4): [sigma, tanh, sigma, sigma]; the whole
+        # elementwise tail is one backend primitive (fused on pallas).
+        h_new, c_new = BK.get_backend(cfg.backend).lstm_gates(
+            gates, c, sig.adc, tnh.adc,
+            sig_thr=sig.thresholds_for(k_g),
+            tanh_thr=tnh.thresholds_for(k_g))
+    else:
+        hf, ha, hi, ho = jnp.split(gates, 4, axis=-1)
+        hf, ha, hi, ho = sig(hf, key=k_g), tnh(ha, key=k_g), \
+            sig(hi, key=k_g), sig(ho, key=k_g)
+        c_new = hf * c + hi * ha
+        h_new = ho * tnh(c_new, key=k_g)
     if spec.n_proj:
-        h_new = analog_matmul(h_new, p["w_proj"], cfg, key=k_mm)
+        h_new = analog_matmul_act(h_new, p["w_proj"], cfg, key=k_mm)
     return h_new, c_new
 
 
@@ -123,4 +134,4 @@ def classifier_apply(p, xs, spec: LSTMSpec, acts, *, key=None,
     ys, _ = lstm_scan(p["lstm"], xs, spec, acts, key=k_l)
     feats = ys if all_steps else ys[:, -1]
     # The FC layer also lives on-crossbar (digitized, no NL).
-    return analog_matmul(feats, p["fc"]["w"], cfg, key=k_fc)
+    return analog_matmul_act(feats, p["fc"]["w"], cfg, key=k_fc)

@@ -9,7 +9,9 @@ Three variants, chosen per family (DESIGN.md §Arch-applicability):
   activation after the up-projection is NL-ADC'd.
 
 This is the paper's insight mapped to TPU: the activation quantizer fuses
-into the matmul epilogue (kernels/fused_matmul_nladc.py on the kernel path).
+into the matmul epilogue — the gate projection + NL-ADC pair goes through
+the analog backend's ``matmul_nladc`` (one fused Pallas kernel on
+``backend="pallas"``, see :mod:`repro.core.backend`).
 """
 
 from __future__ import annotations
@@ -17,7 +19,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.analog_layer import AnalogActivation, AnalogConfig
+from repro.core.analog_layer import (AnalogActivation, AnalogConfig,
+                                     dense_nladc)
 from repro.nn import layers as L
 
 
@@ -34,9 +37,7 @@ def make_activation(cfg) -> AnalogActivation:
     """The model's NL-ADC'd hidden activation (shared across layers)."""
     a = cfg.analog
     name = a.activation or cfg.hidden_act
-    acfg = AnalogConfig(enabled=a.enabled, adc_bits=a.adc_bits,
-                        input_bits=a.input_bits, mode=a.mode)
-    return AnalogActivation(name, acfg)
+    return AnalogActivation(name, AnalogConfig.from_spec(a))
 
 
 def mlp_init(key, d_model: int, d_ff: int, kind: str, dtype=jnp.float32):
@@ -55,8 +56,8 @@ def mlp_init(key, d_model: int, d_ff: int, kind: str, dtype=jnp.float32):
 
 def mlp_apply(p, x, kind: str, act: AnalogActivation, *, key=None):
     if kind in ("swiglu", "geglu"):
-        gate = act(L.dense_apply(p["wi_gate"], x), key=key)
+        gate = dense_nladc(p["wi_gate"], x, act, key=key)
         up = L.dense_apply(p["wi_up"], x)
         return L.dense_apply(p["wo"], gate * up)
-    h = act(L.dense_apply(p["wi"], x), key=key)
+    h = dense_nladc(p["wi"], x, act, key=key)
     return L.dense_apply(p["wo"], h)

@@ -20,18 +20,15 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.analog_layer import AnalogActivation, AnalogConfig
+from repro.core.analog_layer import (AnalogActivation, AnalogConfig,
+                                     dense_nladc)
 from repro.nn import layers as L
 
 _C = 8.0  # Griffin's fixed gate sharpness
 
 
 def make_gate_act(analog_spec) -> AnalogActivation:
-    acfg = AnalogConfig(enabled=analog_spec.enabled,
-                        adc_bits=analog_spec.adc_bits,
-                        input_bits=analog_spec.input_bits,
-                        mode=analog_spec.mode)
-    return AnalogActivation("sigmoid", acfg)
+    return AnalogActivation("sigmoid", AnalogConfig.from_spec(analog_spec))
 
 
 def rglru_init(key, d_model: int, width: int, conv_width: int = 4,
@@ -70,6 +67,18 @@ def _gate_matmul(w, u):
     ub = u.reshape(lead + (nb, bw))
     out = jnp.einsum("...nw,nwv->...nv", ub, w.astype(u.dtype))
     return out.reshape(lead + (nb * bw,))
+
+
+def _gated(w, u, gate_act: AnalogActivation, key):
+    """Gate projection + sigmoid NL-ADC through the analog backend.
+
+    Dense gates fuse matmul+quantizer into one backend primitive; the
+    block-diagonal (per-head) gates keep the batched einsum and quantize
+    its output elementwise (still backend-dispatched via the activation).
+    """
+    if isinstance(w, dict):
+        return dense_nladc(w, u, gate_act, key=key)
+    return gate_act(_gate_matmul(w, u), key=key)
 
 
 def _log_decay(p, r):
@@ -126,8 +135,8 @@ def rglru_apply(p, x, gate_act: AnalogActivation, hidden_act, *, key=None,
     """Full-sequence forward.  x: (B, S, d) -> (B, S, d)."""
     u = L.dense_apply(p["wx"], x)
     u = _causal_conv(u, p["conv"])
-    r = gate_act(_gate_matmul(p["wa"], u), key=key)
-    i = gate_act(_gate_matmul(p["wi"], u), key=key)
+    r = _gated(p["wa"], u, gate_act, key)
+    i = _gated(p["wi"], u, gate_act, key)
     log_a = _log_decay(p, r)
     a = jnp.exp(log_a)
     b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9)) \
@@ -161,8 +170,8 @@ def rglru_decode(p, x, state, gate_act: AnalogActivation, hidden_act,
     uc = jnp.sum(hist.astype(jnp.float32)
                  * w[::-1][None, :, :].astype(jnp.float32),
                  axis=1).astype(u.dtype)
-    r = gate_act(_gate_matmul(p["wa"], uc), key=key)
-    i = gate_act(_gate_matmul(p["wi"], uc), key=key)
+    r = _gated(p["wa"], uc, gate_act, key)
+    i = _gated(p["wi"], uc, gate_act, key)
     lam = jax.nn.softplus(p["lam"].astype(jnp.float32))
     a = jnp.exp(-_C * lam * r.astype(jnp.float32))
     h = a * state["h"] + jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-9)) \

@@ -28,11 +28,7 @@ from repro.nn import layers as L
 
 
 def make_dt_act(analog_spec) -> AnalogActivation:
-    acfg = AnalogConfig(enabled=analog_spec.enabled,
-                        adc_bits=analog_spec.adc_bits,
-                        input_bits=analog_spec.input_bits,
-                        mode=analog_spec.mode)
-    return AnalogActivation("softplus", acfg)
+    return AnalogActivation("softplus", AnalogConfig.from_spec(analog_spec))
 
 
 def ssd_init(key, d_model: int, *, expand: int = 2, headdim: int = 64,

@@ -35,11 +35,6 @@ from repro.nn import ssd as SSD
 from repro.nn.mlp import make_activation, mlp_apply, mlp_init, mlp_type_for
 
 
-def _analog_cfg(spec) -> AnalogConfig:
-    return AnalogConfig(enabled=spec.enabled, adc_bits=spec.adc_bits,
-                        input_bits=spec.input_bits, mode=spec.mode)
-
-
 class LM:
     """A decoder-only language model for one :class:`ModelConfig`."""
 
@@ -50,7 +45,7 @@ class LM:
             else jnp.float32
         self.mlp_kind = mlp_type_for(cfg)
         self.act = make_activation(cfg)                     # hidden NL-ADC
-        acfg = _analog_cfg(cfg.analog)
+        acfg = AnalogConfig.from_spec(cfg.analog)
         self.sigmoid_act = AnalogActivation("sigmoid", acfg)
         self.softplus_act = AnalogActivation("softplus", acfg)
         self.silu_act = AnalogActivation("silu", acfg)
@@ -410,7 +405,8 @@ class LM:
         y, new = A.decode_self_attention(
             p["attn"], h, cache_l, index, n_heads=cfg.n_heads,
             n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
-            rope_theta=cfg.rope_theta, window=window)
+            rope_theta=cfg.rope_theta, window=window,
+            analog_backend=cfg.analog.backend)
         x = x + y
         h = L.rmsnorm_apply(p["norm2"], x, cfg.norm_eps)
         if kind == "moe_attn":

@@ -10,9 +10,14 @@ Production shape (vLLM-style, sized down to JAX-native primitives):
   batching); finished slots (EOS / max_tokens) free immediately;
 * per-slot position offsets let requests of different lengths coexist.
 
-Prefill-cache-fill uses the decode path token-by-token via lax.scan (exact
-w.r.t. the cache layout, including rolling windows); the chunked-prefill
-fast path is a §Perf iteration.
+Prefill-cache-fill uses the decode path token-by-token via a **jitted
+lax.scan** (exact w.r.t. the cache layout, including rolling windows, and
+one compile per prompt length instead of one eager dispatch per token); the
+chunked-prefill fast path is a §Perf iteration.  Inside the decode step the
+attention/recurrence primitives dispatch through the model's configured
+analog backend (``AnalogConfig.backend``) — with ``kv_cache_dtype="int8"``
+and ``backend="pallas"`` the batched decode hot loop runs the fused
+flash-decode kernel.
 """
 
 from __future__ import annotations
@@ -99,11 +104,14 @@ class ServingEngine:
             self._merge_slot(mini_state, slot)
 
     def _fill(self, state, prompt):
-        for t in prompt[:-1]:
-            tok = jnp.full((1, 1), int(t), jnp.int32)
-            _, state = self.model.decode_step(self.params, state, tok)
-        # last prompt token decoded in the shared batch step
-        return state
+        # Jitted scan over the prompt (minus the last token, which decodes
+        # in the shared batch step).  One compile per distinct prompt
+        # length; standard bucketing applies for production traffic.
+        if len(prompt) <= 1:
+            return state
+        tokens = jnp.asarray(np.asarray(prompt), jnp.int32)
+        return self._jit_prefill(self.params, state, tokens,
+                                 length=len(prompt) - 1)
 
     def _merge_slot(self, mini_state, slot):
         """Copy the single-request cache into batch slot ``slot``."""

@@ -1,0 +1,279 @@
+"""ref-vs-pallas analog backend parity: every family, every AnalogConfig
+mode, outputs AND straight-through gradients.
+
+Outputs must be quantization-exact: the two backends may differ only in the
+floating-point arithmetic of the decode (closed-form vs table lookup) and
+the matmul accumulation, both far below the ramp LSB — so we assert
+max|diff| < LSB/2, which implies **bitwise-equal ADC codes** (a single code
+flip shifts the output by a full LSB).  Codes are additionally compared
+bitwise where the raw thermometer count is recoverable.
+
+Runs in Pallas interpret mode on CPU (the kernels' correctness-validation
+mode); on a TPU host the same tests exercise the compiled kernels.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import backend as BK
+from repro.core.analog_layer import (AnalogActivation, AnalogConfig,
+                                     analog_matmul_act, dense_nladc)
+from repro.core.nladc import NLADC, build_ramp
+
+MODES = ["exact", "train", "infer"]
+BACKENDS = ["ref", "pallas"]
+
+
+def _cfg(mode, be, **kw):
+    kw.setdefault("input_bits", None)
+    return AnalogConfig(enabled=True, adc_bits=5, mode=mode, backend=be, **kw)
+
+
+def _lsb(act: AnalogActivation) -> float:
+    return act.ramp.lsb
+
+
+def _key(mode):
+    return jax.random.PRNGKey(3) if mode != "exact" else None
+
+
+# ---------------------------------------------------------------------------
+# Primitive-level parity (bitwise codes)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["sigmoid", "tanh", "softplus", "gelu",
+                                  "swish", "selu"])
+def test_elementwise_codes_bitwise(name, rng):
+    """Same input -> the two backends produce bitwise-identical ADC codes."""
+    from repro.kernels import nladc as k_nladc
+
+    ramp = build_ramp(name, 5)
+    adc = NLADC(ramp)
+    x = jnp.asarray(rng.normal(0, 2, (37, 65)).astype(np.float32))
+    ref_codes = np.asarray(adc.codes(x))
+    # recover kernel codes from the closed-form output
+    from repro.kernels.ref import decode_mode, decode_params, MODE_AFFINE
+
+    y = np.asarray(k_nladc(x, ramp), np.float64)
+    y0, lsb_l, lsb_r, m = decode_params(ramp)
+    if decode_mode(ramp) == MODE_AFFINE:
+        got_codes = np.rint((y - y0) / lsb_l).astype(np.int64)
+        np.testing.assert_array_equal(got_codes, ref_codes)
+    else:
+        # split decodes are not code-injective; assert value equality at
+        # sub-LSB tolerance instead (implies equal |n - m|)
+        want = np.asarray(NLADC(ramp)(x), np.float64)
+        assert np.max(np.abs(y - want)) < ramp.lsb / 2
+
+
+def test_fused_matmul_codes_bitwise(rng):
+    """Ref codes of the accumulator == codes recovered from the kernel."""
+    from repro.kernels import fused_matmul_nladc as k_mm
+    from repro.kernels.ref import decode_params
+
+    ramp = build_ramp("sigmoid", 5)
+    adc = NLADC(ramp)
+    x = jnp.asarray(rng.normal(0, 0.4, (33, 40)).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 0.2, (40, 24)).astype(np.float32))
+    acc = jnp.matmul(x, w)
+    ref_codes = np.asarray(adc.codes(acc))
+    y0, lsb_l, _, _ = decode_params(ramp)
+    y = np.asarray(k_mm(x, w, ramp), np.float64)
+    got_codes = np.rint((y - y0) / lsb_l).astype(np.int64)
+    mismatch = np.mean(got_codes != ref_codes)
+    # accumulation-order fp differences may flip an accumulator sitting
+    # within float-eps of a threshold; anything beyond that is a bug
+    assert mismatch == 0.0, f"{mismatch:.2%} code mismatches"
+
+
+# ---------------------------------------------------------------------------
+# Layer-level parity over all AnalogConfig modes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", MODES)
+def test_dense_nladc_parity_and_grads(mode, rng):
+    x = jnp.asarray(rng.normal(0, 0.4, (9, 40)).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 0.2, (40, 24)).astype(np.float32))
+    outs, grads = {}, {}
+    for be in BACKENDS:
+        act = AnalogActivation("swish", _cfg(mode, be))
+
+        def f(x_, w_):
+            return jnp.sum(dense_nladc({"w": w_}, x_, act,
+                                       key=_key(mode)) ** 2)
+
+        outs[be] = dense_nladc({"w": w}, x, act, key=_key(mode))
+        grads[be] = jax.grad(f, argnums=(0, 1))(x, w)
+        lsb = _lsb(act)
+    assert float(jnp.max(jnp.abs(outs["ref"] - outs["pallas"]))) < lsb / 2
+    for a, b in zip(grads["ref"], grads["pallas"]):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_analog_matmul_act_parity(mode, rng):
+    """The crossbar path (PWM inputs + weight noise + fused NL-ADC)."""
+    x = jnp.asarray(rng.normal(0, 0.4, (7, 24)).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 0.2, (24, 16)).astype(np.float32))
+    outs = {}
+    for be in BACKENDS:
+        cfg = _cfg(mode, be, input_bits=5)
+        act = AnalogActivation("tanh", cfg)
+        outs[be] = analog_matmul_act(x, w, cfg, key=_key(mode),
+                                     activation=act)
+        lsb = _lsb(act)
+    assert float(jnp.max(jnp.abs(outs["ref"] - outs["pallas"]))) < lsb / 2
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_lstm_family_parity_and_grads(mode):
+    from repro.nn import lstm as NN
+
+    ys, gs, lsb = {}, {}, None
+    for be in BACKENDS:
+        spec = NN.LSTMSpec(
+            n_in=10, n_hidden=12,
+            analog=AnalogConfig(enabled=True, adc_bits=5, input_bits=5,
+                                mode=mode, backend=be))
+        acts = NN.make_gate_acts(spec.analog)
+        lsb = _lsb(acts[0])
+        p = NN.lstm_init(jax.random.PRNGKey(1), spec)
+        xs = 0.5 * jax.random.normal(jax.random.PRNGKey(2), (4, 5, 10))
+        ys[be], _ = NN.lstm_scan(p, xs, spec, acts, key=_key(mode))
+
+        def loss(pp):
+            out, _ = NN.lstm_scan(pp, xs, spec, acts, key=_key(mode))
+            return jnp.sum(out ** 2)
+
+        gs[be] = jax.grad(loss)(p)
+    assert float(jnp.max(jnp.abs(ys["ref"] - ys["pallas"]))) < lsb / 2
+    for a, b in zip(jax.tree.leaves(gs["ref"]), jax.tree.leaves(gs["pallas"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Full-model family parity (tiny smoke configs, f32, NL-ADC enabled)
+# ---------------------------------------------------------------------------
+
+FAMILY_ARCHS = ["qwen2.5-3b", "deepseek-moe-16b", "recurrentgemma-9b",
+                "mamba2-370m", "whisper-base"]
+
+
+def _family_forward(arch, mode, be):
+    from repro import configs
+    from repro.configs.base import AnalogSpec
+    from repro.nn.frontends import audio_frame_stub
+    from repro.nn.model import build
+
+    cfg = configs.get_smoke(arch).replace(
+        dtype="float32", capacity_factor=8.0,
+        analog=AnalogSpec(enabled=True, adc_bits=5, mode=mode, backend=be))
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+    extra = None
+    if cfg.family == "encdec":
+        extra = {"frames": audio_frame_stub(jax.random.PRNGKey(2), 2,
+                                            cfg.enc_len, cfg.d_model,
+                                            dtype=jnp.float32)}
+    return model.forward(params, tokens, extra, key=_key(mode)), model
+
+
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
+def test_model_family_parity(arch):
+    """Every nn/ family reaches the fused kernels through the dispatch and
+    matches the ref backend to sub-LSB (= quantization-exact)."""
+    out_ref, model = _family_forward(arch, "exact", "ref")
+    out_pal, _ = _family_forward(arch, "exact", "pallas")
+    lsb = model.act.ramp.lsb
+    d = float(jnp.max(jnp.abs(out_ref - out_pal)))
+    # logits are a linear readout of NL-ADC'd activations: allow a few
+    # output-LSB-scaled units of accumulated float slack, far below one
+    # quantization step's effect on any single activation
+    assert d < lsb / 2, (arch, d, lsb)
+
+
+@pytest.mark.parametrize("mode", ["train", "infer"])
+def test_model_modes_parity(mode):
+    """Noise modes draw identically on both backends (shared orchestration)."""
+    out_ref, model = _family_forward("qwen2.5-3b", mode, "ref")
+    out_pal, _ = _family_forward("qwen2.5-3b", mode, "pallas")
+    lsb = model.act.ramp.lsb
+    assert float(jnp.max(jnp.abs(out_ref - out_pal))) < lsb / 2
+
+
+def test_model_train_grad_parity():
+    """STE gradients through a whole train-mode model match across backends."""
+    from repro import configs
+    from repro.configs.base import AnalogSpec
+    from repro.nn.model import build
+
+    grads = {}
+    for be in BACKENDS:
+        cfg = configs.get_smoke("qwen2.5-3b").replace(
+            dtype="float32",
+            analog=AnalogSpec(enabled=True, adc_bits=5, mode="train",
+                              backend=be))
+        model = build(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        batch = {
+            "tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                         cfg.vocab),
+            "labels": jax.random.randint(jax.random.PRNGKey(2), (2, 8), 0,
+                                         cfg.vocab),
+        }
+
+        def loss(p):
+            total, _ = model.loss(p, batch, key=jax.random.PRNGKey(3),
+                                  remat=False)
+            return total
+
+        grads[be] = jax.grad(loss)(params)
+    for a, b in zip(jax.tree.leaves(grads["ref"]),
+                    jax.tree.leaves(grads["pallas"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Decode path (int8 KV flash decode through the dispatch)
+# ---------------------------------------------------------------------------
+
+def test_int8_decode_backend_parity():
+    from repro import configs
+    from repro.configs.base import AnalogSpec
+    from repro.nn.model import build
+
+    outs = {}
+    for be in BACKENDS:
+        cfg = configs.get_smoke("qwen2.5-3b").replace(
+            dtype="float32", kv_cache_dtype="int8",
+            analog=AnalogSpec(enabled=False, backend=be))
+        model = build(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                  cfg.vocab)
+        state = model.init_decode_state(2, 32)
+        logs = []
+        for t in range(8):
+            l, state = model.decode_step(params, state, toks[:, t:t + 1])
+            logs.append(l)
+        outs[be] = jnp.concatenate(logs, axis=1)
+    rel = float(jnp.max(jnp.abs(outs["ref"] - outs["pallas"]))) \
+        / float(jnp.max(jnp.abs(outs["ref"])))
+    assert rel < 1e-5, rel
+
+
+def test_env_override_selects_backend(monkeypatch):
+    from repro.core.backend import PallasBackend, get_backend, resolve_backend
+
+    monkeypatch.setenv("REPRO_ANALOG_BACKEND", "pallas")
+    assert resolve_backend("") == "pallas"
+    assert isinstance(get_backend(""), PallasBackend)
+    assert resolve_backend("ref") == "ref"
+    monkeypatch.delenv("REPRO_ANALOG_BACKEND")
+    assert resolve_backend("") == "ref"
