@@ -1,9 +1,19 @@
 """Fig. 3a + Fig. S7: programmed transfer functions, INL with/without
-one-point calibration (64 columns per block, write sigma = 2.67 uS)."""
+one-point calibration (64 columns per block, write sigma = 2.67 uS).
+
+A thin sweep over ``repro.core.device`` models: each column is one
+:meth:`DeviceModel.program` call under the ``paper-infer`` preset, with the
+"raw" arm simply switching the ``Calibration`` stage off.  Seeded
+numerical parity with the pre-device-API hand-wired
+``program_ramp(..., calibrate=...)`` sequence is pinned by
+``tests/test_device.py``.
+"""
+
+import dataclasses
 
 import numpy as np
 
-from repro.core.calibration import program_ramp
+from repro.core.device import Calibration, get_device
 from repro.core.nladc import build_ramp
 
 FUNCS = ("sigmoid", "tanh", "softplus", "softsign", "elu", "selu")
@@ -11,6 +21,9 @@ FUNCS = ("sigmoid", "tanh", "softplus", "softsign", "elu", "selu")
 
 def run(quick=True):
     n_cols = 16 if quick else 64
+    calibrated_dev = get_device("paper-infer")
+    raw_dev = dataclasses.replace(calibrated_dev, name="paper-infer-raw",
+                                  calibration=Calibration(one_point=False))
     print("=== Fig. 3a: mean INL (LSB) over programmed columns ===")
     print(f"{'fn':10} {'raw':>8} {'calibrated':>11} {'improvement':>12}")
     out = {}
@@ -18,10 +31,10 @@ def run(quick=True):
         ramp = build_ramp(name, 5)
         raw, cal = [], []
         for c in range(n_cols):
-            rng = np.random.default_rng(c)
-            raw.append(program_ramp(ramp, rng, calibrate=False).inl()[0])
-            rng = np.random.default_rng(c)
-            cal.append(program_ramp(ramp, rng, calibrate=True).inl()[0])
+            raw.append(raw_dev.program(
+                ramp, np.random.default_rng(c)).inl()[0])
+            cal.append(calibrated_dev.program(
+                ramp, np.random.default_rng(c)).inl()[0])
         r, c_ = float(np.mean(raw)), float(np.mean(cal))
         print(f"{name:10} {r:8.3f} {c_:11.3f} {r - c_:11.3f}")
         out[name] = dict(raw=r, calibrated=c_)

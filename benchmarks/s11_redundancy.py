@@ -1,27 +1,33 @@
-"""Supp. S11 / Fig. S12: best-of-R redundancy reduces programmed INL."""
+"""Supp. S11 / Fig. S12: best-of-R redundancy reduces programmed INL.
+
+A thin sweep over ``repro.core.device`` models: one ``paper-infer``-derived
+preset per redundancy level (``Redundancy(n_copies=R)``), each chip one
+:meth:`DeviceModel.program` call.  Seeded parity with the pre-device-API
+``program_ramp`` / ``program_with_redundancy`` sequence is pinned by
+``tests/test_device.py``.
+"""
 
 import numpy as np
 
-from repro.core.calibration import program_ramp, program_with_redundancy
+from repro.core.device import Redundancy, get_device
 from repro.core.nladc import build_ramp
+
+COPIES = (1, 2, 4)
 
 
 def run(quick=True):
     n_chips = 12 if quick else 48
+    devs = {r: get_device("paper-infer").replace(
+        name=f"paper-infer-R{r}", redundancy=Redundancy(n_copies=r))
+        for r in COPIES}
     print("=== Supp. S11: redundancy (best-of-R) mean INL (LSB) ===")
     out = {}
     for name in ("gelu", "swish", "sigmoid"):
         ramp = build_ramp(name, 5)
         rows = {}
-        for copies in (1, 2, 4):
-            inls = []
-            for c in range(n_chips):
-                rng = np.random.default_rng(7000 + c)
-                if copies == 1:
-                    inls.append(program_ramp(ramp, rng).inl()[0])
-                else:
-                    inls.append(program_with_redundancy(
-                        ramp, rng, copies=copies).inl()[0])
+        for copies, dev in devs.items():
+            inls = [dev.program(ramp, np.random.default_rng(7000 + c)).inl()[0]
+                    for c in range(n_chips)]
             rows[copies] = float(np.mean(inls))
         print(f"{name:8} R=1: {rows[1]:.3f}  R=2: {rows[2]:.3f}  "
               f"R=4: {rows[4]:.3f}")

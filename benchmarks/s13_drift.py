@@ -3,6 +3,13 @@
 Reference-curve drift model (Eq. S8); validates the paper's qualitative
 findings: (a) drift on the NL-ADC alone is negligible; (b) drift on weights
 degrades accuracy over time; (c) larger training noise restores robustness.
+
+Rewritten over ``repro.core.device``: training noise is a ``TrainNoise``
+stage on a custom DeviceModel, and each evaluation time point is the
+``paper`` preset aged with ``DeviceModel.with_drift(t)`` whose
+``age_params`` drifts the weight matrices (seeded parity with the old
+hand-wired ``DriftModel.drift_weights`` tree.map is pinned by
+``tests/test_device.py``).
 """
 
 import jax
@@ -10,19 +17,63 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.analog_layer import AnalogConfig
-from repro.core.crossbar import DriftModel
-from repro.data.pipeline import SyntheticKWS
+from repro.core.device import ReadNoise, TrainNoise, get_device
 from repro.nn import lstm as NN
-from benchmarks.fig4d_kws import train_eval, _make
+
+DRIFT_TIMES_S = (60.0, 1e3, 1e5, 5e5)
 
 
-def _eval_with_drift(params, spec, data, t_s, dm, rng):
+def _train_device(sigma_us: float):
+    """The paper's step-time model with Alg. 1 noise set to ``sigma_us``."""
+    return get_device("paper").replace(
+        name=f"paper-train{sigma_us:g}uS",
+        train=TrainNoise(sigma_us=sigma_us), read=ReadNoise())
+
+
+def train_kws(data, epochs: int, device, n_classes: int = 12):
+    """The paper's Alg. 1 KWS training recipe under ``device``.
+
+    Shared by this benchmark and ``benchmarks.device_sweep`` so the recipe
+    (Adam 3e-3, batch-64 permutation epochs, per-step noise keys) cannot
+    diverge between them.  Returns the trained params.
+    """
+    from repro.train import optim
+
+    spec = NN.LSTMSpec(
+        n_in=40, n_hidden=32,
+        analog=AnalogConfig(enabled=True, adc_bits=5, input_bits=5,
+                            mode="train", device=device))
+    acts = NN.make_gate_acts(spec.analog)
+    params = NN.classifier_init(jax.random.PRNGKey(0), spec, n_classes)
+    opt = optim.Adam(lr=3e-3)
+    state = opt.init(params)
+
+    def loss_fn(p, xb, yb, key):
+        logits = NN.classifier_apply(p, xb, spec, acts, key=key)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, yb[:, None], 1))
+
+    @jax.jit
+    def step(p, s, xb, yb, key):
+        _, g = jax.value_and_grad(loss_fn)(p, xb, yb, key)
+        return opt.update(g, s, p)
+
+    (xtr, ytr), _ = data
+    key = jax.random.PRNGKey(1)
+    for ep in range(epochs):
+        perm = np.random.default_rng(ep).permutation(len(xtr))
+        for i in range(0, len(xtr) - 63, 64):
+            idx = perm[i:i + 64]
+            key, k = jax.random.split(key)
+            params, state = step(params, state, jnp.asarray(xtr[idx]),
+                                 jnp.asarray(ytr[idx]), k)
+    return params
+
+
+def _eval_with_drift(params, spec, data, aged_dev, rng):
     (_, _), (xte, yte) = data
     acts = NN.make_gate_acts(spec.analog)
-    drifted = jax.tree.map(
-        lambda w: jnp.asarray(
-            dm.drift_weights(np.asarray(w, np.float64), t_s, rng)
-            .astype(np.float32)) if w.ndim >= 2 else w, params)
+    drifted = aged_dev.age_params(params, rng)
 
     @jax.jit
     def predict(p, xb):
@@ -35,60 +86,26 @@ def _eval_with_drift(params, spec, data, t_s, dm, rng):
 def run(quick=True):
     n_train = 512 if quick else 2048
     epochs = 3 if quick else 10
+    from repro.data.pipeline import SyntheticKWS
+
     data = SyntheticKWS(seed=0).splits(n_train, 256)
-    dm = DriftModel()
     print("=== Supp. S13: accuracy vs drift time (synthetic KWS) ===")
 
     # train once with standard (5 uS) and larger (8 uS) training noise
-    import repro.core.crossbar as CB
-    from repro.nn.lstm import LSTMSpec
-
     out = {}
     for label, sigma in (("train 5uS", 5.0), ("train 8uS", 8.0)):
-        spec_t = NN.LSTMSpec(
-            n_in=40, n_hidden=32,
-            analog=AnalogConfig(enabled=True, adc_bits=5, input_bits=5,
-                                mode="train",
-                                train_sigma_w=sigma / CB.GAMMA_US,
-                                ramp_train_sigma_us=sigma))
-        acts = NN.make_gate_acts(spec_t.analog)
-        params = NN.classifier_init(jax.random.PRNGKey(0), spec_t, 12)
-        from repro.train import optim
-
-        opt = optim.Adam(lr=3e-3)
-        state = opt.init(params)
-
-        def loss_fn(p, xb, yb, key):
-            logits = NN.classifier_apply(p, xb, spec_t, acts, key=key)
-            logp = jax.nn.log_softmax(logits)
-            return -jnp.mean(jnp.take_along_axis(logp, yb[:, None], 1))
-
-        @jax.jit
-        def step(p, s, xb, yb, key):
-            l, g = jax.value_and_grad(loss_fn)(p, xb, yb, key)
-            return *opt.update(g, s, p), l
-
-        (xtr, ytr), _ = data
-        key = jax.random.PRNGKey(1)
-        for ep in range(epochs):
-            perm = np.random.default_rng(ep).permutation(len(xtr))
-            for i in range(0, len(xtr) - 63, 64):
-                idx = perm[i:i + 64]
-                key, k = jax.random.split(key)
-                params, state, _ = step(params, state, jnp.asarray(xtr[idx]),
-                                        jnp.asarray(ytr[idx]), k)
-
+        params = train_kws(data, epochs, _train_device(sigma))
         spec_e = NN.LSTMSpec(n_in=40, n_hidden=32,
                              analog=AnalogConfig(enabled=True, adc_bits=5,
                                                  input_bits=5, mode="exact"))
         accs = []
-        times = [60.0, 1e3, 1e5, 5e5]
-        for t in times:
+        for t in DRIFT_TIMES_S:
+            aged = get_device("paper").with_drift(t)
             rng = np.random.default_rng(int(t))
-            accs.append(_eval_with_drift(params, spec_e, data, t, dm, rng))
+            accs.append(_eval_with_drift(params, spec_e, data, aged, rng))
         print(f"  {label}: " + "  ".join(
-            f"t={t:.0e}s:{a:.3f}" for t, a in zip(times, accs)))
-        out[label] = dict(zip([f"{t:.0e}" for t in times], accs))
+            f"t={t:.0e}s:{a:.3f}" for t, a in zip(DRIFT_TIMES_S, accs)))
+        out[label] = dict(zip([f"{t:.0e}" for t in DRIFT_TIMES_S], accs))
     d5 = out["train 5uS"]
     d8 = out["train 8uS"]
     print(f"  drop@5e5s: 5uS {d5['6e+01'] - d5['5e+05']:+.3f}, "

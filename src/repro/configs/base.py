@@ -29,6 +29,12 @@ class AnalogSpec:
     # "ref"); "ref" = jnp simulation; "pallas" = fused Pallas kernels
     # (repro.core.backend).
     backend: str = ""
+    # Device-model preset name (repro.core.device registry: "ideal",
+    # "paper", "paper-infer", "aged-1day", "stressed", or custom-registered).
+    # "" = auto (REPRO_DEVICE env, else "paper").  Kept as a *name* here so
+    # ModelConfig stays a plain published-numbers record; AnalogConfig
+    # resolves it to the DeviceModel tree.
+    device: str = ""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -154,10 +160,10 @@ class ModelConfig:
             mlp = (self.n_experts + self.n_shared_experts) * 3 * d * ff \
                 + d * self.n_experts
         if self.family == "ssm":
+            # in_proj packs [z, x] (2*din) plus B/C/dt rows (d_state- and
+            # head-sized, negligible at these widths); out_proj din*d;
+            # per-head dt_bias/a_log/d_skip ~ din/headdim.
             din = self.ssm_expand * d
-            blk = d * (2 * din + 2 * self.ssm_state *
-                       (din // self.ssm_headdim) // max(din // self.ssm_headdim, 1)) \
-                + din * d
             blk = 2 * d * din + din * d + d * (din // self.ssm_headdim)
             return emb + self.n_layers * blk
         if self.family == "hybrid":

@@ -1,17 +1,25 @@
 """repro.core — the paper's contribution: NL-ADC in-memory nonlinear ADC."""
 
-from repro.core import backend, calibration, crossbar, functions, hwcost, nladc
+from repro.core import (backend, calibration, crossbar, device, functions,
+                        hwcost, nladc)
 from repro.core.analog_layer import (AnalogActivation, AnalogConfig, EXACT,
                                      analog_matmul_act, dense_nladc)
 from repro.core.backend import get_backend, register_backend
+from repro.core.device import (Calibration, DeviceModel, Drift, ReadNoise,
+                               Redundancy, StuckAt, TrainNoise, WriteNoise,
+                               device_from_dict, device_names, get_device,
+                               register_device, resolve_device)
 from repro.core.nladc import (NLADC, Ramp, build_nonmonotonic_ramp, build_ramp,
                               inl_lsb, nladc_reference, pwm_quantize,
                               transfer_mse)
 
 __all__ = [
-    "AnalogActivation", "AnalogConfig", "EXACT", "NLADC", "Ramp",
-    "analog_matmul_act", "backend", "build_nonmonotonic_ramp", "build_ramp",
-    "calibration", "crossbar", "dense_nladc", "functions", "get_backend",
-    "hwcost", "inl_lsb", "nladc", "nladc_reference", "pwm_quantize",
-    "register_backend", "transfer_mse",
+    "AnalogActivation", "AnalogConfig", "Calibration", "DeviceModel",
+    "Drift", "EXACT", "NLADC", "Ramp", "ReadNoise", "Redundancy", "StuckAt",
+    "TrainNoise", "WriteNoise", "analog_matmul_act", "backend",
+    "build_nonmonotonic_ramp", "build_ramp", "calibration", "crossbar",
+    "dense_nladc", "device", "device_from_dict", "device_names", "functions",
+    "get_backend", "get_device", "hwcost", "inl_lsb", "nladc",
+    "nladc_reference", "pwm_quantize", "register_backend", "register_device",
+    "resolve_device", "transfer_mse",
 ]

@@ -13,8 +13,16 @@ Three operating modes:
                noise is a constant w.r.t. W, so autodiff does exactly
                Alg. 1's update rule); activations are NL-ADC-quantized with a
                straight-through g' backward;
-* ``infer``  — deployment simulation: per-chip write noise (drawn once,
-               outside the step) + per-batch read noise + NL-ADC.
+* ``infer``  — deployment simulation: the device model's build stage
+               (programmed ramps: write noise + redundancy + calibration +
+               drift, drawn once, host-side) + per-batch read noise + NL-ADC.
+
+WHICH noise, and how strong, is no longer a set of flat sigma floats here:
+``AnalogConfig.device`` holds a composable, serializable
+:class:`repro.core.device.DeviceModel` (preset name or custom tree), and
+every sigma consumed below is an accessor on that model.  The legacy knobs
+``train_sigma_w`` / ``read_sigma_w`` / ``ramp_train_sigma_us`` map to the
+``TrainNoise`` / ``ReadNoise`` stages (see README "Device models").
 
 This module is *orchestration only*: mode logic, quantization, and noise
 draws are shared code, while the compute primitives (elementwise NL-ADC,
@@ -34,35 +42,81 @@ import jax.numpy as jnp
 
 from repro.core import backend as BK
 from repro.core import crossbar
+from repro.core.device import IDEAL, DeviceModel, resolve_device
 from repro.core.nladc import NLADC, Ramp, build_ramp, pwm_quantize
+
+# Removed knobs -> complete migration instruction (used for actionable
+# error messages below; each hint stands on its own).
+_REMOVED_KNOBS = {
+    "train_sigma_w": "removed by the repro.core.device redesign; pass "
+                     "device=DeviceModel(train=TrainNoise(sigma_us=...))",
+    "read_sigma_w": "removed by the repro.core.device redesign; pass "
+                    "device=DeviceModel(read=ReadNoise(sigma_us=...))",
+    "ramp_train_sigma_us": "removed by the repro.core.device redesign; pass "
+                           "device=DeviceModel(train=TrainNoise("
+                           "sigma_us=...))",
+    "use_kernel": "removed by the analog-backend refactor; set "
+                  'backend="pallas" (see README "Backends")',
+}
 
 
 @dataclasses.dataclass(frozen=True)
 class AnalogConfig:
-    """Knobs for the analog-hardware simulation (paper Methods)."""
+    """Knobs for the analog-hardware simulation (paper Methods).
+
+    ``device`` accepts a :class:`repro.core.device.DeviceModel` or a preset
+    name (``"ideal"``, ``"paper"``, ``"paper-infer"``, ``"aged-1day"``,
+    ``"stressed"``, or anything registered via
+    :func:`repro.core.device.register_device`); a name — including the
+    default, which honors the ``REPRO_DEVICE`` env var — is resolved to the
+    model at construction time.
+    """
 
     enabled: bool = True
     adc_bits: int = 5
     input_bits: Optional[int] = 5
     input_clip: float = 1.0
-    train_sigma_w: float = crossbar.TRAIN_SIGMA_W
-    read_sigma_w: float = crossbar.READ_SIGMA_W
-    ramp_train_sigma_us: float = 5.0     # NL-ADC-aware training noise
     mode: str = "exact"                   # exact | train | infer
     backend: str = ""                     # "" = auto (env) | ref | pallas
+    device: DeviceModel = ""              # model | preset name | "" = auto
+
+    def __post_init__(self):
+        if not isinstance(self.device, DeviceModel):
+            object.__setattr__(self, "device", resolve_device(self.device))
 
     def replace(self, **kw) -> "AnalogConfig":
         return dataclasses.replace(self, **kw)
 
     @classmethod
     def from_spec(cls, spec, **kw) -> "AnalogConfig":
-        """Build from a :class:`repro.configs.base.AnalogSpec`."""
+        """Build from a :class:`repro.configs.base.AnalogSpec`.
+
+        Unknown ``**kw`` names fail loudly (with a migration hint for the
+        knobs the DeviceModel redesign removed) instead of silently riding
+        into the dataclass constructor's TypeError.
+        """
+        fixed = ("enabled", "adc_bits", "input_bits", "mode", "backend")
+        valid = {f.name for f in dataclasses.fields(cls)} - set(fixed)
+        for k in kw:
+            if k in valid:
+                continue
+            hint = _REMOVED_KNOBS.get(k)
+            if hint is not None:
+                raise TypeError(f"AnalogConfig.from_spec: {k!r} was {hint}")
+            where = "is fixed by the spec" if k in fixed else "is unknown"
+            raise TypeError(
+                f"AnalogConfig.from_spec: {k!r} {where}; "
+                f"overridable fields: {sorted(valid)}")
+        kw.setdefault("device", resolve_device(spec.device))
         return cls(enabled=spec.enabled, adc_bits=spec.adc_bits,
                    input_bits=spec.input_bits, mode=spec.mode,
-                   backend=getattr(spec, "backend", ""), **kw)
+                   backend=spec.backend, **kw)
 
 
-EXACT = AnalogConfig(enabled=False, mode="exact")
+# Explicit device=IDEAL: this constant is constructed at import time, and
+# consulting REPRO_DEVICE here would make `import repro.core` crash under a
+# custom preset name before user code gets the chance to register it.
+EXACT = AnalogConfig(enabled=False, mode="exact", device=IDEAL)
 
 
 class AnalogActivation:
@@ -73,7 +127,14 @@ class AnalogActivation:
         self.cfg = cfg
         self._adc: Optional[NLADC] = None
         if cfg.enabled:
-            self._adc = NLADC(build_ramp(name, cfg.adc_bits))
+            ramp = build_ramp(name, cfg.adc_bits)
+            if cfg.mode == "infer":
+                # Deployment: the device model's build stage realizes the
+                # programmed chip (write noise + stuck faults + redundancy +
+                # one-point calibration + drift), drawn deterministically
+                # host-side, so every backend sees the same thresholds.
+                ramp = cfg.device.deploy_ramp(ramp)
+            self._adc = NLADC(ramp)
 
     @property
     def adc(self) -> Optional[NLADC]:
@@ -98,10 +159,10 @@ class AnalogActivation:
         """
         adc = self._adc
         cfg = self.cfg
-        if cfg.mode == "train" and key is not None \
-                and cfg.ramp_train_sigma_us > 0:
+        sigma_us = cfg.device.ramp_sigma_us(cfg.mode)
+        if key is not None and sigma_us > 0:
             ramp = adc.ramp
-            dg = cfg.ramp_train_sigma_us * jax.random.normal(
+            dg = sigma_us * jax.random.normal(
                 key, adc.thresholds.shape, dtype=adc.thresholds.dtype)
             steps = jnp.asarray(ramp.steps, dtype=adc.thresholds.dtype)
             noisy_steps = steps + dg * ramp.g_scale
@@ -121,17 +182,24 @@ class AnalogActivation:
 
 
 def _noisy_weights(w, cfg: AnalogConfig, k_w):
-    """Clip to the programmable range and apply the mode's weight noise."""
+    """Clip to the programmable range and apply the mode's weight noise.
+
+    The sigma comes from the device model's step-time stages: ``TrainNoise``
+    in train mode (Alg. 1), ``ReadNoise`` in infer mode.  Build-stage weight
+    nonidealities (write noise / faults / drift) are applied once, outside
+    the step, via ``DeviceModel.age_params``.
+    """
     w = crossbar.clip_weights(w)
-    if cfg.mode == "train" and k_w is not None and cfg.train_sigma_w > 0:
+    sigma_w = cfg.device.weight_sigma_w(cfg.mode)
+    if k_w is None or sigma_w <= 0:
+        return w
+    if cfg.mode == "train":
         # Alg. 1: W_fwd = W + eps * sigma; backward hits W directly.
         w = w + jax.lax.stop_gradient(
-            cfg.train_sigma_w
-            * jax.random.normal(k_w, w.shape, dtype=w.dtype)
+            sigma_w * jax.random.normal(k_w, w.shape, dtype=w.dtype)
         )
-    elif cfg.mode == "infer" and k_w is not None and cfg.read_sigma_w > 0:
-        w = w + crossbar.read_noise_weights(k_w, w.shape, w.dtype,
-                                            cfg.read_sigma_w)
+    else:
+        w = w + crossbar.read_noise_weights(k_w, w.shape, w.dtype, sigma_w)
     return w
 
 

@@ -1,0 +1,397 @@
+"""``repro.core.device`` — one composable device-model API for every
+nonideality, from the paper benchmarks to the serving engine.
+
+The paper's robustness claims (Figs. 3, S11, S13) rest on a handful of
+device-physics effects.  Each is one *stage* dataclass here, and a
+:class:`DeviceModel` is a serializable tree of stages:
+
+========================  =====================================================
+stage                     physics
+========================  =====================================================
+:class:`WriteNoise`       per-device programming error, N(0, 2.67 µS) measured
+                          (Fig. S8c); applied ONCE at build/deploy time
+:class:`ReadNoise`        per-read conductance fluctuation, N(0, 3.5 µS)
+                          (Fig. S14b); fresh every minibatch at step time
+:class:`TrainNoise`       Alg. 1 hardware-aware-training noise, N(0, 5 µS):
+                          injected into the forward-pass weights AND the ramp
+                          steps at step time in ``mode="train"``
+:class:`Drift`            long-term retention drift over ``t_s`` seconds via
+                          the reference-curve model (Supp. S13, Eq. S8)
+:class:`StuckAt`          stuck-at-OFF device faults (Fig. 3a)
+:class:`Redundancy`       Supp. S11 best-of-R ramp copies in unused column rows
+:class:`Calibration`      Supp. S9 one-point ``V_init`` shift with bias devices
+========================  =====================================================
+
+Stages split into two phases:
+
+* **build stage** (host-side numpy, drawn once per deployment):
+  ``WriteNoise`` + ``StuckAt`` + ``Redundancy`` + ``Calibration`` + ``Drift``
+  realize the *programmed chip* — :meth:`DeviceModel.program` for NL-ADC ramp
+  columns (wrapping :mod:`repro.core.calibration`) and
+  :meth:`DeviceModel.age_weights` / :meth:`DeviceModel.age_params` for weight
+  crossbars.  ``AnalogActivation`` consumes :meth:`DeviceModel.deploy_ramp`
+  in ``mode="infer"``, so *both* analog backends (ref and pallas) see the
+  identical programmed thresholds.
+* **step time** (jnp, keyed, shared orchestration):
+  ``TrainNoise``/``ReadNoise`` sigmas feed ``AnalogActivation.thresholds_for``
+  and the weight-noise draw in :mod:`repro.core.analog_layer` — again drawn
+  once in shared code so ref↔pallas parity holds under any model.
+
+Presets are registered by name (``ideal``, ``paper``, ``paper-infer``,
+``aged-1day``, ``stressed``) and selected per-arch via
+``AnalogSpec.device``, globally via the ``REPRO_DEVICE`` env var, or with
+``--device`` on the train/serve/dryrun drivers.  Models serialize with
+:meth:`DeviceModel.to_dict` / :func:`device_from_dict` (plain JSON types).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import zlib
+from typing import Any, Dict, Optional, Union
+
+import numpy as np
+
+from repro.core import calibration as CAL
+from repro.core import crossbar as CB
+from repro.core.calibration import ProgrammedRamp
+from repro.core.nladc import Ramp, ramp_from_conductances
+
+# ---------------------------------------------------------------------------
+# Stages
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class WriteNoise:
+    """Programming error per device (iterative write-and-verify outcome)."""
+
+    sigma_us: float = CAL.WRITE_SIGMA_US      # 2.67 µS measured (Fig. S8c)
+
+    @property
+    def sigma_w(self) -> float:
+        """Sigma in weight units (the γ scaling cancels differentially)."""
+        return self.sigma_us / CB.GAMMA_US
+
+
+@dataclasses.dataclass(frozen=True)
+class ReadNoise:
+    """Per-read conductance fluctuation, fresh each minibatch."""
+
+    sigma_us: float = CAL.READ_SIGMA_US       # 3.5 µS measured (Fig. S14b)
+
+    @property
+    def sigma_w(self) -> float:
+        return self.sigma_us / CB.GAMMA_US
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainNoise:
+    """Alg. 1 noise injected during hardware-aware training (weights + ramp)."""
+
+    sigma_us: float = CAL.TRAIN_SIGMA_US      # 5 µS (Methods)
+
+    @property
+    def sigma_w(self) -> float:
+        return self.sigma_us / CB.GAMMA_US
+
+
+@dataclasses.dataclass(frozen=True)
+class Drift:
+    """Retention drift for ``t_s`` seconds (reference-curve model, Eq. S8)."""
+
+    t_s: float = 0.0
+    n_refs: int = 16
+    alpha: float = 0.015
+    sigma0_us: float = 0.5
+    t0_s: float = 60.0
+
+    def model(self) -> CB.DriftModel:
+        return CB.DriftModel(n_refs=self.n_refs, alpha=self.alpha,
+                             sigma0_us=self.sigma0_us, t0_s=self.t0_s)
+
+
+@dataclasses.dataclass(frozen=True)
+class StuckAt:
+    """Stuck-at-OFF faults: the affected conductance reads 0 (Fig. 3a)."""
+
+    prob: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Redundancy:
+    """Supp. S11: program ``n_copies`` ramp replicas, keep the min-INL one."""
+
+    n_copies: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class Calibration:
+    """Supp. S9: one-point V_init shift realized with bias memristors."""
+
+    one_point: bool = True
+
+
+_STAGE_TYPES = {
+    "write": WriteNoise,
+    "read": ReadNoise,
+    "train": TrainNoise,
+    "drift": Drift,
+    "stuck": StuckAt,
+    "redundancy": Redundancy,
+    "calibration": Calibration,
+}
+
+
+# ---------------------------------------------------------------------------
+# The composed model
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceModel:
+    """A full device model: optional stages composed into one tree.
+
+    ``None`` disables a stage.  The tree is hashable (usable as a frozen
+    dataclass field of :class:`repro.core.analog_layer.AnalogConfig`) and
+    JSON-serializable via :meth:`to_dict`.
+    """
+
+    name: str = "custom"
+    write: Optional[WriteNoise] = None
+    read: Optional[ReadNoise] = None
+    train: Optional[TrainNoise] = None
+    drift: Optional[Drift] = None
+    stuck: Optional[StuckAt] = None
+    redundancy: Redundancy = Redundancy()
+    calibration: Calibration = Calibration(one_point=False)
+    # Per-deployment seed for the build-stage draws (ramp programming /
+    # weight aging) when no explicit rng is supplied.
+    seed: int = 0
+
+    def replace(self, **kw) -> "DeviceModel":
+        return dataclasses.replace(self, **kw)
+
+    def with_drift(self, t_s: float) -> "DeviceModel":
+        """Convenience: same model aged to ``t_s`` seconds."""
+        base = self.drift or Drift()
+        return self.replace(drift=dataclasses.replace(base, t_s=t_s))
+
+    # -- step-time accessors (consumed by repro.core.analog_layer) -------
+
+    def weight_sigma_w(self, mode: str) -> float:
+        """Weight-units sigma of the per-step weight noise for ``mode``."""
+        if mode == "train" and self.train is not None:
+            return self.train.sigma_w
+        if mode == "infer" and self.read is not None:
+            return self.read.sigma_w
+        return 0.0
+
+    def ramp_sigma_us(self, mode: str) -> float:
+        """Conductance-units sigma of the per-step ramp-step noise."""
+        if mode == "train" and self.train is not None:
+            return self.train.sigma_us
+        return 0.0
+
+    # -- build stage (host-side numpy) ------------------------------------
+
+    @property
+    def has_build_stage(self) -> bool:
+        """True if deployment realizes any once-per-chip nonideality."""
+        return (self.write is not None
+                or self.stuck is not None
+                or (self.drift is not None and self.drift.t_s > 0))
+
+    def _build_rng(self, *salt: int) -> np.random.Generator:
+        return np.random.default_rng([self.seed & 0xFFFFFFFF, *salt])
+
+    def program(self, ramp: Ramp,
+                rng: Optional[np.random.Generator] = None) -> ProgrammedRamp:
+        """Program one NL-ADC ramp column under this model.
+
+        Wraps the Supp. S9/S11 pipeline (``program_ramp`` /
+        ``program_with_redundancy``) with write noise + stuck faults +
+        redundancy + one-point calibration, then applies retention drift to
+        the programmed conductances (re-calibrating afterwards, i.e.
+        calibrate-at-deployment).  The rng stream matches calling the
+        calibration functions directly with the same arguments.
+        """
+        if rng is None:
+            rng = self._build_rng(zlib.crc32(ramp.name.encode()), ramp.bits)
+        sigma = self.write.sigma_us if self.write is not None else 0.0
+        stuck = self.stuck.prob if self.stuck is not None else 0.0
+        cal = self.calibration.one_point
+        if self.redundancy.n_copies > 1:
+            prog = CAL.program_with_redundancy(
+                ramp, rng, copies=self.redundancy.n_copies, sigma_us=sigma,
+                stuck_off_prob=stuck, calibrate=cal)
+        else:
+            prog = CAL.program_ramp(ramp, rng, sigma_us=sigma,
+                                    stuck_off_prob=stuck, calibrate=cal)
+        if self.drift is not None and self.drift.t_s > 0:
+            g = self.drift.model().drift(prog.conductances_us,
+                                         self.drift.t_s, rng)
+            drifted = ramp_from_conductances(ramp, g)
+            n_cali = prog.n_cali_devices
+            if cal:
+                drifted, n_cali = CAL.one_point_calibrate(
+                    drifted, ramp, rng, sigma_us=sigma)
+            prog = ProgrammedRamp(ideal=ramp, programmed=drifted,
+                                  conductances_us=g, calibrated=cal,
+                                  n_cali_devices=n_cali)
+        return prog
+
+    def deploy_ramp(self, ramp: Ramp) -> Ramp:
+        """The comparator thresholds a deployed chip actually realizes.
+
+        Identity when the model has no build-stage nonideality; otherwise
+        the programmed (noisy/faulty/redundant/calibrated/drifted) ramp,
+        drawn deterministically from ``seed`` + the ramp identity so every
+        backend — and every re-build of the activation — sees the same chip.
+        """
+        if not self.has_build_stage:
+            return ramp
+        return self.program(ramp).programmed
+
+    def age_weights(self, w: np.ndarray,
+                    rng: np.random.Generator) -> np.ndarray:
+        """Build-stage weight nonidealities: write noise, faults, drift.
+
+        Host-side float64; rng stream matches the legacy hand-wired call
+        sequences (e.g. Supp. S13's ``DriftModel.drift_weights``).  ``rng``
+        is required: device errors must be independent across crossbars, so
+        the caller owns the stream (``age_params`` threads one generator
+        through the whole param tree).
+        """
+        w = np.asarray(w, dtype=np.float64)
+        if self.write is not None:
+            w = np.clip(w + rng.normal(0.0, self.write.sigma_w, w.shape),
+                        -CB.W_CLIP, CB.W_CLIP)
+        if self.stuck is not None and self.stuck.prob > 0:
+            w = np.where(rng.random(w.shape) < self.stuck.prob, 0.0, w)
+        if self.drift is not None and self.drift.t_s > 0:
+            w = self.drift.model().drift_weights(w, self.drift.t_s, rng)
+        return w
+
+    def age_params(self, params, rng: Optional[np.random.Generator] = None,
+                   min_ndim: int = 2):
+        """Apply :meth:`age_weights` to every matrix leaf of a param pytree.
+
+        Leaves with fewer than ``min_ndim`` dims (biases, norm scales,
+        scalars) pass through untouched — they live in digital registers,
+        not crossbar cells.  Returns a pytree of the original leaf dtypes.
+        """
+        if not self.has_build_stage:
+            return params
+        import jax
+        import jax.numpy as jnp
+
+        if rng is None:
+            rng = self._build_rng(1)
+
+        def one(w):
+            if getattr(w, "ndim", 0) < min_ndim:
+                return w
+            aged = self.age_weights(np.asarray(w, np.float64), rng)
+            return jnp.asarray(aged.astype(np.asarray(w).dtype))
+
+        return jax.tree.map(one, params)
+
+    # -- serialization -----------------------------------------------------
+
+    def to_dict(self) -> Dict[str, Any]:
+        """Plain-JSON representation (round-trips via device_from_dict)."""
+        out: Dict[str, Any] = {"name": self.name, "seed": self.seed}
+        for field in _STAGE_TYPES:
+            stage = getattr(self, field)
+            out[field] = None if stage is None else dataclasses.asdict(stage)
+        return out
+
+
+def device_from_dict(d: Dict[str, Any]) -> DeviceModel:
+    """Inverse of :meth:`DeviceModel.to_dict`."""
+    kw: Dict[str, Any] = {"name": d.get("name", "custom"),
+                          "seed": int(d.get("seed", 0))}
+    for field, typ in _STAGE_TYPES.items():
+        v = d.get(field)
+        if v is None:
+            # redundancy/calibration are non-optional stages
+            if field == "redundancy":
+                kw[field] = Redundancy()
+            elif field == "calibration":
+                kw[field] = Calibration(one_point=False)
+            else:
+                kw[field] = None
+        else:
+            kw[field] = typ(**v)
+    return DeviceModel(**kw)
+
+
+# ---------------------------------------------------------------------------
+# Preset registry
+# ---------------------------------------------------------------------------
+
+DEFAULT_DEVICE = "paper"
+
+_REGISTRY: Dict[str, DeviceModel] = {}
+
+
+def register_device(model: DeviceModel, name: Optional[str] = None) -> None:
+    """Register a named preset (overrides silently, like backends)."""
+    _REGISTRY[name or model.name] = model
+
+
+def get_device(name: str) -> DeviceModel:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown device model {name!r}; registered: "
+            f"{sorted(_REGISTRY)}") from None
+
+
+def device_names():
+    return tuple(sorted(_REGISTRY))
+
+
+def resolve_device(spec: Union[str, DeviceModel, None] = "") -> DeviceModel:
+    """Explicit model or preset name, else ``REPRO_DEVICE`` env, else paper."""
+    if isinstance(spec, DeviceModel):
+        return spec
+    name = spec or os.environ.get("REPRO_DEVICE", "") or DEFAULT_DEVICE
+    return get_device(name)
+
+
+# The software baseline: no nonideality anywhere (quantization — the NL-ADC
+# transfer function itself — is AnalogConfig's job, not the device's).
+IDEAL = DeviceModel(name="ideal")
+
+# The paper's *step-time* model — exactly the legacy AnalogConfig defaults:
+# Alg. 1 training noise (5 µS on weights and ramp steps) and per-minibatch
+# read noise (3.5 µS); no build-stage physics simulated in the step.
+PAPER = DeviceModel(name="paper", train=TrainNoise(), read=ReadNoise())
+
+# Full deployment simulation: freshly programmed chip (write noise + one-
+# point calibration on the NL-ADC ramps / weight crossbars) + read noise.
+PAPER_INFER = PAPER.replace(name="paper-infer", write=WriteNoise(),
+                            calibration=Calibration(one_point=True))
+
+# The same chip after one day on the shelf (Supp. S13 drift).
+AGED_1DAY = PAPER_INFER.with_drift(86_400.0).replace(name="aged-1day")
+
+# Pessimistic corner: double write noise, 2% stuck-at-OFF faults, 2x read
+# noise, larger (8 µS) training noise; survives via best-of-4 redundancy +
+# calibration (the paper's own mitigation stack, Figs. 3a/S12).
+STRESSED = DeviceModel(
+    name="stressed",
+    write=WriteNoise(sigma_us=2 * CAL.WRITE_SIGMA_US),
+    read=ReadNoise(sigma_us=2 * CAL.READ_SIGMA_US),
+    train=TrainNoise(sigma_us=8.0),
+    stuck=StuckAt(prob=0.02),
+    redundancy=Redundancy(n_copies=4),
+    calibration=Calibration(one_point=True),
+)
+
+for _m in (IDEAL, PAPER, PAPER_INFER, AGED_1DAY, STRESSED):
+    register_device(_m)

@@ -25,6 +25,7 @@ Usage:
 """
 
 import argparse      # noqa: E402
+import dataclasses   # noqa: E402
 import json          # noqa: E402
 import sys           # noqa: E402
 import time          # noqa: E402
@@ -38,6 +39,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__),
                                 "..", "..", ".."))  # for benchmarks/
 
 from repro import configs                            # noqa: E402
+from repro.core.device import device_names           # noqa: E402
 from repro.dist import sharding as SH                # noqa: E402
 from repro.launch import specs as SPECS              # noqa: E402
 from repro.launch.mesh import make_production_mesh   # noqa: E402
@@ -147,20 +149,28 @@ def _metrics(compiled, with_hlo=True):
 
 def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
                analysis: bool = True, overrides: dict | None = None,
-               microbatches: int = 1):
+               microbatches: int = 1, device: str = ""):
     """``microbatches > 1``: lower the per-microbatch train step (the
     production loop runs gradient accumulation over the full assigned
     global batch; peak activation memory scales ~1/microbatches while
-    per-global-step roofline terms are microbatch-count invariant)."""
+    per-global-step roofline terms are microbatch-count invariant).
+    ``device``: device-model preset threaded into the analog spec (changes
+    step-time noise draws, hence the lowered HLO, under train/infer modes)."""
     mesh = make_production_mesh(multi_pod=multi_pod)
     chips = int(np.prod(list(mesh.shape.values())))
     cfg, shape, kind, _ = SPECS.input_specs(arch, shape_name)
     if overrides:
         cfg = cfg.replace(**overrides)
+    if device:
+        cfg = cfg.replace(analog=dataclasses.replace(cfg.analog,
+                                                     device=device))
+        if cfg.analog.mode == "exact":
+            print(f"[dryrun] note: device={device} is inert for "
+                  f"{arch} (analog mode 'exact': no noise stage acts); "
+                  "the lowered HLO is identical to the no-device cell")
     if microbatches > 1 and kind == "train":
-        import dataclasses as _dc
-        shape = _dc.replace(shape,
-                            global_batch=shape.global_batch // microbatches)
+        shape = dataclasses.replace(
+            shape, global_batch=shape.global_batch // microbatches)
 
     # 1) full-depth scan compile: the deliverable (memory + compile proof).
     compiled, t_lower, t_compile = _compile_step(cfg, shape, kind, mesh,
@@ -238,7 +248,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
 
 def run_cell(arch, shape_name, multi_pod, out_dir, verbose=True,
              analysis=True, overrides=None, tag_suffix="",
-             microbatches=1):
+             microbatches=1, device=""):
     tag = f"{arch}__{shape_name}__{'2x16x16' if multi_pod else '16x16'}"
     tag += tag_suffix
     os.makedirs(out_dir, exist_ok=True)
@@ -246,7 +256,7 @@ def run_cell(arch, shape_name, multi_pod, out_dir, verbose=True,
     try:
         roof, info = lower_cell(arch, shape_name, multi_pod=multi_pod,
                                 analysis=analysis, overrides=overrides,
-                                microbatches=microbatches)
+                                microbatches=microbatches, device=device)
         info["microbatches"] = microbatches
         rec = roof.to_json()
         rec.update(info)
@@ -283,6 +293,8 @@ def main():
                     help="cfg override key=value (perf iterations)")
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--tag", default="", help="result filename suffix")
+    ap.add_argument("--device", choices=("",) + device_names(), default="",
+                    help="device-model preset (repro.core.device)")
     args = ap.parse_args()
     overrides = {}
     for kv in args.override:
@@ -304,7 +316,8 @@ def main():
     assert args.arch and args.shape, "--arch/--shape or --all required"
     ok = run_cell(args.arch, args.shape, args.multi_pod, args.out,
                   analysis=not args.no_analysis, overrides=overrides or None,
-                  tag_suffix=args.tag, microbatches=args.microbatches)
+                  tag_suffix=args.tag, microbatches=args.microbatches,
+                  device=args.device)
     sys.exit(0 if ok else 1)
 
 

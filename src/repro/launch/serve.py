@@ -15,6 +15,7 @@ import numpy as np
 
 from repro import configs
 from repro.core.backend import backend_names
+from repro.core.device import device_names, resolve_device
 from repro.nn.model import build
 from repro.serve.engine import Request, ServingEngine
 
@@ -29,17 +30,45 @@ def main():
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--backend", choices=("",) + backend_names(), default="",
                     help="analog execution backend (default: env or 'ref')")
+    ap.add_argument("--device", choices=("",) + device_names(), default="",
+                    help="device-model preset (default: REPRO_DEVICE env or "
+                         "'paper'); in infer mode its build-stage "
+                         "nonidealities (write noise, faults, drift) are "
+                         "applied to the loaded params once, before serving")
+    ap.add_argument("--analog-mode", choices=("", "exact", "train", "infer"),
+                    default="", help="override AnalogSpec.mode (most LM "
+                    "configs default to 'exact'; pass 'infer' for the full "
+                    "deployment simulation so --device actually acts)")
     args = ap.parse_args()
 
     cfg = configs.get_smoke(args.arch) if args.smoke \
         else configs.get(args.arch)
+    spec_kw = {}
     if args.backend:
-        cfg = cfg.replace(analog=dataclasses.replace(cfg.analog,
-                                                     backend=args.backend))
+        spec_kw["backend"] = args.backend
+    if args.device:
+        spec_kw["device"] = args.device
+    if args.analog_mode:
+        spec_kw["mode"] = args.analog_mode
+    if spec_kw:
+        cfg = cfg.replace(analog=dataclasses.replace(cfg.analog, **spec_kw))
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    # Build-stage aging only composes with infer mode: exact mode would pair
+    # aged weights with a pristine NL-ADC and no read noise — a chip that
+    # cannot physically exist — so the driver gates it rather than the engine.
+    device = None
+    if cfg.analog.mode == "infer":
+        device = resolve_device(cfg.analog.device)
+        if device.has_build_stage:
+            print(f"[serve] applying device model {device.name!r} build "
+                  "stage to params (write noise / faults / drift)")
+    elif args.device:
+        print(f"[serve] note: --device {args.device} is inert in analog "
+              f"mode {cfg.analog.mode!r}; pass --analog-mode infer for the "
+              "deployment simulation")
     engine = ServingEngine(model, params, max_batch=args.max_batch,
-                           max_len=args.max_len)
+                           max_len=args.max_len, device=device)
 
     rng = np.random.default_rng(0)
     for uid in range(args.requests):

@@ -29,6 +29,7 @@ import dataclasses
 
 from repro import configs
 from repro.core.backend import backend_names
+from repro.core.device import device_names
 from repro.data.pipeline import SyntheticLM
 from repro.dist import sharding as SH
 from repro.ft.elastic import build_mesh, plan_for_devices, reshard
@@ -59,6 +60,14 @@ def main():
                     help="analog execution backend (default: "
                          "REPRO_ANALOG_BACKEND env or 'ref'); composes "
                          "with any --grad-comm mode")
+    ap.add_argument("--device", choices=("",) + device_names(), default="",
+                    help="device-model preset (repro.core.device; default: "
+                         "REPRO_DEVICE env or 'paper'); composes with any "
+                         "--backend / --grad-comm")
+    ap.add_argument("--analog-mode", choices=("", "exact", "train", "infer"),
+                    default="", help="override AnalogSpec.mode (most LM "
+                    "configs default to 'exact'; pass 'train' for Alg. 1 "
+                    "nonideality-aware training so --device actually acts)")
     args = ap.parse_args()
     if args.production_mesh and args.grad_comm != "gspmd":
         ap.error("--production-mesh requires --grad-comm gspmd: the "
@@ -67,9 +76,19 @@ def main():
 
     cfg = configs.get_smoke(args.arch) if args.smoke \
         else configs.get(args.arch)
+    spec_kw = {}
     if args.backend:
-        cfg = cfg.replace(analog=dataclasses.replace(cfg.analog,
-                                                     backend=args.backend))
+        spec_kw["backend"] = args.backend
+    if args.device:
+        spec_kw["device"] = args.device
+    if args.analog_mode:
+        spec_kw["mode"] = args.analog_mode
+    if spec_kw:
+        cfg = cfg.replace(analog=dataclasses.replace(cfg.analog, **spec_kw))
+    if args.device and cfg.analog.mode == "exact":
+        print(f"[train] note: --device {args.device} is inert in "
+              "analog mode 'exact' (no noise stages act); pass "
+              "--analog-mode train|infer")
     # One optimizer instance (scheduled over --steps) for every grad-comm
     # mode, so gspmd vs psum/hierarchical/int8 differ only in the gradient
     # path, not the LR schedule.

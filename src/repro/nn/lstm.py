@@ -7,8 +7,10 @@ Faithful to Eq. (4)/(5) and the Methods:
     h^t   = h_o * tanh(h_c^t)                  (tanh NL-ADC'd on chip)
 
 * the gate matmul maps to the 72x128 (KWS) / 633x8064-in-16-tiles (PTB)
-  crossbar: inputs PWM-quantized, weights clipped to [-2, 2], write/read
-  noise injected per AnalogConfig mode;
+  crossbar: inputs PWM-quantized, weights clipped to [-2, 2], noise
+  injected per ``AnalogConfig.device`` (a ``repro.core.device`` model:
+  ``TrainNoise`` in train mode, ``ReadNoise`` + build-stage programmed
+  ramps in infer mode);
 * all four gate nonlinearities AND the cell tanh are NL-ADC ramp quantized;
 * hardware-aware training (Alg. 1) falls out of mode='train';
 * the optional projection (PTB model) is a separate crossbar-mapped matmul.

@@ -34,7 +34,12 @@ def mlp_type_for(cfg) -> str:
 
 
 def make_activation(cfg) -> AnalogActivation:
-    """The model's NL-ADC'd hidden activation (shared across layers)."""
+    """The model's NL-ADC'd hidden activation (shared across layers).
+
+    ``AnalogSpec.device`` (a ``repro.core.device`` preset name) rides along
+    via ``from_spec``, so the same config line selects ideal, paper-noise,
+    or aged-chip physics for every layer's fused quantizer.
+    """
     a = cfg.analog
     name = a.activation or cfg.hidden_act
     return AnalogActivation(name, AnalogConfig.from_spec(a))

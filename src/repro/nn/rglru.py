@@ -28,6 +28,7 @@ _C = 8.0  # Griffin's fixed gate sharpness
 
 
 def make_gate_act(analog_spec) -> AnalogActivation:
+    """Gate sigmoid NL-ADC; device-model physics per ``analog_spec.device``."""
     return AnalogActivation("sigmoid", AnalogConfig.from_spec(analog_spec))
 
 

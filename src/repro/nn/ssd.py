@@ -28,6 +28,7 @@ from repro.nn import layers as L
 
 
 def make_dt_act(analog_spec) -> AnalogActivation:
+    """dt softplus NL-ADC; device-model physics per ``analog_spec.device``."""
     return AnalogActivation("softplus", AnalogConfig.from_spec(analog_spec))
 
 

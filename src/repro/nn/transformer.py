@@ -45,6 +45,9 @@ class LM:
             else jnp.float32
         self.mlp_kind = mlp_type_for(cfg)
         self.act = make_activation(cfg)                     # hidden NL-ADC
+        # One resolved AnalogConfig (backend + device model) shared by every
+        # auxiliary NL-ADC: ramps are programmed once per deployment here,
+        # not per layer — all layers read the same simulated chip.
         acfg = AnalogConfig.from_spec(cfg.analog)
         self.sigmoid_act = AnalogActivation("sigmoid", acfg)
         self.softplus_act = AnalogActivation("softplus", acfg)

@@ -41,12 +41,34 @@ class Request:
 
 
 class ServingEngine:
-    def __init__(self, model, params, *, max_batch: int, max_len: int):
+    """``device``: an optional :class:`repro.core.device.DeviceModel` whose
+    build stage (per-chip write noise, stuck faults, retention drift — drawn
+    once, host-side) is applied to the weight matrices at engine
+    construction, simulating serving from an actually-programmed chip.  The
+    step-time stages (read noise, programmed NL-ADC ramps) ride on the
+    model's ``AnalogConfig`` as usual.  The caller decides when aging
+    composes with the model's analog mode (``launch.serve`` passes a device
+    only in ``mode="infer"`` — aged weights with a pristine NL-ADC would be
+    a chip that cannot exist)."""
+
+    def __init__(self, model, params, *, max_batch: int, max_len: int,
+                 device=None, noise_seed: int = 0):
+        if device is not None and device.has_build_stage:
+            params = device.age_params(params)
         self.model = model
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
         self.state = model.init_decode_state(max_batch, max_len)
+        # Infer-mode models draw per-read noise (the device model's
+        # ReadNoise stage) every decode/prefill step; the engine owns the
+        # key schedule so serving is reproducible for a given noise_seed.
+        # Exact-mode models (and bare test doubles without a cfg) get
+        # key=None — byte-identical traces to the pre-noise engine.
+        spec = getattr(getattr(model, "cfg", None), "analog", None)
+        self._noisy = spec is not None and spec.mode == "infer" \
+            and spec.enabled
+        self._noise_key = jax.random.PRNGKey(noise_seed)
         # engine bookkeeping (host side)
         self.slot_free = [True] * max_batch
         self.slot_req: List[Optional[Request]] = [None] * max_batch
@@ -57,27 +79,45 @@ class ServingEngine:
         self._jit_prefill = jax.jit(self._prefill_slot,
                                     static_argnames=("length",))
 
+    def _next_key(self):
+        if not self._noisy:
+            return None
+        self._noise_key, k = jax.random.split(self._noise_key)
+        return k
+
     # -- jitted bodies -------------------------------------------------
 
-    def _decode_all(self, params, state, tokens, positions):
+    def _decode_all(self, params, state, tokens, positions, key):
         """Advance every slot one token (positions vary per slot)."""
         # The model decode_step uses a single shared index; per-slot offsets
         # are handled by keeping a per-slot position and passing the max —
         # cache writes use the per-slot position via the index trick below.
-        logits, new_state = self.model.decode_step(params, state, tokens)
+        logits, new_state = self.model.decode_step(params, state, tokens,
+                                                   key=key)
         next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         return next_tok, new_state
 
-    def _prefill_slot(self, params, state, tokens, *, length: int):
+    def _prefill_slot(self, params, state, tokens, key, *, length: int):
         """Feed a prompt through decode steps to fill the cache (exact)."""
 
-        def body(st, tok):
-            _, st = self.model.decode_step(params, st, tok[None, None])
+        if key is None:
+            def body(st, tok):
+                _, st = self.model.decode_step(params, st, tok[None, None])
+                return st, None
+
+            state, _ = jax.lax.scan(body, state, tokens[:length])
+            return state
+
+        def body(st, inp):
+            tok, k = inp
+            _, st = self.model.decode_step(params, st, tok[None, None],
+                                           key=k)
             return st, None
 
         # note: fills batch slot 0 of a broadcast state; engine embeds the
         # single-request state into the big batch after (host-side gather).
-        state, _ = jax.lax.scan(body, state, tokens[:length])
+        state, _ = jax.lax.scan(
+            body, state, (tokens[:length], jax.random.split(key, length)))
         return state
 
     # -- host-side scheduling -------------------------------------------
@@ -111,7 +151,7 @@ class ServingEngine:
             return state
         tokens = jnp.asarray(np.asarray(prompt), jnp.int32)
         return self._jit_prefill(self.params, state, tokens,
-                                 length=len(prompt) - 1)
+                                 self._next_key(), length=len(prompt) - 1)
 
     def _merge_slot(self, mini_state, slot):
         """Copy the single-request cache into batch slot ``slot``."""
@@ -143,7 +183,7 @@ class ServingEngine:
         tokens = jnp.asarray(self.slot_last[:, None], jnp.int32)
         positions = jnp.asarray(self.slot_pos, jnp.int32)
         next_tok, self.state = self._jit_decode(
-            self.params, self.state, tokens, positions)
+            self.params, self.state, tokens, positions, self._next_key())
         next_np = np.asarray(next_tok)
         out = {}
         for s in active:

@@ -268,6 +268,83 @@ def test_int8_decode_backend_parity():
     assert rel < 1e-5, rel
 
 
+# ---------------------------------------------------------------------------
+# Device-model presets: parity must hold under build-stage nonidealities
+# (programmed/drifted thresholds + read noise), not just the ideal ramp
+# ---------------------------------------------------------------------------
+
+
+def test_deployed_ramp_codes_bitwise(rng):
+    """Bitwise ADC-code parity on the aged-1day programmed thresholds."""
+    from repro.core.device import get_device
+    from repro.kernels import ops
+
+    ramp = build_ramp("sigmoid", 5)
+    deployed = get_device("aged-1day").deploy_ramp(ramp)
+    adc = NLADC(deployed)
+    x = jnp.asarray(rng.normal(0, 2, (29, 33)).astype(np.float32))
+    ref_codes = np.asarray(adc.codes(x))
+    from repro.kernels.ref import decode_params
+
+    y0, lsb_l, _, _ = decode_params(deployed)
+    y = np.asarray(ops.nladc(x, deployed), np.float64)
+    got_codes = np.rint((y - y0) / lsb_l).astype(np.int64)
+    np.testing.assert_array_equal(got_codes, ref_codes)
+
+
+@pytest.mark.parametrize("preset", ["aged-1day", "stressed"])
+def test_dense_nladc_parity_under_noisy_preset(preset, rng):
+    """Infer-mode layer parity under build-stage device models."""
+    x = jnp.asarray(rng.normal(0, 0.4, (9, 40)).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 0.2, (40, 24)).astype(np.float32))
+    outs = {}
+    for be in BACKENDS:
+        act = AnalogActivation("swish", _cfg("infer", be, device=preset))
+        outs[be] = dense_nladc({"w": w}, x, act, key=_key("infer"))
+        lsb = _lsb(act)
+    assert float(jnp.max(jnp.abs(outs["ref"] - outs["pallas"]))) < lsb / 2
+
+
+def test_model_noisy_preset_parity():
+    """aged-1day end-to-end through a whole LM: both backends see the same
+    programmed thresholds and read-noise draws (the acceptance case)."""
+    from repro import configs
+    from repro.configs.base import AnalogSpec
+    from repro.nn.model import build
+
+    outs, lsb = {}, None
+    for be in BACKENDS:
+        cfg = configs.get_smoke("qwen2.5-3b").replace(
+            dtype="float32",
+            analog=AnalogSpec(enabled=True, adc_bits=5, mode="infer",
+                              backend=be, device="aged-1day"))
+        model = build(cfg)
+        lsb = model.act.ramp.lsb
+        params = model.init(jax.random.PRNGKey(0))
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                    cfg.vocab)
+        outs[be] = model.forward(params, tokens, key=_key("infer"))
+    assert float(jnp.max(jnp.abs(outs["ref"] - outs["pallas"]))) < lsb / 2
+
+
+def test_lstm_noisy_preset_parity():
+    from repro.nn import lstm as NN
+
+    ys, lsb = {}, None
+    for be in BACKENDS:
+        spec = NN.LSTMSpec(
+            n_in=10, n_hidden=12,
+            analog=AnalogConfig(enabled=True, adc_bits=5, input_bits=5,
+                                mode="infer", backend=be,
+                                device="aged-1day"))
+        acts = NN.make_gate_acts(spec.analog)
+        lsb = _lsb(acts[0])
+        p = NN.lstm_init(jax.random.PRNGKey(1), spec)
+        xs = 0.5 * jax.random.normal(jax.random.PRNGKey(2), (4, 5, 10))
+        ys[be], _ = NN.lstm_scan(p, xs, spec, acts, key=_key("infer"))
+    assert float(jnp.max(jnp.abs(ys["ref"] - ys["pallas"]))) < lsb / 2
+
+
 def test_env_override_selects_backend(monkeypatch):
     from repro.core.backend import PallasBackend, get_backend, resolve_backend
 

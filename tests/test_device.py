@@ -1,0 +1,308 @@
+"""repro.core.device: presets, serialization, and seeded parity with the
+legacy hand-wired calibration/drift call sequences (the fig3/s11/s13
+benchmark paths must reproduce their pre-refactor numbers bit-for-bit)."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import calibration as CAL
+from repro.core import crossbar as CB
+from repro.core.analog_layer import AnalogActivation, AnalogConfig
+from repro.core.device import (AGED_1DAY, Calibration, DeviceModel, Drift,
+                               Redundancy, StuckAt, WriteNoise,
+                               device_from_dict, device_names, get_device,
+                               register_device, resolve_device)
+from repro.core.nladc import build_ramp
+
+# ---------------------------------------------------------------------------
+# Registry + resolution
+# ---------------------------------------------------------------------------
+
+
+def test_preset_registry():
+    names = device_names()
+    for want in ("ideal", "paper", "paper-infer", "aged-1day", "stressed"):
+        assert want in names
+    with pytest.raises(KeyError, match="unknown device model"):
+        get_device("nope")
+
+
+def test_resolve_precedence(monkeypatch):
+    monkeypatch.setenv("REPRO_DEVICE", "stressed")
+    assert resolve_device("").name == "stressed"
+    assert resolve_device("ideal").name == "ideal"           # explicit wins
+    assert resolve_device(AGED_1DAY).name == "aged-1day"     # model wins
+    monkeypatch.delenv("REPRO_DEVICE")
+    assert resolve_device("").name == "paper"
+
+
+def test_register_custom_preset():
+    lab = DeviceModel(name="lab-chip", write=WriteNoise(sigma_us=1.0),
+                      calibration=Calibration(one_point=True))
+    register_device(lab)
+    assert get_device("lab-chip") == lab
+    cfg = AnalogConfig(device="lab-chip")
+    assert cfg.device is lab
+
+
+def test_serialization_roundtrip_all_presets():
+    for name in device_names():
+        dev = get_device(name)
+        blob = json.dumps(dev.to_dict())          # plain-JSON serializable
+        assert device_from_dict(json.loads(blob)) == dev
+
+
+# ---------------------------------------------------------------------------
+# Step-time accessors: the legacy AnalogConfig flat knobs, relocated
+# ---------------------------------------------------------------------------
+
+
+def test_paper_matches_legacy_flat_knobs():
+    paper = get_device("paper")
+    assert paper.weight_sigma_w("train") == pytest.approx(CB.TRAIN_SIGMA_W)
+    assert paper.weight_sigma_w("infer") == pytest.approx(CB.READ_SIGMA_W)
+    assert paper.ramp_sigma_us("train") == pytest.approx(5.0)
+    assert paper.ramp_sigma_us("infer") == 0.0
+    assert paper.weight_sigma_w("exact") == 0.0
+    assert not paper.has_build_stage                 # step-time only
+
+
+def test_ideal_is_noise_free():
+    ideal = get_device("ideal")
+    for mode in ("exact", "train", "infer"):
+        assert ideal.weight_sigma_w(mode) == 0.0
+        assert ideal.ramp_sigma_us(mode) == 0.0
+    assert not ideal.has_build_stage
+    ramp = build_ramp("sigmoid", 5)
+    assert ideal.deploy_ramp(ramp) is ramp
+
+
+# ---------------------------------------------------------------------------
+# Seeded parity: DeviceModel.program == legacy calibration call sequences
+# ---------------------------------------------------------------------------
+
+
+def test_program_matches_legacy_fig3_sequence():
+    """paper-infer (+/- calibration) == program_ramp(..., calibrate=...)."""
+    dev_cal = get_device("paper-infer")
+    dev_raw = dev_cal.replace(calibration=Calibration(one_point=False))
+    for name in ("sigmoid", "softsign", "selu"):
+        ramp = build_ramp(name, 5)
+        for c in range(4):
+            legacy = CAL.program_ramp(ramp, np.random.default_rng(c),
+                                      calibrate=False)
+            got = dev_raw.program(ramp, np.random.default_rng(c))
+            np.testing.assert_array_equal(got.programmed.thresholds,
+                                          legacy.programmed.thresholds)
+            legacy = CAL.program_ramp(ramp, np.random.default_rng(c),
+                                      calibrate=True)
+            got = dev_cal.program(ramp, np.random.default_rng(c))
+            np.testing.assert_array_equal(got.programmed.thresholds,
+                                          legacy.programmed.thresholds)
+            assert got.inl() == legacy.inl()
+
+
+def test_program_matches_legacy_s11_redundancy():
+    dev4 = get_device("paper-infer").replace(redundancy=Redundancy(4))
+    ramp = build_ramp("gelu", 5)
+    for c in range(3):
+        legacy = CAL.program_with_redundancy(ramp,
+                                             np.random.default_rng(7000 + c),
+                                             copies=4)
+        got = dev4.program(ramp, np.random.default_rng(7000 + c))
+        np.testing.assert_array_equal(got.programmed.thresholds,
+                                      legacy.programmed.thresholds)
+
+
+def test_age_params_matches_legacy_s13_drift():
+    """age_params == the hand-wired DriftModel.drift_weights tree.map."""
+    t_s = 1e5
+    params = {
+        "lstm": {"w_gates": jnp.asarray(
+            np.random.default_rng(1).normal(0, 0.5, (16, 32)), jnp.float32)},
+        "fc": {"w": jnp.asarray(
+            np.random.default_rng(2).normal(0, 0.5, (8, 12)), jnp.float32),
+            "b": jnp.zeros((12,), jnp.float32)},
+    }
+    dm = CB.DriftModel()
+    rng = np.random.default_rng(int(t_s))
+    legacy = jax.tree.map(
+        lambda w: jnp.asarray(
+            dm.drift_weights(np.asarray(w, np.float64), t_s, rng)
+            .astype(np.float32)) if w.ndim >= 2 else w, params)
+
+    aged_dev = get_device("paper").with_drift(t_s)
+    got = aged_dev.age_params(params, np.random.default_rng(int(t_s)))
+    for a, b in zip(jax.tree.leaves(legacy), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # biases pass through untouched
+    np.testing.assert_array_equal(np.asarray(got["fc"]["b"]),
+                                  np.zeros((12,), np.float32))
+
+
+def test_age_weights_stage_order_and_clipping():
+    dev = DeviceModel(name="t", write=WriteNoise(sigma_us=2.67),
+                      stuck=StuckAt(prob=0.5))
+    w = np.random.default_rng(0).normal(0, 1.0, (64, 64))
+    aged = dev.age_weights(w, np.random.default_rng(3))
+    assert np.all(np.abs(aged) <= CB.W_CLIP + 1e-9)
+    assert np.mean(aged == 0.0) > 0.2          # stuck-at-OFF visibly acts
+    # adding drift keeps everything finite and in range (the dispersion
+    # term perturbs even stuck-at zeros — that's the physics, Eq. S8)
+    full = dev.replace(drift=Drift(t_s=1e4))
+    aged2 = full.age_weights(w, np.random.default_rng(3))
+    assert aged2.shape == w.shape and np.all(np.isfinite(aged2))
+    assert np.all(np.abs(aged2) <= CB.W_CLIP + 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Deployment: programmed ramps behind AnalogActivation (infer mode)
+# ---------------------------------------------------------------------------
+
+
+def test_deploy_ramp_deterministic_per_seed():
+    ramp = build_ramp("tanh", 5)
+    dev = get_device("aged-1day")
+    a = dev.deploy_ramp(ramp)
+    b = dev.deploy_ramp(ramp)
+    np.testing.assert_array_equal(a.thresholds, b.thresholds)
+    c = dev.replace(seed=7).deploy_ramp(ramp)
+    assert np.max(np.abs(c.thresholds - a.thresholds)) > 0   # new chip
+    assert np.max(np.abs(a.thresholds - ramp.thresholds)) > 0
+
+
+def test_infer_activation_uses_programmed_ramp():
+    cfg_dep = AnalogConfig(enabled=True, adc_bits=5, mode="infer",
+                           device="aged-1day")
+    cfg_paper = AnalogConfig(enabled=True, adc_bits=5, mode="infer",
+                             device="paper")
+    dep = AnalogActivation("sigmoid", cfg_dep)
+    ideal = AnalogActivation("sigmoid", cfg_paper)
+    thr_dep = np.asarray(dep.thresholds_for())
+    thr_ideal = np.asarray(ideal.thresholds_for())
+    assert thr_dep.shape == thr_ideal.shape
+    assert np.max(np.abs(thr_dep - thr_ideal)) > 0
+    # paper (no build stage) keeps the ideal ramp — legacy behavior
+    np.testing.assert_array_equal(
+        thr_ideal, np.asarray(build_ramp("sigmoid", 5).thresholds,
+                              np.float32))
+    # train mode never programs, even under a build-stage model
+    cfg_train = AnalogConfig(enabled=True, adc_bits=5, mode="train",
+                             device="aged-1day")
+    np.testing.assert_array_equal(
+        np.asarray(AnalogActivation("sigmoid", cfg_train).adc.thresholds),
+        thr_ideal)
+
+
+def test_calibrated_deployment_beats_uncalibrated():
+    """The paper's headline: one-point calibration reduces deployed INL."""
+    base = get_device("paper-infer")
+    raw = base.replace(calibration=Calibration(one_point=False))
+    ramp = build_ramp("softsign", 5)
+    inl_cal = np.mean([base.program(ramp, np.random.default_rng(c)).inl()[0]
+                       for c in range(24)])
+    inl_raw = np.mean([raw.program(ramp, np.random.default_rng(c)).inl()[0]
+                       for c in range(24)])
+    assert inl_cal < inl_raw
+
+
+# ---------------------------------------------------------------------------
+# AnalogConfig integration
+# ---------------------------------------------------------------------------
+
+
+def test_from_spec_rejects_unknown_and_removed_kwargs():
+    from repro.configs.base import AnalogSpec
+
+    with pytest.raises(TypeError, match="removed by the repro.core.device"):
+        AnalogConfig.from_spec(AnalogSpec(), train_sigma_w=0.05)
+    with pytest.raises(TypeError, match="removed by the repro.core.device"):
+        AnalogConfig.from_spec(AnalogSpec(), ramp_train_sigma_us=3.0)
+    with pytest.raises(TypeError, match="is unknown"):
+        AnalogConfig.from_spec(AnalogSpec(), frobnicate=1)
+    with pytest.raises(TypeError, match="fixed by the spec"):
+        AnalogConfig.from_spec(AnalogSpec(), adc_bits=4)
+    # valid overrides still pass
+    cfg = AnalogConfig.from_spec(AnalogSpec(), input_clip=2.0)
+    assert cfg.input_clip == 2.0
+
+
+def test_from_spec_threads_backend_and_device():
+    from repro.configs.base import AnalogSpec
+
+    spec = AnalogSpec(enabled=True, adc_bits=4, mode="infer",
+                      backend="pallas", device="stressed")
+    cfg = AnalogConfig.from_spec(spec)
+    assert cfg.backend == "pallas"
+    assert cfg.adc_bits == 4
+    assert cfg.device.name == "stressed"
+
+
+def test_analog_config_env_device(monkeypatch):
+    monkeypatch.setenv("REPRO_DEVICE", "ideal")
+    assert AnalogConfig().device.name == "ideal"
+    monkeypatch.delenv("REPRO_DEVICE")
+    assert AnalogConfig().device.name == "paper"
+
+
+def test_analog_config_device_is_hashable_and_replaceable():
+    cfg = AnalogConfig(device="aged-1day")
+    hash(cfg)
+    cfg2 = cfg.replace(mode="infer")
+    assert cfg2.device == cfg.device
+    cfg3 = cfg.replace(device=get_device("ideal"))
+    assert cfg3.device.name == "ideal"
+
+
+def test_serving_engine_threads_read_noise_key():
+    """Infer-mode serving draws per-read noise from the engine's key
+    schedule: reproducible per noise_seed, inert in exact mode."""
+    from repro import configs
+    from repro.configs.base import AnalogSpec
+    from repro.nn.model import build
+    from repro.serve.engine import Request, ServingEngine
+
+    def run_engine(mode, noise_seed):
+        cfg = configs.get_smoke("qwen2.5-3b").replace(
+            dtype="float32",
+            analog=AnalogSpec(enabled=(mode != "exact"), mode=mode,
+                              device="paper"))
+        model = build(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        eng = ServingEngine(model, params, max_batch=2, max_len=32,
+                            noise_seed=noise_seed)
+        req = Request(uid=0, prompt=np.arange(1, 6, dtype=np.int32),
+                      max_new_tokens=6)
+        eng.submit(req)
+        eng.run_to_completion()
+        return eng, tuple(req.generated)
+
+    eng, toks_a = run_engine("infer", noise_seed=0)
+    assert eng._noisy
+    _, toks_a2 = run_engine("infer", noise_seed=0)
+    assert toks_a == toks_a2                    # reproducible noise schedule
+    eng_exact, _ = run_engine("exact", noise_seed=0)
+    assert not eng_exact._noisy                 # exact mode: key=None path
+
+
+def test_serving_engine_applies_build_stage():
+    """Engine-level deployment: aged params differ, ideal params don't."""
+    from repro.serve.engine import ServingEngine
+
+    class _Null:
+        def init_decode_state(self, b, n):
+            return {"index": jnp.zeros((), jnp.int32)}
+
+    params = {"w": jnp.asarray(
+        np.random.default_rng(0).normal(0, 0.5, (8, 8)), jnp.float32)}
+    eng = ServingEngine(_Null(), params, max_batch=1, max_len=4,
+                        device=get_device("aged-1day"))
+    assert float(jnp.max(jnp.abs(eng.params["w"] - params["w"]))) > 0
+    eng2 = ServingEngine(_Null(), params, max_batch=1, max_len=4,
+                         device=get_device("paper"))
+    np.testing.assert_array_equal(np.asarray(eng2.params["w"]),
+                                  np.asarray(params["w"]))
