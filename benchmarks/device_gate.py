@@ -1,0 +1,92 @@
+"""Device-corner CI gate: re-run the smoke device sweep, diff the baseline.
+
+    PYTHONPATH=src python -m benchmarks.device_gate [--tol-acc X] [--tol-inl F]
+
+Runs ``benchmarks.device_sweep`` on the smoke (quick) config and fails —
+exit code 1 — when any KWS accuracy point moves more than ``--tol-acc``
+(absolute) or any programmed-ramp INL cell moves more than a ``--tol-inl``
+fraction (relative) against the committed ``BENCH_device.json``.  This is
+the regression tripwire for the whole nonideality pipeline: device presets,
+build-stage programming, per-tile aging, Alg. 1 training, and infer-mode
+deployment all feed the numbers being diffed.
+
+The sweep is seeded end-to-end, so on one platform the deltas are exactly
+zero; the tolerances absorb cross-platform XLA numerics only.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from benchmarks import device_sweep
+
+BASELINE = os.path.join(os.path.dirname(__file__), "BENCH_device.json")
+
+
+def _cells(section: dict):
+    return {(preset, k): v for preset, rows in section.items()
+            for k, v in rows.items()}
+
+
+def compare(results: dict, baseline: dict, tol_acc: float,
+            tol_inl: float) -> list:
+    failures = []
+    for key, tol, rel in (("ramp_inl_lsb", tol_inl, True),
+                          ("kws_accuracy", tol_acc, False),
+                          ("kws_accuracy_tiled", tol_acc, False)):
+        want_cells = _cells(baseline[key])
+        got_cells = _cells(results[key])
+        # a sweep corner existing on only one side is itself a gate
+        # failure — silently skipping it would defeat the tripwire
+        for cell in sorted(set(want_cells) ^ set(got_cells)):
+            side = "baseline" if cell in want_cells else "sweep"
+            failures.append(
+                f"{key} {cell[0]}/{cell[1]}: only present in the {side}; "
+                "re-record BENCH_device.json")
+        for cell in sorted(set(want_cells) & set(got_cells)):
+            want, got = want_cells[cell], got_cells[cell]
+            bound = tol * max(abs(want), 1e-9) if rel else tol
+            if abs(got - want) > bound:
+                failures.append(
+                    f"{key} {cell[0]}/{cell[1]}: {got:.4f} vs baseline "
+                    f"{want:.4f} (tol {tol:.0%} rel)" if rel else
+                    f"{key} {cell[0]}/{cell[1]}: {got:.4f} vs baseline "
+                    f"{want:.4f} (tol {tol} abs)")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tol-acc", type=float, default=0.08,
+                    help="absolute accuracy delta allowed per sweep point")
+    ap.add_argument("--tol-inl", type=float, default=0.25,
+                    help="relative INL delta allowed per sweep cell")
+    args = ap.parse_args()
+
+    with open(BASELINE) as f:
+        baseline = json.load(f)
+    if not baseline.get("quick", False):
+        print("[device-gate] note: baseline was recorded with quick=False; "
+              "the gate compares a quick run against it")
+    results = device_sweep.run(quick=True)
+
+    failures = compare(results, baseline, args.tol_acc, args.tol_inl)
+    if failures:
+        print(f"\n[device-gate] FAIL — {len(failures)} deltas over "
+              "tolerance vs benchmarks/BENCH_device.json:")
+        for fail in failures:
+            print("  " + fail)
+        print("If the shift is intentional, re-record the (quick) "
+              "baseline: rm benchmarks/BENCH_device.json && PYTHONPATH=src "
+              "python -m benchmarks.run --only device_sweep")
+        return 1
+    print("\n[device-gate] OK — device corners within tolerance of "
+          "BENCH_device.json")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

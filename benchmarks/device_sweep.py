@@ -55,16 +55,22 @@ def _ramp_inl_sweep(quick: bool):
     return out
 
 
-def _accuracy_under(params, data, dev, seed: int = 0):
+def _accuracy_under(params, data, dev, seed: int = 0, tiled: bool = False):
     """Eval with weight crossbars aged by ``dev`` and the NL-ADC ramps
-    programmed per ``dev`` (infer mode), read noise per minibatch."""
+    programmed per ``dev`` (infer mode), read noise per minibatch.
+
+    ``tiled=True`` ages via the deployment path (``age_params`` with no
+    rng: per-tile TilePlan-keyed draws — what ``ServingEngine`` does);
+    the default keeps the legacy sequential stream the recorded Supp. S13
+    numbers are pinned on."""
     (_, _), (xte, yte) = data
     spec = NN.LSTMSpec(
         n_in=40, n_hidden=32,
         analog=AnalogConfig(enabled=True, adc_bits=5, input_bits=5,
                             mode="infer", device=dev))
     acts = NN.make_gate_acts(spec.analog)
-    aged = dev.age_params(params, np.random.default_rng(seed))
+    aged = dev.age_params(params) if tiled \
+        else dev.age_params(params, np.random.default_rng(seed))
 
     @jax.jit
     def predict(p, xb, key):
@@ -95,18 +101,33 @@ def _accuracy_sweep(quick: bool):
             f"t={k}:{v:.3f}" for k, v in row.items()))
     # drift hurts; the stressed corner's mitigation stack keeps it usable
     assert out["paper-infer"]["0e+00s"] >= 0.5
-    return out
+    # the DEPLOYMENT aging path (per-tile TilePlan-keyed draws, rng=None —
+    # what ServingEngine actually runs) recorded separately so the CI gate
+    # trips on regressions in the tile-keyed code too
+    tiled = {}
+    for preset in AGING_PRESETS:
+        base = get_device(preset)
+        row = {}
+        for t in (0.0, 86_400.0):
+            dev = base.with_drift(t) if t > 0 else base
+            row[f"{t:.0e}s"] = round(
+                _accuracy_under(params, data, dev, tiled=True), 4)
+        tiled[preset] = row
+        print(f"  {preset:12} (tiled) " + "  ".join(
+            f"t={k}:{v:.3f}" for k, v in row.items()))
+    return out, tiled
 
 
 def run(quick=True):
     print("=== device sweep: programmed-ramp INL vs redundancy ===")
     ramp_inl = _ramp_inl_sweep(quick)
     print("=== device sweep: KWS accuracy vs drift time (aged crossbars) ===")
-    accuracy = _accuracy_sweep(quick)
+    accuracy, accuracy_tiled = _accuracy_sweep(quick)
     results = {
         "quick": quick,
         "ramp_inl_lsb": ramp_inl,
         "kws_accuracy": accuracy,
+        "kws_accuracy_tiled": accuracy_tiled,
         "drift_times_s": list(DRIFT_TIMES_S),
     }
     if not quick or not os.path.exists(OUT_PATH):

@@ -3,5 +3,6 @@
 from repro.ckpt.checkpoint import (  # noqa: F401
     CheckpointManager,
     load_checkpoint,
+    read_metadata,
     save_checkpoint,
 )

@@ -52,6 +52,17 @@ def _from_saved(arr: np.ndarray, dtype_name: str):
     return arr
 
 
+def _json_default(o):
+    """Metadata is caller-supplied; tolerate stray numpy scalars/arrays."""
+    if isinstance(o, np.integer):
+        return int(o)
+    if isinstance(o, np.floating):
+        return float(o)
+    if isinstance(o, np.ndarray):
+        return o.tolist()
+    raise TypeError(f"not JSON-serializable: {type(o).__name__}")
+
+
 def _flatten_with_paths(tree):
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     paths = [jax.tree_util.keystr(p)
@@ -76,7 +87,7 @@ def save_checkpoint(root: str, step: int, tree, *,
     manifest = {"step": step, "paths": paths, "dtypes": dtypes,
                 "metadata": metadata or {}, "n_leaves": len(leaves)}
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump(manifest, f)
+        json.dump(manifest, f, default=_json_default)
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)          # atomic validity marker
@@ -92,6 +103,22 @@ def list_checkpoints(root: str) -> List[int]:
                 and os.path.exists(os.path.join(root, name, "manifest.json")):
             steps.append(int(name[5:]))
     return sorted(steps)
+
+
+def read_metadata(root: str, *, step: Optional[int] = None):
+    """Peek a checkpoint's metadata without loading any leaf arrays.
+
+    Callers that must size their restore template from the checkpoint
+    itself (e.g. ``ServingEngine.restore`` reading the saved engine
+    geometry) use this before :func:`load_checkpoint`.  Returns
+    ``(step, metadata)``.
+    """
+    steps = list_checkpoints(root)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints under {root}")
+    step = steps[-1] if step is None else step
+    with open(os.path.join(root, f"step_{step:08d}", "manifest.json")) as f:
+        return step, json.load(f)["metadata"]
 
 
 def load_checkpoint(root: str, tree_like, *, step: Optional[int] = None,

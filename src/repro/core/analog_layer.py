@@ -126,8 +126,10 @@ class AnalogActivation:
         self.name = name
         self.cfg = cfg
         self._adc: Optional[NLADC] = None
+        self._ideal_ramp: Optional[Ramp] = None
         if cfg.enabled:
             ramp = build_ramp(name, cfg.adc_bits)
+            self._ideal_ramp = ramp
             if cfg.mode == "infer":
                 # Deployment: the device model's build stage realizes the
                 # programmed chip (write noise + stuck faults + redundancy +
@@ -143,6 +145,24 @@ class AnalogActivation:
     @property
     def ramp(self) -> Optional[Ramp]:
         return self._adc.ramp if self._adc is not None else None
+
+    @property
+    def ideal_ramp(self) -> Optional[Ramp]:
+        """The as-designed ramp, before any build-stage programming."""
+        return self._ideal_ramp
+
+    def redeploy(self, ramp: Ramp) -> None:
+        """Swap in newly-realized comparator thresholds (chip re-program).
+
+        The serving engine's :class:`repro.serve.lifecycle.RecalScheduler`
+        calls this when device age or a re-calibration changes the physical
+        ramp.  Thresholds are closure constants inside jitted step
+        functions, so any caller holding a jitted trace must re-jit after a
+        redeploy (``ServingEngine`` does).
+        """
+        if self._adc is None:
+            raise ValueError(f"activation {self.name!r} has no NL-ADC")
+        self._adc = NLADC(ramp)
 
     def _exact(self, x):
         import repro.nn.activations as acts

@@ -175,6 +175,23 @@ class TilePlan:
     def devices_per_crossbar(self) -> int:
         return self.tile_rows * self.tile_cols
 
+    def blocks(self):
+        """Yield ``((i, j), row_slice, col_slice)`` per physical crossbar.
+
+        The slices are clipped to the logical (n_in, n_out) extent, so the
+        last row/column tile of a non-multiple matrix is partial.  This is
+        the canonical tile enumeration: build-stage device draws key their
+        RNG streams off these (i, j) coordinates (repro.core.device), which
+        makes per-tile populations independent of visit order.
+        """
+        for i in range(self.n_row_tiles):
+            rs = slice(i * self.tile_rows,
+                       min((i + 1) * self.tile_rows, self.n_in))
+            for j in range(self.n_col_tiles):
+                cs = slice(j * self.tile_cols,
+                           min((j + 1) * self.tile_cols, self.n_out))
+                yield (i, j), rs, cs
+
 
 def plan_tiles(n_in: int, n_out: int,
                tile_rows: int = 633, tile_cols: int = 512,

@@ -206,8 +206,19 @@ class DeviceModel:
     def _build_rng(self, *salt: int) -> np.random.Generator:
         return np.random.default_rng([self.seed & 0xFFFFFFFF, *salt])
 
+    def tile_rng(self, key: str, *salt: int) -> np.random.Generator:
+        """RNG for one crossbar tile's build-stage draws.
+
+        Seeded purely by ``(seed, crc32(key), *salt)`` — typically the leaf's
+        pytree path plus the :meth:`TilePlan.blocks` tile coordinates — so
+        every tile's device population is independent of the order tiles
+        (or param-tree leaves) are visited in.
+        """
+        return self._build_rng(zlib.crc32(key.encode()), *salt)
+
     def program(self, ramp: Ramp,
-                rng: Optional[np.random.Generator] = None) -> ProgrammedRamp:
+                rng: Optional[np.random.Generator] = None,
+                *, instance: str = "") -> ProgrammedRamp:
         """Program one NL-ADC ramp column under this model.
 
         Wraps the Supp. S9/S11 pipeline (``program_ramp`` /
@@ -216,9 +227,17 @@ class DeviceModel:
         the programmed conductances (re-calibrating afterwards, i.e.
         calibrate-at-deployment).  The rng stream matches calling the
         calibration functions directly with the same arguments.
+
+        ``instance`` decorrelates physically distinct copies of the same
+        ramp (e.g. the ADC periphery of different crossbar tiles): the
+        default empty string reproduces the legacy one-chip-per-(name, bits)
+        stream bit-for-bit.
         """
         if rng is None:
-            rng = self._build_rng(zlib.crc32(ramp.name.encode()), ramp.bits)
+            salt = [zlib.crc32(ramp.name.encode()), ramp.bits]
+            if instance:
+                salt.append(zlib.crc32(instance.encode()))
+            rng = self._build_rng(*salt)
         sigma = self.write.sigma_us if self.write is not None else 0.0
         stuck = self.stuck.prob if self.stuck is not None else 0.0
         cal = self.calibration.one_point
@@ -242,17 +261,18 @@ class DeviceModel:
                                   n_cali_devices=n_cali)
         return prog
 
-    def deploy_ramp(self, ramp: Ramp) -> Ramp:
+    def deploy_ramp(self, ramp: Ramp, *, instance: str = "") -> Ramp:
         """The comparator thresholds a deployed chip actually realizes.
 
         Identity when the model has no build-stage nonideality; otherwise
         the programmed (noisy/faulty/redundant/calibrated/drifted) ramp,
-        drawn deterministically from ``seed`` + the ramp identity so every
-        backend — and every re-build of the activation — sees the same chip.
+        drawn deterministically from ``seed`` + the ramp identity (plus the
+        optional ``instance`` tile key) so every backend — and every
+        re-build of the activation — sees the same chip.
         """
         if not self.has_build_stage:
             return ramp
-        return self.program(ramp).programmed
+        return self.program(ramp, instance=instance).programmed
 
     def age_weights(self, w: np.ndarray,
                     rng: np.random.Generator) -> np.ndarray:
@@ -274,13 +294,54 @@ class DeviceModel:
             w = self.drift.model().drift_weights(w, self.drift.t_s, rng)
         return w
 
+    def age_weights_tiled(self, w: np.ndarray, key: str,
+                          plan: Optional[CB.TilePlan] = None) -> np.ndarray:
+        """:meth:`age_weights`, drawn independently per physical crossbar.
+
+        The matrix's last two dims are partitioned by ``plan`` (default: the
+        paper's 633x512 tiling via :func:`repro.core.crossbar.plan_tiles`);
+        each tile's write-noise/fault/drift draw comes from
+        :meth:`tile_rng` keyed on ``(key, leading-index, i, j)``.  Two tiles
+        of one logical matrix therefore carry *independent* device
+        populations (they are different physical chips' worth of cells), and
+        the result is invariant to tile visit order.  Leading dims beyond
+        the last two (scan-over-layers stacking) are independent matrices.
+        """
+        w = np.asarray(w, dtype=np.float64)
+        mats = w.reshape((-1,) + w.shape[-2:])
+        p = plan if plan is not None else CB.plan_tiles(
+            mats.shape[1], mats.shape[2])
+        if (p.n_in, p.n_out) != mats.shape[1:]:
+            # blocks() only covers the plan's extent; a mismatched plan
+            # would leave np.empty garbage in the uncovered region
+            raise ValueError(
+                f"plan covers ({p.n_in}, {p.n_out}) but the matrix is "
+                f"{mats.shape[1:]}; derive the plan from the leaf shape")
+        out = np.empty_like(mats)
+        for mi in range(mats.shape[0]):
+            for (ti, tj), rs, cs in p.blocks():
+                out[mi, rs, cs] = self.age_weights(
+                    mats[mi, rs, cs], self.tile_rng(key, mi, ti, tj))
+        return out.reshape(w.shape)
+
     def age_params(self, params, rng: Optional[np.random.Generator] = None,
-                   min_ndim: int = 2):
-        """Apply :meth:`age_weights` to every matrix leaf of a param pytree.
+                   min_ndim: int = 2,
+                   plan: Optional[CB.TilePlan] = None):
+        """Apply build-stage aging to every matrix leaf of a param pytree.
 
         Leaves with fewer than ``min_ndim`` dims (biases, norm scales,
         scalars) pass through untouched — they live in digital registers,
         not crossbar cells.  Returns a pytree of the original leaf dtypes.
+
+        With ``rng=None`` (the deployment path: :class:`ServingEngine`)
+        every leaf is aged **per crossbar tile** via
+        :meth:`age_weights_tiled`, keyed by the leaf's pytree path + the
+        :class:`TilePlan` tile coordinates — deterministic for a given
+        ``seed`` and independent of leaf/tile visit order, so a restarted
+        engine realizes the identical chip.  Passing an explicit ``rng``
+        keeps the legacy sequential stream (one generator threaded through
+        the whole tree — the Supp. S13 benchmark call sequences, pinned
+        bit-for-bit by tests/test_device.py).
         """
         if not self.has_build_stage:
             return params
@@ -288,7 +349,17 @@ class DeviceModel:
         import jax.numpy as jnp
 
         if rng is None:
-            rng = self._build_rng(1)
+            flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+            out = []
+            for path, w in flat:
+                if getattr(w, "ndim", 0) < min_ndim:
+                    out.append(w)
+                    continue
+                aged = self.age_weights_tiled(
+                    np.asarray(w, np.float64), jax.tree_util.keystr(path),
+                    plan)
+                out.append(jnp.asarray(aged.astype(np.asarray(w).dtype)))
+            return jax.tree_util.tree_unflatten(treedef, out)
 
         def one(w):
             if getattr(w, "ndim", 0) < min_ndim:

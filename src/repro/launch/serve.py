@@ -2,6 +2,14 @@
 
 Spins up the batched serving engine, submits a wave of synthetic requests,
 and reports tokens/s + per-request outputs.
+
+Device-lifecycle knobs (``--age-per-step-s`` / ``--recal-every`` /
+``--recal-inl-lsb``) attach a :class:`repro.serve.lifecycle.RecalScheduler`
+to the engine: device age advances every step, INL probes run on the
+cadence, and one-point re-calibration fires past the threshold (trace
+printed at exit).  ``--ckpt-dir`` checkpoints the whole deployment at the
+end of the run; with ``--resume`` the engine restores from the latest
+checkpoint there instead of programming a fresh chip.
 """
 
 from __future__ import annotations
@@ -18,6 +26,7 @@ from repro.core.backend import backend_names
 from repro.core.device import device_names, resolve_device
 from repro.nn.model import build
 from repro.serve.engine import Request, ServingEngine
+from repro.serve.lifecycle import RecalPolicy
 
 
 def main():
@@ -39,6 +48,19 @@ def main():
                     default="", help="override AnalogSpec.mode (most LM "
                     "configs default to 'exact'; pass 'infer' for the full "
                     "deployment simulation so --device actually acts)")
+    ap.add_argument("--age-per-step-s", type=float, default=0.0,
+                    help="device seconds added per engine step; > 0 turns "
+                         "on the re-calibration scheduler (infer mode only)")
+    ap.add_argument("--recal-every", type=int, default=64,
+                    help="engine steps between INL probes")
+    ap.add_argument("--recal-inl-lsb", type=float, default=1.0,
+                    help="mean deployed INL (LSB) that triggers one-point "
+                         "re-calibration")
+    ap.add_argument("--ckpt-dir", default="",
+                    help="checkpoint the deployment here at end of run")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the deployment from --ckpt-dir instead "
+                         "of programming a fresh chip")
     args = ap.parse_args()
 
     cfg = configs.get_smoke(args.arch) if args.smoke \
@@ -60,15 +82,43 @@ def main():
     device = None
     if cfg.analog.mode == "infer":
         device = resolve_device(cfg.analog.device)
-        if device.has_build_stage:
+        if device.has_build_stage and not args.resume:
             print(f"[serve] applying device model {device.name!r} build "
-                  "stage to params (write noise / faults / drift)")
+                  "stage to params (write noise / faults / drift; "
+                  "per-tile TilePlan-keyed draws)")
     elif args.device:
         print(f"[serve] note: --device {args.device} is inert in analog "
               f"mode {cfg.analog.mode!r}; pass --analog-mode infer for the "
               "deployment simulation")
-    engine = ServingEngine(model, params, max_batch=args.max_batch,
-                           max_len=args.max_len, device=device)
+    recal = None
+    if args.age_per_step_s > 0:
+        if device is None:
+            ap.error("--age-per-step-s requires --analog-mode infer (the "
+                     "lifecycle acts on a deployed device model)")
+        recal = RecalPolicy(age_per_step_s=args.age_per_step_s,
+                            check_every=args.recal_every,
+                            inl_threshold_lsb=args.recal_inl_lsb)
+    if args.resume:
+        if not args.ckpt_dir:
+            ap.error("--resume requires --ckpt-dir")
+        engine = ServingEngine.restore(model, args.ckpt_dir,
+                                       params_like=params)
+        sched = engine.scheduler
+        if recal is not None:
+            if sched is None:
+                ap.error("--age-per-step-s with --resume needs a checkpoint "
+                         "that was serving with a scheduler (this one has "
+                         "none, and re-programming its ramps would discard "
+                         "the restored chip state)")
+            # knob changes are safe on resume; the chip state is not touched
+            sched.policy = recal
+        print(f"[serve] resumed deployment from {args.ckpt_dir}"
+              + (f" (age {sched.age_s:.0f}s, {sched.n_recals} recals)"
+                 if sched is not None else ""))
+    else:
+        engine = ServingEngine(model, params, max_batch=args.max_batch,
+                               max_len=args.max_len, device=device,
+                               recal=recal)
 
     rng = np.random.default_rng(0)
     for uid in range(args.requests):
@@ -85,6 +135,28 @@ def main():
     dt = time.time() - t0
     print(f"[serve] {args.requests} requests, {n_tokens} tokens "
           f"in {dt:.2f}s ({n_tokens / max(dt, 1e-9):.1f} tok/s)")
+    if engine.scheduler is not None:
+        s = engine.scheduler
+        print(f"[serve] lifecycle: age {s.age_s:.0f}s, "
+              f"{len(s.events)} probes, {s.n_recals} recalibrations")
+        for ev in s.events:
+            line = (f"  step {ev['step']:>5}  age {ev['age_s']:.0f}s  "
+                    f"INL {ev['inl_lsb']:.3f} LSB")
+            if ev["recalibrated"]:
+                line += f" -> recal -> {ev['inl_after_lsb']:.3f} LSB"
+            print(line)
+    if args.ckpt_dir:
+        if engine.scheduler is not None:
+            # the scheduler's step clock is cumulative across resumes
+            step = engine.scheduler.step_count
+        else:
+            # keep steps monotonic across resumed runs so read_metadata's
+            # latest-checkpoint pick never resurrects an older deployment
+            from repro.ckpt.checkpoint import list_checkpoints
+            prev = list_checkpoints(args.ckpt_dir)
+            step = (prev[-1] if prev else 0) + n_tokens
+        out = engine.save(args.ckpt_dir, step=step)
+        print(f"[serve] deployment checkpointed to {out}")
 
 
 if __name__ == "__main__":

@@ -1,1 +1,9 @@
-"""Batched serving engine: prefill/decode split, request scheduling."""
+"""Batched serving engine: prefill/decode split, request scheduling,
+device lifecycle (aging + re-calibration + checkpointable deployments)."""
+
+from repro.serve.engine import Request, ServingEngine  # noqa: F401
+from repro.serve.lifecycle import (  # noqa: F401
+    RecalPolicy,
+    RecalScheduler,
+    analog_activations,
+)

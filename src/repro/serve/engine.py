@@ -39,20 +39,57 @@ class Request:
     # filled by the engine
     generated: Optional[List[int]] = None
 
+    def to_dict(self) -> dict:
+        return {"uid": self.uid, "prompt": np.asarray(self.prompt).tolist(),
+                "max_new_tokens": self.max_new_tokens, "eos_id": self.eos_id,
+                "generated": list(self.generated or [])}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Request":
+        return cls(uid=d["uid"],
+                   prompt=np.asarray(d["prompt"], np.int32),
+                   max_new_tokens=d["max_new_tokens"], eos_id=d["eos_id"],
+                   generated=list(d["generated"]))
+
 
 class ServingEngine:
     """``device``: an optional :class:`repro.core.device.DeviceModel` whose
     build stage (per-chip write noise, stuck faults, retention drift — drawn
-    once, host-side) is applied to the weight matrices at engine
-    construction, simulating serving from an actually-programmed chip.  The
-    step-time stages (read noise, programmed NL-ADC ramps) ride on the
-    model's ``AnalogConfig`` as usual.  The caller decides when aging
-    composes with the model's analog mode (``launch.serve`` passes a device
-    only in ``mode="infer"`` — aged weights with a pristine NL-ADC would be
-    a chip that cannot exist)."""
+    once, host-side, **per crossbar tile** keyed by the TilePlan) is applied
+    to the weight matrices at engine construction, simulating serving from
+    an actually-programmed chip.  The step-time stages (read noise,
+    programmed NL-ADC ramps) ride on the model's ``AnalogConfig`` as usual.
+    The caller decides when aging composes with the model's analog mode
+    (``launch.serve`` passes a device only in ``mode="infer"`` — aged
+    weights with a pristine NL-ADC would be a chip that cannot exist).
+
+    ``recal``: an optional :class:`repro.serve.lifecycle.RecalPolicy`.
+    With one, the engine owns a :class:`RecalScheduler` that advances device
+    age every :meth:`step`, probes deployed-ramp INL on the policy cadence,
+    triggers one-point re-calibration past the threshold, re-ages the
+    weight crossbars to the current age, and re-jits (reprogramming the
+    chip invalidates the compiled step's threshold constants).
+
+    The whole deployment — aged params, programmed ramps, scheduler clock,
+    noise-key schedule, decode caches, in-flight requests — checkpoints via
+    :meth:`save` and resumes bit-identically via :meth:`restore`.
+    """
 
     def __init__(self, model, params, *, max_batch: int, max_len: int,
-                 device=None, noise_seed: int = 0):
+                 device=None, noise_seed: int = 0, recal=None):
+        from repro.serve.lifecycle import RecalScheduler, analog_activations
+
+        self.device = device
+        self._pristine_params = params
+        self._acts = analog_activations(model)
+        self.scheduler = None
+        if recal is not None:
+            if device is None:
+                raise ValueError("recal policy requires a device model")
+            # The scheduler re-programs the ramps (fab calibration at age 0,
+            # then drift to the preset's age) before the jits below bake
+            # thresholds in.
+            self.scheduler = RecalScheduler(device, self._acts, recal)
         if device is not None and device.has_build_stage:
             params = device.age_params(params)
         self.model = model
@@ -75,6 +112,14 @@ class ServingEngine:
         self.slot_pos = np.zeros(max_batch, np.int32)     # next position
         self.slot_last = np.zeros(max_batch, np.int32)    # last token
         self.queue: List[Request] = []
+        self._refresh_jit()
+
+    def _refresh_jit(self):
+        """(Re-)build the jitted step closures.
+
+        NL-ADC thresholds are closure constants, so any chip re-program
+        (scheduler redeploy, checkpoint restore) must drop the old traces.
+        """
         self._jit_decode = jax.jit(self._decode_all)
         self._jit_prefill = jax.jit(self._prefill_slot,
                                     static_argnames=("length",))
@@ -199,7 +244,24 @@ class ServingEngine:
             if done:
                 self.slot_free[s] = True
                 self.slot_req[s] = None
+        if self.scheduler is not None and self.scheduler.tick():
+            self._on_chip_reprogram()
         return out
+
+    def _on_chip_reprogram(self):
+        """The scheduler moved the deployed thresholds (aging/recal).
+
+        Weight crossbars drift on the same clock: re-realize them from the
+        pristine params at the scheduler's current age (deterministic —
+        the per-tile draws are TilePlan-keyed, so the same age is the same
+        chip on every rebuild), then drop the stale jitted traces.
+        """
+        sched = self.scheduler
+        if self.device is not None and sched.policy.age_per_step_s > 0:
+            aged_dev = self.device.with_drift(sched.age_s)
+            if aged_dev.has_build_stage:
+                self.params = aged_dev.age_params(self._pristine_params)
+        self._refresh_jit()
 
     def run_to_completion(self, max_iters: int = 10_000) -> int:
         """Drain the queue; returns the number of tokens generated."""
@@ -209,3 +271,105 @@ class ServingEngine:
                 break
             n += len(self.step())
         return n
+
+    # -- checkpoint / restore (repro.ckpt) ------------------------------
+
+    def _ckpt_tree(self, include_pristine: bool):
+        """The array state of the deployment (structure must be stable
+        between save and restore — see ``load_checkpoint``).
+
+        ``pristine`` (the pre-aging params, needed to re-realize the
+        crossbars at a future age) is only stored when a scheduler exists —
+        without one nothing ever re-ages, and the copy would double the
+        checkpoint for no reader.
+        """
+        tree = {
+            "params": self.params,                       # aged, as served
+            "state": self.state,
+            "noise_key": self._noise_key,
+            "slot_pos": np.asarray(self.slot_pos),
+            "slot_last": np.asarray(self.slot_last),
+            "slot_free": np.asarray(self.slot_free, np.bool_),
+            # Deployed comparator thresholds per activation — saved as the
+            # realized float64 arrays so a restore is bitwise the running
+            # chip even when the save lands between scheduler probes.
+            "ramps": {name: np.asarray(act.ramp.thresholds)
+                      for name, act in self._acts.items()},
+        }
+        if include_pristine:
+            tree["pristine"] = self._pristine_params
+        return tree
+
+    def save(self, root: str, step: int) -> str:
+        """Atomic full-deployment checkpoint; returns the directory."""
+        from repro.ckpt.checkpoint import save_checkpoint
+
+        meta = {
+            "engine": {"max_batch": self.max_batch, "max_len": self.max_len},
+            "device": None if self.device is None else self.device.to_dict(),
+            "scheduler": None if self.scheduler is None
+            else self.scheduler.to_dict(),
+            "requests": {
+                "slots": [None if r is None else r.to_dict()
+                          for r in self.slot_req],
+                "queue": [r.to_dict() for r in self.queue],
+            },
+        }
+        return save_checkpoint(
+            root, step,
+            self._ckpt_tree(include_pristine=self.scheduler is not None),
+            metadata=meta)
+
+    @classmethod
+    def restore(cls, model, root: str, *, step: Optional[int] = None,
+                params_like=None) -> "ServingEngine":
+        """Resume a checkpointed deployment: same chip, same next token.
+
+        ``params_like``: a pytree matching the model's params structure
+        (shapes/dtypes only — values are overwritten).  Defaults to
+        ``model.init(PRNGKey(0))``.  The restored engine reproduces the
+        uninterrupted run bit-for-bit: aged params, programmed thresholds,
+        scheduler clock, per-step noise keys (the checkpointed key
+        schedule, not a fresh seed — bitwise resume IS the contract),
+        decode caches, and in-flight requests all come from the checkpoint.
+        """
+        from repro.ckpt.checkpoint import load_checkpoint, read_metadata
+        from repro.core.device import device_from_dict
+        from repro.serve.lifecycle import RecalScheduler
+
+        step, meta = read_metadata(root, step=step)
+        if params_like is None:
+            params_like = model.init(jax.random.PRNGKey(0))
+        eng = cls(model, params_like,
+                  max_batch=meta["engine"]["max_batch"],
+                  max_len=meta["engine"]["max_len"])
+        has_sched = meta["scheduler"] is not None
+        tree, _, _ = load_checkpoint(
+            root, eng._ckpt_tree(include_pristine=has_sched), step=step)
+        # load_checkpoint returns host numpy; the decode state is mutated
+        # with jnp .at[] updates (slot merge) so put it back on device.
+        eng.params = jax.tree.map(jnp.asarray, tree["params"])
+        # without a scheduler nothing re-ages, so the served params stand
+        # in for pristine (never read again)
+        eng._pristine_params = jax.tree.map(
+            jnp.asarray, tree["pristine"] if has_sched else tree["params"])
+        eng.state = jax.tree.map(jnp.asarray, tree["state"])
+        eng._noise_key = jnp.asarray(tree["noise_key"])
+        eng.slot_pos = np.asarray(tree["slot_pos"], np.int32)
+        eng.slot_last = np.asarray(tree["slot_last"], np.int32)
+        eng.slot_free = [bool(b) for b in np.asarray(tree["slot_free"])]
+        eng.slot_req = [None if d is None else Request.from_dict(d)
+                        for d in meta["requests"]["slots"]]
+        eng.queue = [Request.from_dict(d) for d in meta["requests"]["queue"]]
+        if meta["device"] is not None:
+            eng.device = device_from_dict(meta["device"])
+        # Reprogram the chip exactly as checkpointed.
+        for name, thr in tree["ramps"].items():
+            act = eng._acts[name]
+            act.redeploy(act.ramp.with_thresholds(
+                np.asarray(thr, np.float64)))
+        if meta["scheduler"] is not None:
+            eng.scheduler = RecalScheduler.from_dict(
+                meta["scheduler"], eng._acts)
+        eng._refresh_jit()
+        return eng

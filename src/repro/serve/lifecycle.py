@@ -1,0 +1,313 @@
+"""Device lifecycle for the serving engine: aging, INL probes, re-calibration.
+
+A deployed chip is not static: the programmed NL-ADC ramp conductances (and
+the weight crossbars) drift over shelf/serving time (Supp. S13), and the
+paper's answer is periodic **one-point re-calibration** — the same Supp. S9
+``V_init`` shift realized with bias memristors, re-applied in the field.
+This module owns that loop:
+
+* :class:`RampState` — the *persistent physical identity* of one programmed
+  ramp column: the conductances as written at the fab (write noise + faults
+  + redundancy winner), plus the accumulated calibration shift.  Thresholds
+  at any device age are a pure function of ``(state, device model, age)``,
+  which is what makes an engine restart bit-reproducible.
+* :class:`RecalScheduler` — advances device age across serve steps, probes
+  mean INL (cheap: host-side threshold arrays vs the ideal ramp), triggers
+  one-point re-calibration of every ramp when the probe crosses
+  ``RecalPolicy.inl_threshold_lsb``, and records an
+  age → recalibrate → recovered-accuracy trace.  On every probe it
+  re-deploys the aged thresholds into the model's
+  :class:`~repro.core.analog_layer.AnalogActivation` objects — the caller
+  (``ServingEngine``) re-jits its step functions when told so.
+
+All randomness (drift dispersion, the write noise on the re-calibration
+bias devices) is keyed via :meth:`DeviceModel.tile_rng` off stable string
+identities + integer salts, never off call order — so the scheduler state
+serializes (:meth:`RecalScheduler.to_dict`) and resumes to the identical
+device realization.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core import calibration as CAL
+from repro.core.analog_layer import AnalogActivation
+from repro.core.device import DeviceModel, Drift
+from repro.core.nladc import Ramp, inl_lsb, ramp_from_conductances
+
+
+def analog_activations(model) -> Dict[str, AnalogActivation]:
+    """Discover a model's NL-ADC activations, keyed by attribute name.
+
+    Every model family keeps its :class:`AnalogActivation` objects as
+    instance attributes (``act``, ``sigmoid_act``, ...); the sort makes the
+    key order — and therefore the checkpoint tree — deterministic.  Only
+    activations that actually carry a programmed ramp participate in the
+    lifecycle.
+    """
+    out: Dict[str, AnalogActivation] = {}
+    for attr in sorted(vars(model)):
+        v = getattr(model, attr)
+        if isinstance(v, AnalogActivation) and v.ramp is not None \
+                and v.ideal_ramp is not None:
+            out[attr] = v
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class RecalPolicy:
+    """Knobs for the serving-time re-calibration loop.
+
+    ``age_per_step_s``     device seconds added per engine step (a serving
+                           simulation runs much faster than wall-clock shelf
+                           life; 0 freezes age — probes still run).
+    ``check_every``        engine steps between INL probes (<= 0 disables).
+    ``inl_threshold_lsb``  mean deployed INL (in LSBs, across all ramps)
+                           above which one-point re-calibration triggers.
+    """
+
+    age_per_step_s: float = 0.0
+    check_every: int = 64
+    inl_threshold_lsb: float = 1.0
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class RampState:
+    """One ramp column's programmed devices + accumulated calibration."""
+
+    def __init__(self, name: str, ideal: Ramp, g0_us: np.ndarray,
+                 cal_shift: float, n_cali: int):
+        self.name = name                      # tile/instance key
+        self.ideal = ideal
+        self.g0_us = np.asarray(g0_us, np.float64)
+        self.cal_shift = float(cal_shift)
+        self.n_cali = int(n_cali)
+
+    @classmethod
+    def program(cls, device: DeviceModel, ideal: Ramp,
+                name: str) -> "RampState":
+        """Fab-time programming of a *fresh* (age-0) column.
+
+        Uses the device model's write/stuck/redundancy/calibration stages
+        but NOT its drift stage — under the scheduler, age is dynamic state,
+        not a preset constant.  The one-point calibration performed here is
+        the factory calibration; later shifts come from
+        :meth:`recalibrate`.
+        """
+        fresh = device.replace(drift=None)
+        prog = fresh.program(ideal, instance=name)
+        # The calibration realized at programming time is a constant V_init
+        # shift; recover it against the uncalibrated rebuild so thresholds
+        # at any age decompose as drift(g0) + cal_shift.
+        base = ramp_from_conductances(ideal, prog.conductances_us)
+        shift = float(prog.programmed.thresholds[0] - base.thresholds[0])
+        return cls(name, ideal, prog.conductances_us, shift,
+                   prog.n_cali_devices)
+
+    # -- pure functions of (state, device, age) --------------------------
+
+    def conductances_at(self, device: DeviceModel,
+                        age_s: float) -> np.ndarray:
+        """Programmed conductances after ``age_s`` seconds of retention."""
+        if age_s <= 0:
+            return self.g0_us
+        drift = (device.drift or Drift()).model()
+        # Dispersion keyed by (seed, instance, age) — the same age always
+        # realizes the same chip, on any engine, after any restart.
+        rng = device.tile_rng(f"ramp-drift:{self.name}",
+                              int(round(age_s * 1000.0)))
+        return drift.drift(self.g0_us, age_s, rng)
+
+    def ramp_at(self, device: DeviceModel, age_s: float) -> Ramp:
+        base = ramp_from_conductances(
+            self.ideal, self.conductances_at(device, age_s))
+        return base.with_thresholds(base.thresholds + self.cal_shift)
+
+    def inl_at(self, device: DeviceModel, age_s: float) -> float:
+        return inl_lsb(self.ramp_at(device, age_s), self.ideal)[0]
+
+    # -- the field operation ---------------------------------------------
+
+    def recalibrate(self, device: DeviceModel, age_s: float,
+                    n_recal: int) -> float:
+        """Supp. S9 one-point shift against the *current* aged ramp.
+
+        The shift devices suffer write noise like any programming op; their
+        rng is keyed by the recal ordinal so replaying the schedule (or
+        resuming from a checkpoint) realizes identical bias devices.
+        Returns the applied shift (volts).
+        """
+        cur = self.ramp_at(device, age_s)
+        sigma = device.write.sigma_us if device.write is not None else 0.0
+        rng = device.tile_rng(f"recal:{self.name}", n_recal)
+        cal, n = CAL.one_point_calibrate(cur, self.ideal, rng,
+                                         sigma_us=sigma)
+        delta = float(cal.thresholds[0] - cur.thresholds[0])
+        self.cal_shift += delta
+        self.n_cali += n
+        return delta
+
+    # -- serialization ----------------------------------------------------
+
+    def to_dict(self) -> dict:
+        return {"name": self.name, "ramp_name": self.ideal.name,
+                "bits": self.ideal.bits, "g0_us": self.g0_us.tolist(),
+                "cal_shift": self.cal_shift, "n_cali": self.n_cali}
+
+    @classmethod
+    def from_dict(cls, d: dict, ideal: Ramp) -> "RampState":
+        if (ideal.name, ideal.bits) != (d["ramp_name"], d["bits"]):
+            raise ValueError(
+                f"ramp state {d['name']!r} was programmed for "
+                f"({d['ramp_name']}, {d['bits']}b), got "
+                f"({ideal.name}, {ideal.bits}b)")
+        return cls(d["name"], ideal, np.asarray(d["g0_us"], np.float64),
+                   d["cal_shift"], d["n_cali"])
+
+
+class RecalScheduler:
+    """Ages a deployment across serve steps and re-calibrates on demand.
+
+    ``accuracy_probe``: optional zero-arg callable returning a float —
+    evaluated after each re-calibration (and on the probe before it) so the
+    event trace records recovered accuracy, not just recovered INL.
+    """
+
+    def __init__(self, device: DeviceModel,
+                 activations: Dict[str, AnalogActivation],
+                 policy: RecalPolicy = RecalPolicy(), *,
+                 accuracy_probe: Optional[Callable[[], float]] = None,
+                 _program: bool = True):
+        self.device = device
+        self.policy = policy
+        self.acts = dict(activations)
+        self.accuracy_probe = accuracy_probe
+        # A preset with a Drift stage describes a chip already t_s old at
+        # deployment (aged-1day) — the lifecycle clock starts there.
+        self.age_s = float(device.drift.t_s) if device.drift is not None \
+            else 0.0
+        self.step_count = 0
+        self.n_recals = 0
+        self.events: List[dict] = []
+        self.ramps: Dict[str, RampState] = {}
+        if _program:
+            for name, act in self.acts.items():
+                self.ramps[name] = RampState.program(
+                    device, act.ideal_ramp, name)
+            self.redeploy()
+
+    # -- probes ------------------------------------------------------------
+
+    def probe_inl(self) -> float:
+        """Mean deployed INL across all ramps at the current age (LSBs)."""
+        if not self.ramps:
+            return 0.0
+        return float(np.mean([s.inl_at(self.device, self.age_s)
+                              for s in self.ramps.values()]))
+
+    def redeploy(self) -> bool:
+        """Push current-age thresholds into the activations.
+
+        Returns True when any threshold actually moved (the caller must
+        re-jit then — thresholds are closure constants in step functions).
+        """
+        changed = False
+        for name, state in self.ramps.items():
+            act = self.acts[name]
+            new = state.ramp_at(self.device, self.age_s)
+            old = act.ramp.thresholds
+            if old.shape != new.thresholds.shape \
+                    or np.max(np.abs(old - new.thresholds)) > 0:
+                act.redeploy(new)
+                changed = True
+        return changed
+
+    # -- the serving loop hook --------------------------------------------
+
+    def tick(self, n_steps: int = 1) -> bool:
+        """Advance ``n_steps`` engine steps; probe/recalibrate on cadence.
+
+        A probe fires whenever the step counter *crosses* a multiple of
+        ``check_every`` (once per tick, even if a large ``n_steps`` crosses
+        several), so batched callers can't silently skip a due probe.
+        Returns True when deployed thresholds changed (re-jit required).
+        """
+        prev = self.step_count
+        self.step_count += n_steps
+        self.age_s += self.policy.age_per_step_s * n_steps
+        if self.policy.check_every <= 0 \
+                or self.step_count // self.policy.check_every \
+                == prev // self.policy.check_every:
+            return False
+        return self.check()
+
+    def check(self) -> bool:
+        """One INL probe; re-calibrate every ramp if over threshold."""
+        # Deploy the current-age thresholds FIRST so every probe in this
+        # event (INL and accuracy alike) sees the same chip at the same age.
+        changed = self.redeploy()
+        inl = self.probe_inl()
+        event = {"step": self.step_count, "age_s": self.age_s,
+                 "inl_lsb": round(inl, 4), "recalibrated": False}
+        if self.accuracy_probe is not None:
+            event["accuracy"] = float(self.accuracy_probe())
+        if inl > self.policy.inl_threshold_lsb and self.ramps:
+            for state in self.ramps.values():
+                state.recalibrate(self.device, self.age_s, self.n_recals)
+            self.n_recals += 1
+            event["recalibrated"] = True
+            event["inl_after_lsb"] = round(self.probe_inl(), 4)
+            changed = self.redeploy() or changed
+            if self.accuracy_probe is not None:
+                event["accuracy_recovered"] = float(self.accuracy_probe())
+        self.events.append(event)
+        return changed
+
+    # -- serialization -----------------------------------------------------
+
+    def to_dict(self) -> dict:
+        """Plain-JSON state (device + policy + clock + ramp states)."""
+        return {
+            "device": self.device.to_dict(),
+            "policy": self.policy.to_dict(),
+            "age_s": self.age_s,
+            "step_count": self.step_count,
+            "n_recals": self.n_recals,
+            "events": list(self.events),
+            "ramps": {k: v.to_dict() for k, v in self.ramps.items()},
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict,
+                  activations: Dict[str, AnalogActivation], *,
+                  accuracy_probe: Optional[Callable[[], float]] = None
+                  ) -> "RecalScheduler":
+        """Rebuild from :meth:`to_dict` against live activation objects.
+
+        Does NOT redeploy: the checkpointed threshold arrays are restored
+        separately (``ServingEngine.restore``) so the resumed deployment is
+        bitwise the saved one even when the save landed between probes.
+        """
+        from repro.core.device import device_from_dict
+
+        sched = cls(device_from_dict(d["device"]),
+                    activations, RecalPolicy(**d["policy"]),
+                    accuracy_probe=accuracy_probe, _program=False)
+        sched.age_s = float(d["age_s"])
+        sched.step_count = int(d["step_count"])
+        sched.n_recals = int(d["n_recals"])
+        sched.events = list(d["events"])
+        for name, rd in d["ramps"].items():
+            if name not in sched.acts:
+                raise ValueError(f"checkpointed ramp {name!r} has no "
+                                 f"matching activation; have "
+                                 f"{sorted(sched.acts)}")
+            sched.ramps[name] = RampState.from_dict(
+                rd, sched.acts[name].ideal_ramp)
+        return sched

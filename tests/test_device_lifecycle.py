@@ -1,0 +1,454 @@
+"""Device lifecycle: per-tile build-stage draws, the re-calibration
+scheduler, and checkpointed (restart-reproducible) aged deployments."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import crossbar as CB
+from repro.core.analog_layer import AnalogActivation, AnalogConfig
+from repro.core.device import DeviceModel, StuckAt, WriteNoise, get_device
+from repro.core.nladc import build_ramp
+from repro.serve.lifecycle import RecalPolicy, RecalScheduler
+from repro.subproc import check_in_subprocess
+
+# ---------------------------------------------------------------------------
+# Per-tile build-stage draws (TilePlan-keyed)
+# ---------------------------------------------------------------------------
+
+
+def test_tileplan_blocks_cover_matrix_once():
+    plan = CB.plan_tiles(1300, 600)
+    cover = np.zeros((1300, 600), np.int32)
+    for (i, j), rs, cs in plan.blocks():
+        assert 0 <= i < plan.n_row_tiles and 0 <= j < plan.n_col_tiles
+        cover[rs, cs] += 1
+    np.testing.assert_array_equal(cover, 1)
+
+
+def test_two_tiles_of_one_matrix_decorrelated_stuck_masks():
+    """The tentpole claim: a matrix split across crossbar tiles carries an
+    independent device population per tile — stuck-at masks included."""
+    dev = DeviceModel(name="t", stuck=StuckAt(prob=0.3), seed=3)
+    plan = CB.plan_tiles(128, 96, tile_rows=64, tile_cols=48)
+    w = np.ones((128, 96))
+    aged = dev.age_weights_tiled(w, "w_gates", plan)
+    masks = [(aged[rs, cs] == 0.0) for _, rs, cs in plan.blocks()]
+    assert len(masks) == 4
+    for m in masks:
+        assert 0.1 < m.mean() < 0.5          # the fault stage visibly acts
+    for a in range(len(masks)):
+        for b in range(a + 1, len(masks)):
+            assert not np.array_equal(masks[a], masks[b])
+
+
+def test_tile_draws_permutation_independent():
+    """Each tile's draw depends only on its key — not on visit order."""
+    dev = get_device("aged-1day").replace(stuck=StuckAt(prob=0.05), seed=11)
+    plan = CB.plan_tiles(150, 130, tile_rows=64, tile_cols=48)
+    w = np.random.default_rng(0).normal(0, 0.5, (150, 130))
+    whole = dev.age_weights_tiled(w, "k", plan)
+    blocks = list(plan.blocks())
+    for order in (blocks[::-1], blocks[2:] + blocks[:2]):
+        out = np.empty_like(w)
+        for (i, j), rs, cs in order:
+            out[rs, cs] = dev.age_weights(w[rs, cs],
+                                          dev.tile_rng("k", 0, i, j))
+        np.testing.assert_array_equal(out, whole)
+
+
+def test_age_params_tile_path_keyed_by_leaf_path():
+    """rng=None ages per tile keyed by the pytree path: deterministic,
+    and independent of what OTHER leaves exist in the tree."""
+    dev = get_device("aged-1day")
+    w = jnp.asarray(np.random.default_rng(1).normal(0, 0.5, (64, 48)),
+                    jnp.float32)
+    small = dev.age_params({"lstm": {"w": w}})
+    big = dev.age_params({"lstm": {"w": w},
+                          "fc": {"w": w * 2, "b": jnp.zeros((4,))}})
+    np.testing.assert_array_equal(np.asarray(small["lstm"]["w"]),
+                                  np.asarray(big["lstm"]["w"]))
+    # biases untouched; distinct paths -> distinct draws
+    np.testing.assert_array_equal(np.asarray(big["fc"]["b"]), 0.0)
+    assert np.max(np.abs(np.asarray(big["fc"]["w"]) / 2
+                         - np.asarray(big["lstm"]["w"]))) > 0
+    # explicit-rng (legacy benchmark) path unchanged: sequential stream
+    legacy = dev.age_params({"lstm": {"w": w}}, np.random.default_rng(5))
+    legacy2 = dev.age_params({"lstm": {"w": w}}, np.random.default_rng(5))
+    np.testing.assert_array_equal(np.asarray(legacy["lstm"]["w"]),
+                                  np.asarray(legacy2["lstm"]["w"]))
+
+
+def test_age_weights_tiled_rejects_mismatched_plan():
+    dev = DeviceModel(name="t", write=WriteNoise(), seed=1)
+    small_plan = CB.plan_tiles(64, 48, tile_rows=64, tile_cols=48)
+    with pytest.raises(ValueError, match="plan covers"):
+        dev.age_weights_tiled(np.ones((128, 96)), "k", small_plan)
+
+
+def test_scheduler_batched_ticks_never_skip_probes():
+    """tick(n) probes on cadence *crossings*, not exact multiples."""
+    dev = get_device("paper-infer")
+    sched = RecalScheduler(dev, _acts_for(dev),
+                           RecalPolicy(age_per_step_s=0.0, check_every=64,
+                                       inl_threshold_lsb=10.0))
+    for _ in range(8):                       # 8 x 24 = 192 steps
+        sched.tick(24)
+    # crossings of 64 at 72 (passes 64), 120->144 (passes 128), 192
+    assert [e["step"] for e in sched.events] == [72, 144, 192]
+
+
+def test_deploy_ramp_instance_salt():
+    ramp = build_ramp("tanh", 5)
+    dev = get_device("aged-1day")
+    base = dev.deploy_ramp(ramp)
+    np.testing.assert_array_equal(base.thresholds,
+                                  dev.deploy_ramp(ramp).thresholds)
+    t0 = dev.deploy_ramp(ramp, instance="tile0")
+    t0b = dev.deploy_ramp(ramp, instance="tile0")
+    t1 = dev.deploy_ramp(ramp, instance="tile1")
+    np.testing.assert_array_equal(t0.thresholds, t0b.thresholds)
+    assert np.max(np.abs(t0.thresholds - base.thresholds)) > 0
+    assert np.max(np.abs(t0.thresholds - t1.thresholds)) > 0
+
+
+def test_ref_pallas_parity_on_tile_aged_weights():
+    """Aged weights + programmed thresholds are host-side shared state, so
+    the two backends produce bitwise-identical ADC codes on them — under
+    every preset with a build stage."""
+    from repro.core import backend as BK
+
+    x = jnp.asarray(np.random.default_rng(0).normal(0, 0.6, (4, 64)),
+                    jnp.float32)
+    for preset in ("paper-infer", "aged-1day", "stressed"):
+        dev = get_device(preset)
+        cfg = AnalogConfig(enabled=True, adc_bits=5, mode="infer",
+                           device=dev)
+        act = AnalogActivation("sigmoid", cfg)
+        w = jnp.asarray(
+            dev.age_params({"w": jnp.asarray(
+                np.random.default_rng(1).normal(0, 0.4, (64, 32)),
+                jnp.float32)})["w"])
+        ref = BK.get_backend("ref")
+        pal = BK.get_backend("pallas")
+        thr = act.thresholds_for()
+        y_ref = np.asarray(ref.matmul_nladc(x, w, act.adc, thresholds=thr))
+        y_pal = np.asarray(pal.matmul_nladc(x, w, act.adc, thresholds=thr))
+        # the backend contract (tests/test_backend_parity.py): bitwise-equal
+        # ADC codes; the pallas decode is closed-form (y0 + n*LSB) so raw
+        # floats can differ at ~1e-7 — recover the codes and compare those
+        ramp = act.ramp
+        y0, lsb = ramp.y_table[0], ramp.lsb
+        np.testing.assert_array_equal(
+            np.rint((y_ref - y0) / lsb).astype(np.int64),
+            np.rint((y_pal - y0) / lsb).astype(np.int64))
+
+
+# ---------------------------------------------------------------------------
+# RecalScheduler
+# ---------------------------------------------------------------------------
+
+
+def _acts_for(device, names=("sigmoid", "tanh")):
+    cfg = AnalogConfig(enabled=True, adc_bits=5, mode="infer", device=device)
+    return {n: AnalogActivation(n, cfg) for n in names}
+
+
+def test_scheduler_ages_probes_and_recalibrates():
+    dev = get_device("aged-1day")
+    acts = _acts_for(dev)
+    pol = RecalPolicy(age_per_step_s=1e4, check_every=4,
+                      inl_threshold_lsb=0.4)
+    sched = RecalScheduler(dev, acts, pol)
+    assert sched.age_s == pytest.approx(86_400.0)      # preset's drift age
+    inl0 = sched.probe_inl()
+    assert inl0 > pol.inl_threshold_lsb                # aged chip out of spec
+    for _ in range(8):
+        sched.tick()
+    assert sched.step_count == 8 and sched.n_recals >= 1
+    assert sched.age_s == pytest.approx(86_400.0 + 8e4)
+    assert len(sched.events) == 2                      # probes at 4 and 8
+    ev = sched.events[0]
+    assert ev["recalibrated"] and ev["inl_after_lsb"] < ev["inl_lsb"]
+    # the recalibrated thresholds are live in the activations
+    for name, act in acts.items():
+        got = np.asarray(act.ramp.thresholds)
+        want = sched.ramps[name].ramp_at(dev, sched.age_s).thresholds
+        np.testing.assert_array_equal(got, want)
+
+
+def test_scheduler_below_threshold_never_recals():
+    dev = get_device("paper-infer")                    # fresh, calibrated
+    sched = RecalScheduler(dev, _acts_for(dev),
+                           RecalPolicy(age_per_step_s=0.0, check_every=2,
+                                       inl_threshold_lsb=10.0))
+    for _ in range(6):
+        assert not sched.tick()                        # no threshold motion
+    assert sched.n_recals == 0
+    assert all(not e["recalibrated"] for e in sched.events)
+
+
+def test_scheduler_serialization_roundtrip():
+    dev = get_device("aged-1day")
+    acts = _acts_for(dev)
+    sched = RecalScheduler(dev, acts, RecalPolicy(age_per_step_s=5e3,
+                                                  check_every=3,
+                                                  inl_threshold_lsb=0.4))
+    for _ in range(7):
+        sched.tick()
+    blob = json.dumps(sched.to_dict())                 # plain JSON
+    back = RecalScheduler.from_dict(json.loads(blob), acts)
+    assert back.age_s == sched.age_s
+    assert back.step_count == sched.step_count
+    assert back.n_recals == sched.n_recals
+    assert back.events == sched.events
+    for name in sched.ramps:
+        np.testing.assert_array_equal(back.ramps[name].g0_us,
+                                      sched.ramps[name].g0_us)
+        assert back.ramps[name].cal_shift == sched.ramps[name].cal_shift
+        # deterministic continuation: same thresholds at any future age
+        np.testing.assert_array_equal(
+            back.ramps[name].ramp_at(dev, sched.age_s + 1e4).thresholds,
+            sched.ramps[name].ramp_at(dev, sched.age_s + 1e4).thresholds)
+
+
+def test_recal_recovers_kws_accuracy():
+    """The NEON-style claim on the paper's own workload: an aged-1day
+    deployment re-calibrated by the scheduler lands within a pinned delta
+    of the freshly-programmed (paper-infer) chip."""
+    from benchmarks.device_sweep import _accuracy_under
+    from benchmarks.s13_drift import train_kws
+    from repro.data.pipeline import SyntheticKWS
+    from repro.nn import lstm as NN
+
+    data = SyntheticKWS(seed=0).splits(384, 256)
+    params = train_kws(data, 2, get_device("paper"))
+    acc_fresh = _accuracy_under(params, data, get_device("paper-infer"))
+
+    aged_dev = get_device("aged-1day")
+    spec = NN.LSTMSpec(
+        n_in=40, n_hidden=32,
+        analog=AnalogConfig(enabled=True, adc_bits=5, input_bits=5,
+                            mode="infer", device=aged_dev))
+    acts = NN.make_gate_acts(spec.analog)
+    sched = RecalScheduler(aged_dev, {"sigmoid": acts[0], "tanh": acts[1]},
+                           RecalPolicy(age_per_step_s=0.0, check_every=1,
+                                       inl_threshold_lsb=0.4))
+    inl_before = sched.probe_inl()
+    sched.tick()                                       # probe -> recal
+    assert sched.n_recals == 1
+    assert sched.probe_inl() < inl_before
+
+    (_, _), (xte, yte) = data
+    aged_params = aged_dev.age_params(params)
+
+    @jax.jit
+    def predict(p, xb, key):
+        return jnp.argmax(NN.classifier_apply(p, xb, spec, acts, key=key),
+                          -1)
+
+    pred = predict(aged_params, jnp.asarray(xte), jax.random.PRNGKey(100))
+    acc_recal = float(jnp.mean(pred == jnp.asarray(yte)))
+    assert acc_recal >= acc_fresh - 0.15, (acc_recal, acc_fresh)
+
+
+# ---------------------------------------------------------------------------
+# Engine checkpoint/restore (in-process; the cross-process bitwise test
+# is below)
+# ---------------------------------------------------------------------------
+
+
+def test_engine_checkpoint_roundtrip_with_lifecycle(tmp_path):
+    from repro import configs
+    from repro.configs.base import AnalogSpec
+    from repro.nn.model import build
+    from repro.serve.engine import Request, ServingEngine
+
+    cfg = configs.get_smoke("qwen2.5-3b").replace(
+        dtype="float32",
+        analog=AnalogSpec(enabled=True, mode="infer", device="aged-1day"))
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    dev = get_device("aged-1day")
+    pol = RecalPolicy(age_per_step_s=3600.0, check_every=3,
+                      inl_threshold_lsb=0.4)
+
+    # uninterrupted run first (the restore below mutates the shared
+    # activations, so order matters in-process)
+    eng = ServingEngine(model, params, max_batch=2, max_len=48,
+                        device=dev, noise_seed=7, recal=pol)
+    req_full = Request(uid=0, prompt=np.arange(1, 6, dtype=np.int32),
+                       max_new_tokens=8)
+    eng.submit(req_full)
+    for _ in range(8):
+        eng.step()
+    full = list(req_full.generated)
+    assert len(eng.scheduler.events) == 2
+
+    # 4 steps -> checkpoint -> restore -> 4 more
+    eng_a = ServingEngine(model, params, max_batch=2, max_len=48,
+                          device=dev, noise_seed=7, recal=pol)
+    req_a = Request(uid=0, prompt=np.arange(1, 6, dtype=np.int32),
+                    max_new_tokens=8)
+    eng_a.submit(req_a)
+    for _ in range(4):
+        eng_a.step()
+    eng_a.save(str(tmp_path), 4)
+    eng_b = ServingEngine.restore(model, str(tmp_path), params_like=params)
+    assert eng_b.scheduler is not None
+    assert eng_b.scheduler.age_s == eng_a.scheduler.age_s
+    req_b = eng_b.slot_req[0]
+    assert req_b is not None and req_b.generated == full[:4]
+    for _ in range(4):
+        eng_b.step()
+    assert req_b.generated == full
+    assert eng_b.scheduler.events == eng.scheduler.events
+
+
+def test_engine_checkpoint_roundtrip_no_scheduler(tmp_path):
+    """device-only deployment (no recal policy) also checkpoints."""
+    from repro import configs
+    from repro.configs.base import AnalogSpec
+    from repro.nn.model import build
+    from repro.serve.engine import Request, ServingEngine
+
+    cfg = configs.get_smoke("qwen2.5-3b").replace(
+        dtype="float32",
+        analog=AnalogSpec(enabled=True, mode="infer", device="paper-infer"))
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    dev = get_device("paper-infer")
+    eng = ServingEngine(model, params, max_batch=1, max_len=32, device=dev,
+                        noise_seed=3)
+    req = Request(uid=5, prompt=np.asarray([2, 9, 4], np.int32),
+                  max_new_tokens=6)
+    eng.submit(req)
+    for _ in range(3):
+        eng.step()
+    eng.save(str(tmp_path), 3)
+    eng2 = ServingEngine.restore(model, str(tmp_path), params_like=params)
+    assert eng2.scheduler is None and eng2.device is not None
+    assert eng2.device.to_dict() == dev.to_dict()
+    for a, b in zip(jax.tree.leaves(eng.params), jax.tree.leaves(eng2.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    r2 = eng2.slot_req[0]
+    for _ in range(3):
+        eng.step()
+        eng2.step()
+    assert r2.generated == req.generated and len(r2.generated) == 6
+    # fresh traffic on the restored engine: admission re-merges a prefill
+    # into the (restored, device-resident) decode state
+    new = Request(uid=6, prompt=np.asarray([1, 2, 3], np.int32),
+                  max_new_tokens=2)
+    eng2.submit(new)
+    eng2.run_to_completion()
+    assert len(new.generated) == 2
+
+
+# ---------------------------------------------------------------------------
+# Engine-restart reproducibility across PROCESSES (bitwise ADC codes)
+# ---------------------------------------------------------------------------
+
+_RESTART_COMMON = """
+    import os
+    os.environ["REPRO_PALLAS_INTERPRET"] = "1"
+    import json, zlib
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from repro import configs
+    from repro.configs.base import AnalogSpec
+    from repro.nn.model import build
+    from repro.core.device import get_device
+    from repro.serve.engine import Request, ServingEngine
+    from repro.serve.lifecycle import RecalPolicy
+
+    BACKEND = {backend!r}
+    cfg = configs.get_smoke("qwen2.5-3b").replace(
+        dtype="float32",
+        analog=AnalogSpec(enabled=True, mode="infer", device="aged-1day",
+                          backend=BACKEND))
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    dev = get_device("aged-1day")
+    pol = RecalPolicy(age_per_step_s=3600.0, check_every=2,
+                      inl_threshold_lsb=0.4)
+
+    def probe(eng):
+        # bitwise fingerprint of every deployed NL-ADC's codes on a grid
+        grid = jnp.linspace(-4.0, 4.0, 257, dtype=jnp.float32)
+        out = {{}}
+        for name, act in sorted(eng._acts.items()):
+            codes = np.ascontiguousarray(np.asarray(act.adc.codes(grid)))
+            out[name] = zlib.crc32(codes.tobytes())
+        return out
+
+    def fresh_engine():
+        eng = ServingEngine(model, params, max_batch=2, max_len=48,
+                            device=dev, noise_seed=7, recal=pol)
+        req = Request(uid=0, prompt=np.arange(1, 5, dtype=np.int32),
+                      max_new_tokens=6)
+        eng.submit(req)
+        return eng, req
+"""
+
+
+def _restart_part1(backend):
+    return _RESTART_COMMON.format(backend=backend) + """
+    # uninterrupted run: 6 steps
+    eng, req = fresh_engine()
+    for _ in range(6):
+        eng.step()
+    print(json.dumps({"tokens": list(req.generated), "codes": probe(eng),
+                      "events": eng.scheduler.events}))
+"""
+
+
+def _restart_part2_save(backend, root):
+    return _RESTART_COMMON.format(backend=backend) + f"""
+    eng, req = fresh_engine()
+    for _ in range(3):
+        eng.step()
+    eng.save({root!r}, 3)
+    print(json.dumps({{"tokens": list(req.generated)}}))
+"""
+
+
+def _restart_part3_resume(backend, root):
+    return _RESTART_COMMON.format(backend=backend) + f"""
+    eng = ServingEngine.restore(model, {root!r}, params_like=params)
+    req = eng.slot_req[0]
+    for _ in range(3):
+        eng.step()
+    print(json.dumps({{"tokens": list(req.generated),
+                       "codes": probe(eng),
+                       "events": eng.scheduler.events}}))
+"""
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_engine_restart_bitwise_reproducible(backend, tmp_path):
+    """serve N -> checkpoint -> restore in a FRESH process -> the resumed
+    deployment produces bitwise-identical ADC codes and tokens vs the
+    uninterrupted run, on both analog backends."""
+    root = str(tmp_path / f"ck-{backend}")
+
+    full = json.loads(
+        check_in_subprocess(_restart_part1(backend), devices=1,
+                            timeout=900).strip().splitlines()[-1])
+    part = json.loads(
+        check_in_subprocess(_restart_part2_save(backend, root), devices=1,
+                            timeout=900).strip().splitlines()[-1])
+    resumed = json.loads(
+        check_in_subprocess(_restart_part3_resume(backend, root), devices=1,
+                            timeout=900).strip().splitlines()[-1])
+
+    # the generation: prefix before the save, identical total afterwards
+    assert part["tokens"] == full["tokens"][:3]
+    assert resumed["tokens"] == full["tokens"]
+    # the chip: every deployed NL-ADC's thermometer codes, bit for bit
+    assert resumed["codes"] == full["codes"]
+    # the lifecycle: same probe/recal trace
+    assert resumed["events"] == full["events"]

@@ -9,6 +9,10 @@ pytest.importorskip("hypothesis",
                     reason="optional dev dep (pip install hypothesis)")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
+from repro.core import crossbar as CB
+from repro.core.device import (Calibration, DeviceModel, Drift, ReadNoise,
+                               Redundancy, StuckAt, TrainNoise, WriteNoise,
+                               device_from_dict, device_names, get_device)
 from repro.core.nladc import build_ramp, nladc_reference, pwm_quantize
 from repro.dist.compress import (dequantize_int8, ef_compress, ef_init,
                                  quantize_int8)
@@ -131,6 +135,90 @@ def test_windowed_attention_equals_masked_full():
     band = (kp <= qp) & (kp > qp - w)
     want = A.attend_full(q, k, v, band[None, None, None])
     np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# DeviceModel invariants (the repro.core.device lifecycle contract)
+# ---------------------------------------------------------------------------
+
+_finite = dict(allow_nan=False, allow_infinity=False)
+
+
+@st.composite
+def device_models(draw):
+    """Arbitrary stage trees (every optional stage present or absent)."""
+    maybe = lambda s: draw(st.none() | s)  # noqa: E731
+    return DeviceModel(
+        name=draw(st.text("abc-", min_size=1, max_size=8)),
+        write=maybe(st.builds(WriteNoise,
+                              sigma_us=st.floats(0, 20, **_finite))),
+        read=maybe(st.builds(ReadNoise,
+                             sigma_us=st.floats(0, 20, **_finite))),
+        train=maybe(st.builds(TrainNoise,
+                              sigma_us=st.floats(0, 20, **_finite))),
+        drift=maybe(st.builds(Drift,
+                              t_s=st.floats(0, 1e6, **_finite),
+                              n_refs=st.integers(2, 32),
+                              alpha=st.floats(0, 0.1, **_finite),
+                              sigma0_us=st.floats(0, 2, **_finite),
+                              t0_s=st.floats(1, 600, **_finite))),
+        stuck=maybe(st.builds(StuckAt, prob=st.floats(0, 1, **_finite))),
+        redundancy=draw(st.builds(Redundancy, n_copies=st.integers(1, 6))),
+        calibration=draw(st.builds(Calibration, one_point=st.booleans())),
+        seed=draw(st.integers(0, 2**32 - 1)),
+    )
+
+
+@settings(max_examples=50, deadline=None)
+@given(device_models())
+def test_device_dict_roundtrip_arbitrary_trees(dev):
+    """to_dict/from_dict is the identity for ANY stage tree, through real
+    JSON (the checkpoint metadata path)."""
+    import json as _json
+
+    blob = _json.dumps(dev.to_dict())
+    assert device_from_dict(_json.loads(blob)) == dev
+    # and it is stable: a second trip yields the same dict
+    assert device_from_dict(_json.loads(blob)).to_dict() == dev.to_dict()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.sampled_from(sorted(device_names())),
+       st.sampled_from(["sigmoid", "tanh", "softsign", "gelu"]),
+       st.integers(0, 2**16))
+def test_deployed_thresholds_stay_sorted(preset, name, seed):
+    """Every preset's deployed comparator bank is monotone: programming
+    noise, stuck faults, drift, and calibration can squash steps to zero
+    but never de-order them (conductances are nonnegative), so the ref
+    path's searchsorted stays exact on any deployed chip."""
+    dev = get_device(preset).replace(seed=seed)
+    ramp = build_ramp(name, 5)
+    thr = dev.deploy_ramp(ramp).thresholds
+    assert np.all(np.diff(thr) >= 0)
+    # a harsher corner than any preset: heavy faults on top
+    harsh = dev.replace(stuck=StuckAt(prob=0.3))
+    assert np.all(np.diff(harsh.deploy_ramp(ramp).thresholds) >= 0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(33, 160), st.integers(17, 120), st.integers(0, 2**16),
+       st.randoms(use_true_random=False))
+def test_tile_draws_permutation_independent(rows, cols, seed, pyrandom):
+    """Tile-keyed build-stage draws depend only on (key, tile coords):
+    assembling tiles in ANY visit order reproduces the whole-matrix result
+    bit for bit."""
+    dev = get_device("aged-1day").replace(stuck=StuckAt(prob=0.05),
+                                          seed=seed)
+    plan = CB.plan_tiles(rows, cols, tile_rows=32, tile_cols=48)
+    w = np.random.default_rng(seed).normal(0, 0.5, (rows, cols))
+    whole = dev.age_weights_tiled(w, "leaf", plan)
+    blocks = list(plan.blocks())
+    pyrandom.shuffle(blocks)
+    out = np.empty_like(w)
+    for (i, j), rs, cs in blocks:
+        out[rs, cs] = dev.age_weights(w[rs, cs],
+                                      dev.tile_rng("leaf", 0, i, j))
+    np.testing.assert_array_equal(out, whole)
 
 
 @settings(max_examples=10, deadline=None)
