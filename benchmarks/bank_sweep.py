@@ -1,0 +1,103 @@
+"""Threshold-bank sweep: deployed INL and KWS accuracy vs bank count.
+
+One physical ramp generator serves the comparator bank of ONE crossbar
+col-tile, so a deployment's threshold layout is ``(n_col_tiles, P)`` —
+more banks mean more independently-programmed (and independently
+drifting) ramp columns.  This sweep measures what that granularity costs
+and buys:
+
+* **INL vs bank count** — mean/worst deployed INL across the bank for
+  n_banks = 1/2/4/8 under each build-stage preset.  The mean is flat (each
+  bank is the same process), the WORST bank degrades with count — that
+  worst column is what per-bank re-calibration targets.
+* **accuracy vs bank count** — the paper's KWS LSTM (Alg. 1-trained under
+  ``paper``) evaluated in infer mode with ``bank_cols`` shrinking so the
+  H=32 hidden dim spans 1/2/4/8 col-tiles, on ref AND pallas-interpret.
+
+Writes ``benchmarks/BENCH_bank.json`` as the recorded baseline.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.core.device import get_device
+from repro.core.nladc import build_ramp, inl_lsb
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "BENCH_bank.json")
+
+BANK_COUNTS = (1, 2, 4, 8)
+PRESETS = ("paper-infer", "aged-1day", "stressed")
+HIDDEN = 32     # the KWS LSTM hidden size; bank_cols = HIDDEN // n_banks
+
+
+def _inl_sweep():
+    out = {}
+    ramp = build_ramp("tanh", 5)
+    for preset in PRESETS:
+        dev = get_device(preset)
+        rows = {}
+        for n in BANK_COUNTS:
+            inls = [inl_lsb(r, ramp)[0]
+                    for r in dev.deploy_ramp_bank(ramp, n)]
+            rows[f"B{n}"] = {"mean": round(float(np.mean(inls)), 4),
+                             "worst": round(float(np.max(inls)), 4)}
+        out[preset] = rows
+        print(f"  {preset:12} " + "  ".join(
+            f"B{n}: {rows[f'B{n}']['mean']:.3f}/{rows[f'B{n}']['worst']:.3f}"
+            for n in BANK_COUNTS))
+    return out
+
+
+def _accuracy_sweep(quick: bool):
+    from benchmarks.device_sweep import _accuracy_under
+    from benchmarks.s13_drift import train_kws
+    from repro.data.pipeline import SyntheticKWS
+
+    n_train = 512 if quick else 2048
+    epochs = 3 if quick else 10
+    data = SyntheticKWS(seed=0).splits(n_train, 256)
+    params = train_kws(data, epochs, get_device("paper"))
+    out = {}
+    for preset in ("paper-infer", "aged-1day"):
+        dev = get_device(preset)
+        rows = {}
+        for n in BANK_COUNTS:
+            bank_cols = 0 if n == 1 else HIDDEN // n
+            for be in ("ref", "pallas"):
+                rows[f"B{n}-{be}"] = round(
+                    _accuracy_under(params, data, dev, tiled=True,
+                                    bank_cols=bank_cols, backend=be), 4)
+        out[preset] = rows
+        print(f"  {preset:12} " + "  ".join(
+            f"{k}:{v:.3f}" for k, v in rows.items()))
+    return out
+
+
+def run(quick=True):
+    print("=== bank sweep: deployed INL vs bank count ===")
+    inl = _inl_sweep()
+    print("=== bank sweep: KWS accuracy vs bank count (ref + pallas) ===")
+    acc = _accuracy_sweep(quick)
+    # invariant: the worst bank is never better than the mean, and banked
+    # deployment keeps the fresh chip usable
+    for preset in PRESETS:
+        for n in BANK_COUNTS:
+            cell = inl[preset][f"B{n}"]
+            assert cell["worst"] >= cell["mean"] - 1e-9
+    assert acc["paper-infer"]["B4-ref"] >= 0.5
+    results = {"quick": quick, "hidden": HIDDEN,
+               "bank_counts": list(BANK_COUNTS),
+               "ramp_inl_lsb": inl, "kws_accuracy": acc}
+    if not quick or not os.path.exists(OUT_PATH):
+        with open(OUT_PATH, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"  baseline written to {OUT_PATH}")
+    return results
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -36,7 +36,8 @@ def compare(results: dict, baseline: dict, tol_acc: float,
     failures = []
     for key, tol, rel in (("ramp_inl_lsb", tol_inl, True),
                           ("kws_accuracy", tol_acc, False),
-                          ("kws_accuracy_tiled", tol_acc, False)):
+                          ("kws_accuracy_tiled", tol_acc, False),
+                          ("kws_accuracy_banked", tol_acc, False)):
         want_cells = _cells(baseline[key])
         got_cells = _cells(results[key])
         # a sweep corner existing on only one side is itself a gate

@@ -55,20 +55,25 @@ def _ramp_inl_sweep(quick: bool):
     return out
 
 
-def _accuracy_under(params, data, dev, seed: int = 0, tiled: bool = False):
+def _accuracy_under(params, data, dev, seed: int = 0, tiled: bool = False,
+                    bank_cols: int = 0, backend: str = ""):
     """Eval with weight crossbars aged by ``dev`` and the NL-ADC ramps
     programmed per ``dev`` (infer mode), read noise per minibatch.
 
     ``tiled=True`` ages via the deployment path (``age_params`` with no
     rng: per-tile TilePlan-keyed draws — what ``ServingEngine`` does);
     the default keeps the legacy sequential stream the recorded Supp. S13
-    numbers are pinned on."""
+    numbers are pinned on.  ``bank_cols`` deploys per-col-tile threshold
+    banks (the (n_col_tiles, P) layout); ``backend`` selects the analog
+    execution backend (pallas runs in interpret mode off-TPU).
+    """
     (_, _), (xte, yte) = data
     spec = NN.LSTMSpec(
         n_in=40, n_hidden=32,
         analog=AnalogConfig(enabled=True, adc_bits=5, input_bits=5,
-                            mode="infer", device=dev))
-    acts = NN.make_gate_acts(spec.analog)
+                            mode="infer", device=dev, bank_cols=bank_cols,
+                            backend=backend))
+    acts = NN.make_gate_acts(spec.analog, width=32 if bank_cols else 0)
     aged = dev.age_params(params) if tiled \
         else dev.age_params(params, np.random.default_rng(seed))
 
@@ -115,19 +120,37 @@ def _accuracy_sweep(quick: bool):
         tiled[preset] = row
         print(f"  {preset:12} (tiled) " + "  ".join(
             f"t={k}:{v:.3f}" for k, v in row.items()))
-    return out, tiled
+    # banked leg: per-col-tile threshold banks (n_col_tiles = 4 at H=32,
+    # bank_cols=8), through BOTH analog backends (pallas interprets
+    # off-TPU) — the gate trips on regressions anywhere in the banked
+    # quantize/deploy path
+    banked = {}
+    for preset in AGING_PRESETS:
+        base = get_device(preset)
+        row = {}
+        for be in ("ref", "pallas"):
+            row[f"B4-{be}"] = round(
+                _accuracy_under(params, data, base, tiled=True,
+                                bank_cols=8, backend=be), 4)
+        banked[preset] = row
+        print(f"  {preset:12} (banked) " + "  ".join(
+            f"{k}:{v:.3f}" for k, v in row.items()))
+        # both backends quantize identically on the banked deployment
+        assert abs(row["B4-ref"] - row["B4-pallas"]) < 0.02, row
+    return out, tiled, banked
 
 
 def run(quick=True):
     print("=== device sweep: programmed-ramp INL vs redundancy ===")
     ramp_inl = _ramp_inl_sweep(quick)
     print("=== device sweep: KWS accuracy vs drift time (aged crossbars) ===")
-    accuracy, accuracy_tiled = _accuracy_sweep(quick)
+    accuracy, accuracy_tiled, accuracy_banked = _accuracy_sweep(quick)
     results = {
         "quick": quick,
         "ramp_inl_lsb": ramp_inl,
         "kws_accuracy": accuracy,
         "kws_accuracy_tiled": accuracy_tiled,
+        "kws_accuracy_banked": accuracy_banked,
         "drift_times_s": list(DRIFT_TIMES_S),
     }
     if not quick or not os.path.exists(OUT_PATH):

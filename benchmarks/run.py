@@ -26,6 +26,7 @@ MODULES = [
     ("fig5c_ptb", "Fig. 5c char-LM BPC vs bits"),
     ("s13_drift", "Supp. S13 drift"),
     ("device_sweep", "repro.core.device preset sweep (drift/redundancy)"),
+    ("bank_sweep", "threshold-bank sweep (INL/accuracy vs col-tile count)"),
     ("recal_schedule", "serving-lifetime re-calibration schedule sweep"),
     ("kernel_bench", "kernel microbench"),
     ("backend_parity", "ref-vs-pallas backend parity + throughput"),

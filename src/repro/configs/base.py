@@ -35,6 +35,11 @@ class AnalogSpec:
     # ModelConfig stays a plain published-numbers record; AnalogConfig
     # resolves it to the DeviceModel tree.
     device: str = ""
+    # Threshold banks: output columns served by one physical NL-ADC ramp
+    # (one ramp generator per crossbar col-tile).  0 = single shared ramp
+    # per activation (legacy (P,) layout); e.g. 512 = the paper's tile
+    # width, giving a (n_col_tiles, P) bank for matrices wider than a tile.
+    bank_cols: int = 0
 
 
 @dataclasses.dataclass(frozen=True)

@@ -9,14 +9,17 @@ from repro.core.device import (Calibration, DeviceModel, Drift, ReadNoise,
                                Redundancy, StuckAt, TrainNoise, WriteNoise,
                                device_from_dict, device_names, get_device,
                                register_device, resolve_device)
-from repro.core.nladc import (NLADC, Ramp, build_nonmonotonic_ramp, build_ramp,
-                              inl_lsb, nladc_reference, pwm_quantize,
-                              transfer_mse)
+from repro.core.nladc import (NLADC, BankMap, BankedThresholds, Ramp,
+                              bank_map_for, build_nonmonotonic_ramp,
+                              build_ramp, inl_lsb, nladc_reference,
+                              pwm_quantize, transfer_mse)
 
 __all__ = [
-    "AnalogActivation", "AnalogConfig", "Calibration", "DeviceModel",
+    "AnalogActivation", "AnalogConfig", "BankMap", "BankedThresholds",
+    "Calibration", "DeviceModel",
     "Drift", "EXACT", "NLADC", "Ramp", "ReadNoise", "Redundancy", "StuckAt",
     "TrainNoise", "WriteNoise", "analog_matmul_act", "backend",
+    "bank_map_for",
     "build_nonmonotonic_ramp", "build_ramp", "calibration", "crossbar",
     "dense_nladc", "device", "device_from_dict", "device_names", "functions",
     "get_backend", "get_device", "hwcost", "inl_lsb", "nladc",

@@ -40,10 +40,13 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from repro.core import backend as BK
 from repro.core import crossbar
 from repro.core.device import IDEAL, DeviceModel, resolve_device
-from repro.core.nladc import NLADC, Ramp, build_ramp, pwm_quantize
+from repro.core.nladc import (NLADC, BankedThresholds, Ramp, bank_map_for,
+                              build_ramp, pwm_quantize)
 
 # Removed knobs -> complete migration instruction (used for actionable
 # error messages below; each hint stands on its own).
@@ -79,6 +82,13 @@ class AnalogConfig:
     mode: str = "exact"                   # exact | train | infer
     backend: str = ""                     # "" = auto (env) | ref | pallas
     device: DeviceModel = ""              # model | preset name | "" = auto
+    # Threshold banks: physical columns per crossbar col-tile for the ADC
+    # periphery.  0 = one ramp shared by every output column (legacy (P,)
+    # layout); > 0 = one independently-programmed ramp per group of
+    # ``bank_cols`` output columns — the (n_col_tiles, P) banked layout.
+    # An activation narrower than one tile keeps the legacy layout (its
+    # n_col_tiles is 1), bitwise-identical to bank_cols=0.
+    bank_cols: int = 0
 
     def __post_init__(self):
         if not isinstance(self.device, DeviceModel):
@@ -108,6 +118,7 @@ class AnalogConfig:
                 f"AnalogConfig.from_spec: {k!r} {where}; "
                 f"overridable fields: {sorted(valid)}")
         kw.setdefault("device", resolve_device(spec.device))
+        kw.setdefault("bank_cols", spec.bank_cols)
         return cls(enabled=spec.enabled, adc_bits=spec.adc_bits,
                    input_bits=spec.input_bits, mode=spec.mode,
                    backend=spec.backend, **kw)
@@ -119,6 +130,56 @@ class AnalogConfig:
 EXACT = AnalogConfig(enabled=False, mode="exact", device=IDEAL)
 
 
+class DeployedBank:
+    """One activation's ``(n_col_tiles, P)`` threshold bank at one width.
+
+    Holds the per-col-tile programmed :class:`Ramp` instances plus the
+    stacked jnp operands the backends consume.  The float64 stack is the
+    checkpointable ground truth (``ServingEngine`` saves it so a restore
+    is bitwise the running chip).
+    """
+
+    def __init__(self, ideal: Ramp, ramps, width: int, bank_cols: int):
+        self.ideal = ideal
+        self.width = width
+        self.bank_map = bank_map_for(width, bank_cols)
+        self.redeploy(ramps)
+
+    @property
+    def n_banks(self) -> int:
+        return len(self.ramps)
+
+    def redeploy(self, ramps) -> None:
+        """Swap in newly-realized per-bank ramps (chip re-program)."""
+        ramps = tuple(ramps)
+        if len(ramps) != self.bank_map.n_banks:
+            raise ValueError(f"expected {self.bank_map.n_banks} bank ramps, "
+                             f"got {len(ramps)}")
+        self.ramps = ramps
+        self.thresholds_f64 = np.stack(
+            [np.asarray(r.thresholds, np.float64) for r in ramps])
+        self.thr = jnp.asarray(self.thresholds_f64, jnp.float32)
+        # Per-bank ramp-step geometry for the train-noise draw: noise
+        # compounds along each bank's own cumsum, exactly as on its chip.
+        self._steps = jnp.asarray(
+            np.stack([r.steps for r in ramps]), jnp.float32)
+        self._v_init = jnp.asarray(
+            np.asarray([r.v_init for r in ramps])[:, None], jnp.float32)
+        self._g_scale = jnp.asarray(
+            np.asarray([r.g_scale for r in ramps])[:, None], jnp.float32)
+
+    def thresholds_for(self, key, sigma_us: float) -> BankedThresholds:
+        """The banked per-call comparator levels (noise-perturbed per bank
+        when a key and a train-noise sigma are given)."""
+        thr = self.thr
+        if key is not None and sigma_us > 0:
+            dg = sigma_us * jax.random.normal(key, thr.shape, thr.dtype)
+            noisy_steps = self._steps + dg * self._g_scale
+            thr = jnp.sort(self._v_init + jnp.cumsum(noisy_steps, axis=-1),
+                           axis=-1)
+        return BankedThresholds(thr, self.bank_map)
+
+
 class AnalogActivation:
     """An activation realized by an NL-ADC ramp (or exactly, per config)."""
 
@@ -127,6 +188,7 @@ class AnalogActivation:
         self.cfg = cfg
         self._adc: Optional[NLADC] = None
         self._ideal_ramp: Optional[Ramp] = None
+        self._banks: dict = {}              # width -> DeployedBank
         if cfg.enabled:
             ramp = build_ramp(name, cfg.adc_bits)
             self._ideal_ramp = ramp
@@ -164,22 +226,79 @@ class AnalogActivation:
             raise ValueError(f"activation {self.name!r} has no NL-ADC")
         self._adc = NLADC(ramp)
 
+    # -- threshold banks (one ramp per crossbar col-tile) ----------------
+
+    def n_banks(self, width: int) -> int:
+        """Col-tiles an application of this activation at ``width`` spans."""
+        if self.cfg.bank_cols <= 0 or width <= 0:
+            return 1
+        return -(-width // self.cfg.bank_cols)
+
+    def bank_for(self, width: int) -> Optional["DeployedBank"]:
+        """The deployed threshold bank for one application width.
+
+        ``None`` when banking is off, the activation carries no ramp, or
+        the width fits one col-tile — those cases keep the legacy ``(P,)``
+        layout (bitwise-identical to pre-bank code).  Banks realize lazily
+        per width and cache; the per-bank draws are keyed purely by the
+        bank index (``instance="col{j}"``), so realization order — and
+        which other widths exist — never changes a bank's chip.
+        """
+        if self._adc is None or self.n_banks(width) <= 1:
+            return None
+        bank = self._banks.get(width)
+        if bank is None:
+            n = self.n_banks(width)
+            if self.cfg.mode == "infer":
+                ramps = self.cfg.device.deploy_ramp_bank(self._ideal_ramp, n)
+            else:
+                ramps = (self._ideal_ramp,) * n
+            bank = self._banks[width] = DeployedBank(
+                self._ideal_ramp, ramps, width, self.cfg.bank_cols)
+        return bank
+
+    def banks(self) -> dict:
+        """Realized banks, width -> :class:`DeployedBank` (read-only view)."""
+        return dict(self._banks)
+
+    def redeploy_bank(self, width: int, ramps) -> None:
+        """Re-program one width's bank (lifecycle aging / re-calibration).
+
+        Same re-jit contract as :meth:`redeploy`: banked thresholds are
+        closure constants inside jitted step functions.
+        """
+        bank = self.bank_for(width)
+        if bank is None:
+            raise ValueError(
+                f"activation {self.name!r} has no bank at width {width} "
+                f"(bank_cols={self.cfg.bank_cols})")
+        bank.redeploy(ramps)
+
     def _exact(self, x):
         import repro.nn.activations as acts
 
         return acts.exact(self.name)(x)
 
-    def thresholds_for(self, key=None):
+    def thresholds_for(self, key=None, width: int = 0):
         """Comparator thresholds for one call (possibly noise-perturbed).
 
         NL-ADC-aware training perturbs the programmed ramp *steps* (one
         memristor each) and re-accumulates — noise compounds along the ramp
         exactly as on-chip.  Drawn here (shared code) so every backend
         consumes identical thresholds.
+
+        ``width`` (the call's output-column count) activates the banked
+        ``(n_col_tiles, P)`` layout when the config banks thresholds and
+        the width spans more than one col-tile: the return value is then a
+        :class:`repro.core.nladc.BankedThresholds` (per-bank noise draws
+        included) that both backends understand.
         """
         adc = self._adc
         cfg = self.cfg
         sigma_us = cfg.device.ramp_sigma_us(cfg.mode)
+        bank = self.bank_for(width) if width else None
+        if bank is not None:
+            return bank.thresholds_for(key, sigma_us)
         if key is not None and sigma_us > 0:
             ramp = adc.ramp
             dg = sigma_us * jax.random.normal(
@@ -198,7 +317,8 @@ class AnalogActivation:
         if not cfg.enabled or self._adc is None:
             return self._exact(x)
         bk = BK.get_backend(cfg.backend)
-        return bk.nladc(x, self._adc, thresholds=self.thresholds_for(key))
+        return bk.nladc(x, self._adc,
+                        thresholds=self.thresholds_for(key, x.shape[-1]))
 
 
 def _noisy_weights(w, cfg: AnalogConfig, k_w):
@@ -251,9 +371,10 @@ def analog_matmul_act(x, w, cfg: AnalogConfig, *, key=None,
 
     if activation is not None and activation.ramp is not None:
         bk = BK.get_backend(cfg.backend)
-        return bk.matmul_nladc(x, w, activation.adc, bias=bias,
-                               thresholds=activation.thresholds_for(k_act),
-                               preferred_dtype=preferred_dtype)
+        return bk.matmul_nladc(
+            x, w, activation.adc, bias=bias,
+            thresholds=activation.thresholds_for(k_act, w.shape[-1]),
+            preferred_dtype=preferred_dtype)
 
     y = jnp.matmul(x, w, preferred_element_type=preferred_dtype)
     if bias is not None:
@@ -280,4 +401,4 @@ def dense_nladc(p, x, act: Optional[AnalogActivation], *, key=None):
         return act(y, key=key) if act is not None else y
     bk = BK.get_backend(act.cfg.backend)
     return bk.matmul_nladc(x, w, act.adc, bias=b,
-                           thresholds=act.thresholds_for(key))
+                           thresholds=act.thresholds_for(key, w.shape[-1]))

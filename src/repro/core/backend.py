@@ -27,7 +27,12 @@ Third-party backends can be added with :func:`register_backend`.
 
 All four primitives accept explicit comparator ``thresholds`` overrides so
 the NL-ADC-aware training noise (perturbed ramp steps) is drawn once in
-shared orchestration code and both backends consume identical draws.
+shared orchestration code and both backends consume identical draws.  The
+override may be a :class:`repro.core.nladc.BankedThresholds` — the
+``(n_col_tiles, P)`` per-col-tile layout — in which case the ref path
+bank-gathers a per-column ``searchsorted`` and the Pallas path feeds the
+kernels a per-column threshold operand gathered at trace time; the STE
+backwards are shared and bank-agnostic (they depend only on the input).
 """
 
 from __future__ import annotations
@@ -38,7 +43,9 @@ from typing import Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.nladc import (NLADC, Ramp, _nladc_apply, _nladc_fwd_impl,
+from repro.core.nladc import (NLADC, BankedThresholds, BankMap, Ramp,
+                              _nladc_apply, _nladc_banked_apply,
+                              _nladc_banked_fwd_impl, _nladc_fwd_impl,
                               nladc_ste)
 
 DEFAULT_BACKEND = "ref"
@@ -61,8 +68,16 @@ class RefBackend:
     name = "ref"
 
     def nladc(self, x, adc: NLADC, thresholds=None):
-        """Elementwise NL-ADC (thermometer code + table decode, STE bwd)."""
+        """Elementwise NL-ADC (thermometer code + table decode, STE bwd).
+
+        ``thresholds`` may be a :class:`BankedThresholds` — the banked
+        ``(n_col_tiles, P)`` layout where each column of x's last axis
+        compares against its own col-tile's programmed ramp.
+        """
         thr = adc.thresholds if thresholds is None else thresholds
+        if isinstance(thr, BankedThresholds):
+            return _nladc_banked_apply(x, thr.thr, adc.y_table,
+                                       adc.ramp.name, thr.bank_map)
         return _nladc_apply(x, thr, adc.y_table, adc.ramp.name)
 
     def matmul_nladc(self, x, w, adc: NLADC, bias=None, thresholds=None,
@@ -128,11 +143,13 @@ def _cached(kind, key, build):
     return fn
 
 
-def _pallas_nladc_fn(ramp: Ramp):
+def _pallas_nladc_fn(ramp: Ramp, bank_map: Optional[BankMap] = None):
     def build():
         def raw(x, thr):
             from repro.kernels import ops
 
+            if bank_map is not None:
+                thr = BankedThresholds(thr, bank_map)
             return ops.nladc(x, ramp, thresholds=thr)
 
         def fwd(x, thr):
@@ -145,10 +162,11 @@ def _pallas_nladc_fn(ramp: Ramp):
         fn.defvjp(fwd, bwd)
         return fn
 
-    return _cached("nladc", _ramp_key(ramp), build)
+    return _cached("nladc", _ramp_key(ramp) + (bank_map,), build)
 
 
-def _pallas_matmul_fn(ramp: Ramp, has_bias: bool, preferred_dtype):
+def _pallas_matmul_fn(ramp: Ramp, has_bias: bool, preferred_dtype,
+                      bank_map: Optional[BankMap] = None):
     pd_key = None if preferred_dtype is None \
         else jnp.dtype(preferred_dtype).name
 
@@ -166,6 +184,8 @@ def _pallas_matmul_fn(ramp: Ramp, has_bias: bool, preferred_dtype):
         def raw(x, w, b, thr):
             from repro.kernels import ops
 
+            if bank_map is not None:
+                thr = BankedThresholds(thr, bank_map)
             return ops.fused_matmul_nladc(
                 x, w, ramp, bias=(b if has_bias else None), thresholds=thr)
 
@@ -191,10 +211,12 @@ def _pallas_matmul_fn(ramp: Ramp, has_bias: bool, preferred_dtype):
         fn.defvjp(fwd, bwd)
         return fn
 
-    return _cached("matmul", _ramp_key(ramp) + (has_bias, pd_key), build)
+    return _cached("matmul",
+                   _ramp_key(ramp) + (has_bias, pd_key, bank_map), build)
 
 
-def _pallas_lstm_fn(sig_ramp: Ramp, tanh_ramp: Ramp):
+def _pallas_lstm_fn(sig_ramp: Ramp, tanh_ramp: Ramp,
+                    bank_map: Optional[BankMap] = None):
     def build():
         # NUMPY (not jnp) constants: build() may run inside an active trace
         # and the closure is cached — a jnp.asarray here would capture a
@@ -207,6 +229,9 @@ def _pallas_lstm_fn(sig_ramp: Ramp, tanh_ramp: Ramp):
         def raw(gates, c, sig_thr, tanh_thr):
             from repro.kernels import ops
 
+            if bank_map is not None:
+                sig_thr = BankedThresholds(sig_thr, bank_map)
+                tanh_thr = BankedThresholds(tanh_thr, bank_map)
             return ops.lstm_gates(gates, c, sig_ramp, tanh_ramp,
                                   sig_thresholds=sig_thr,
                                   tanh_thresholds=tanh_thr)
@@ -223,9 +248,15 @@ def _pallas_lstm_fn(sig_ramp: Ramp, tanh_ramp: Ramp):
             hf, ha, hi, ho = jnp.split(gates, 4, axis=-1)
 
             def sq(v):
+                if bank_map is not None:
+                    return _nladc_banked_fwd_impl(v, sig_thr, sig_y,
+                                                  bank_map)
                 return _nladc_fwd_impl(v, sig_thr, sig_y)
 
             def tq(v):
+                if bank_map is not None:
+                    return _nladc_banked_fwd_impl(v, tanh_thr, tanh_y,
+                                                  bank_map)
                 return _nladc_fwd_impl(v, tanh_thr, tanh_y)
 
             f, a, i, o = sq(hf), tq(ha), sq(hi), sq(ho)
@@ -243,7 +274,9 @@ def _pallas_lstm_fn(sig_ramp: Ramp, tanh_ramp: Ramp):
         fn.defvjp(fwd, bwd)
         return fn
 
-    return _cached("lstm", _ramp_key(sig_ramp) + _ramp_key(tanh_ramp), build)
+    return _cached("lstm",
+                   _ramp_key(sig_ramp) + _ramp_key(tanh_ramp) + (bank_map,),
+                   build)
 
 
 class PallasBackend(RefBackend):
@@ -255,20 +288,35 @@ class PallasBackend(RefBackend):
 
     def nladc(self, x, adc: NLADC, thresholds=None):
         thr = adc.thresholds if thresholds is None else thresholds
+        if isinstance(thr, BankedThresholds):
+            return _pallas_nladc_fn(adc.ramp, thr.bank_map)(x, thr.thr)
         return _pallas_nladc_fn(adc.ramp)(x, thr)
 
     def matmul_nladc(self, x, w, adc: NLADC, bias=None, thresholds=None,
                      preferred_dtype=None):
         thr = adc.thresholds if thresholds is None else thresholds
-        fn = _pallas_matmul_fn(adc.ramp, bias is not None, preferred_dtype)
+        bank_map = thr.bank_map if isinstance(thr, BankedThresholds) \
+            else None
+        fn = _pallas_matmul_fn(adc.ramp, bias is not None, preferred_dtype,
+                               bank_map)
         b = bias if bias is not None \
             else jnp.zeros((w.shape[-1],), jnp.float32)
-        return fn(x, w, b, thr)
+        return fn(x, w, b, thr.thr if bank_map is not None else thr)
 
     def lstm_gates(self, gates, c, sig_adc: NLADC, tanh_adc: NLADC,
                    sig_thr=None, tanh_thr=None):
         st = sig_adc.thresholds if sig_thr is None else sig_thr
         tt = tanh_adc.thresholds if tanh_thr is None else tanh_thr
+        s_banked = isinstance(st, BankedThresholds)
+        if s_banked != isinstance(tt, BankedThresholds):
+            # both come from one AnalogConfig, so one banking geometry
+            raise ValueError("lstm_gates: sigmoid and tanh thresholds must "
+                             "both be banked or both be flat")
+        if s_banked:
+            if st.bank_map != tt.bank_map:
+                raise ValueError("lstm_gates: sigmoid/tanh bank maps differ")
+            fn = _pallas_lstm_fn(sig_adc.ramp, tanh_adc.ramp, st.bank_map)
+            return fn(gates, c, st.thr, tt.thr)
         fn = _pallas_lstm_fn(sig_adc.ramp, tanh_adc.ramp)
         return fn(gates, c, st, tt)
 

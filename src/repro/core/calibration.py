@@ -113,6 +113,24 @@ def one_point_calibrate(programmed: Ramp, ideal: Ramp,
     return calibrated, len(devices)
 
 
+def one_point_calibrate_bank(programmed, ideal: Ramp,
+                             rng: Optional[np.random.Generator] = None,
+                             sigma_us: float = WRITE_SIGMA_US):
+    """Supp. S9 calibration applied per col-tile bank.
+
+    Every member of a ``(n_col_tiles, P)`` threshold bank is a physically
+    separate ramp column with its own bias memristors, so each gets its own
+    one-point ``V_init`` shift against the shared ideal ramp.  Returns
+    ``(calibrated_ramps, total_cali_devices)``.
+    """
+    out, n_total = [], 0
+    for prog in programmed:
+        cal, n = one_point_calibrate(prog, ideal, rng, sigma_us=sigma_us)
+        out.append(cal)
+        n_total += n
+    return tuple(out), n_total
+
+
 def program_with_redundancy(ramp: Ramp, rng: np.random.Generator,
                             copies: int = 4,
                             sigma_us: float = WRITE_SIGMA_US,

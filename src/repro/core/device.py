@@ -274,6 +274,21 @@ class DeviceModel:
             return ramp
         return self.program(ramp, instance=instance).programmed
 
+    def deploy_ramp_bank(self, ramp: Ramp, n_banks: int, *,
+                         instance: str = ""):
+        """One programmed ramp instance per crossbar col-tile.
+
+        The paper's ramp generator is physically per-tile: a matrix wider
+        than one crossbar sees ``n_banks = TilePlan.n_col_tiles``
+        independently programmed (and independently drifting) ramps.  Each
+        bank's draw is keyed purely by its col-tile index — independent of
+        ``n_banks``, of realization order, and of which other banks exist
+        (the bank-permutation-independence property).
+        """
+        prefix = f"{instance}@" if instance else ""
+        return tuple(self.deploy_ramp(ramp, instance=f"{prefix}col{j}")
+                     for j in range(n_banks))
+
     def age_weights(self, w: np.ndarray,
                     rng: np.random.Generator) -> np.ndarray:
         """Build-stage weight nonidealities: write noise, faults, drift.
@@ -295,7 +310,8 @@ class DeviceModel:
         return w
 
     def age_weights_tiled(self, w: np.ndarray, key: str,
-                          plan: Optional[CB.TilePlan] = None) -> np.ndarray:
+                          plan: Optional[CB.TilePlan] = None,
+                          generation: int = 0) -> np.ndarray:
         """:meth:`age_weights`, drawn independently per physical crossbar.
 
         The matrix's last two dims are partitioned by ``plan`` (default: the
@@ -306,6 +322,12 @@ class DeviceModel:
         populations (they are different physical chips' worth of cells), and
         the result is invariant to tile visit order.  Leading dims beyond
         the last two (scan-over-layers stacking) are independent matrices.
+
+        ``generation`` models a field *re-programming* of the crossbars
+        (the probe-driven weight refresh): a nonzero generation salts every
+        tile's rng, so the rewrite realizes fresh write noise — a new
+        population of device errors, exactly like writing the cells again.
+        Generation 0 is bitwise the pre-refresh stream.
         """
         w = np.asarray(w, dtype=np.float64)
         mats = w.reshape((-1,) + w.shape[-2:])
@@ -317,16 +339,19 @@ class DeviceModel:
             raise ValueError(
                 f"plan covers ({p.n_in}, {p.n_out}) but the matrix is "
                 f"{mats.shape[1:]}; derive the plan from the leaf shape")
+        gen_salt = (generation,) if generation else ()
         out = np.empty_like(mats)
         for mi in range(mats.shape[0]):
             for (ti, tj), rs, cs in p.blocks():
                 out[mi, rs, cs] = self.age_weights(
-                    mats[mi, rs, cs], self.tile_rng(key, mi, ti, tj))
+                    mats[mi, rs, cs],
+                    self.tile_rng(key, mi, ti, tj, *gen_salt))
         return out.reshape(w.shape)
 
     def age_params(self, params, rng: Optional[np.random.Generator] = None,
                    min_ndim: int = 2,
-                   plan: Optional[CB.TilePlan] = None):
+                   plan: Optional[CB.TilePlan] = None,
+                   generation: int = 0):
         """Apply build-stage aging to every matrix leaf of a param pytree.
 
         Leaves with fewer than ``min_ndim`` dims (biases, norm scales,
@@ -338,7 +363,10 @@ class DeviceModel:
         :meth:`age_weights_tiled`, keyed by the leaf's pytree path + the
         :class:`TilePlan` tile coordinates — deterministic for a given
         ``seed`` and independent of leaf/tile visit order, so a restarted
-        engine realizes the identical chip.  Passing an explicit ``rng``
+        engine realizes the identical chip.  ``generation`` (tile path
+        only) salts the draws to model a field re-programming of the
+        crossbars — see :meth:`age_weights_tiled`.  Passing an explicit
+        ``rng``
         keeps the legacy sequential stream (one generator threaded through
         the whole tree — the Supp. S13 benchmark call sequences, pinned
         bit-for-bit by tests/test_device.py).
@@ -357,7 +385,7 @@ class DeviceModel:
                     continue
                 aged = self.age_weights_tiled(
                     np.asarray(w, np.float64), jax.tree_util.keystr(path),
-                    plan)
+                    plan, generation=generation)
                 out.append(jnp.asarray(aged.astype(np.asarray(w).dtype)))
             return jax.tree_util.tree_unflatten(treedef, out)
 

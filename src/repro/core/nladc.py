@@ -18,6 +18,18 @@ constants.  Write-noise on the programmed ramp is modeled by perturbing the
 *steps* (each step = one memristor, Fig. 2d) and re-cumsum'ing — exactly how
 error accumulates on the physical ramp, and why one-point calibration
 (:mod:`repro.core.calibration`) exists.
+
+**Threshold banks.**  One physical ramp generator serves the comparator
+bank at the periphery of ONE crossbar tile — a matrix wider than a tile
+(512 columns in the paper) spans several col-tiles, each with its own
+independently-programmed (and independently drifting) ramp.  The banked
+layout is ``(n_col_tiles, P)``: :class:`BankedThresholds` carries the
+stacked per-bank comparator levels plus a static column→bank map
+(:class:`BankMap`), and :func:`_nladc_banked_apply` quantizes each output
+column against its own bank's ramp (bank-gathered ``searchsorted``, same
+strict-comparator semantics and STE backward as the single-ramp path).
+With one bank the layout collapses to the legacy ``(P,)`` vector and is
+bitwise-identical to it.
 """
 
 from __future__ import annotations
@@ -297,6 +309,108 @@ def _nladc_vjp_bwd(grad_name, res, ct):
 
 
 _nladc_apply.defvjp(_nladc_vjp_fwd, _nladc_vjp_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Threshold banks: one programmed ramp per crossbar col-tile
+# ---------------------------------------------------------------------------
+
+class BankMap:
+    """A static, hashable column→bank index map.
+
+    ``idx[j]`` is the bank (col-tile) whose ramp digitizes output column
+    ``j``.  Hashability lets the map key jitted-function caches and ride
+    through ``custom_vjp`` nondiff argnums; the array itself is host-side
+    and frozen (it is chip wiring, not traced computation).
+    """
+
+    __slots__ = ("idx", "_key")
+
+    def __init__(self, idx):
+        arr = np.ascontiguousarray(np.asarray(idx, np.int32))
+        arr.setflags(write=False)
+        self.idx = arr
+        self._key = (arr.tobytes(), arr.shape)
+
+    @property
+    def n_cols(self) -> int:
+        return int(self.idx.shape[0])
+
+    @property
+    def n_banks(self) -> int:
+        return int(self.idx.max()) + 1 if self.idx.size else 1
+
+    def __hash__(self):
+        return hash(self._key)
+
+    def __eq__(self, other):
+        return isinstance(other, BankMap) and self._key == other._key
+
+    def __repr__(self):
+        return f"BankMap(n_cols={self.n_cols}, n_banks={self.n_banks})"
+
+
+def bank_map_for(width: int, tile_cols: int) -> BankMap:
+    """The canonical TilePlan column grouping: bank j = cols ``j*tile_cols``
+    up to the logical width (the last col-tile of a non-multiple matrix is
+    partial), matching :meth:`repro.core.crossbar.TilePlan.blocks`."""
+    if tile_cols <= 0:
+        raise ValueError(f"tile_cols must be positive, got {tile_cols}")
+    return BankMap(np.arange(width, dtype=np.int64) // tile_cols)
+
+
+@dataclasses.dataclass
+class BankedThresholds:
+    """The ``(n_col_tiles, P)`` comparator-level operand.
+
+    ``thr`` may be traced (NL-ADC-aware training perturbs every bank's ramp
+    per step); ``bank_map`` is static.  Backends detect this carrier on
+    their ``thresholds`` argument and dispatch to the bank-gathered path.
+    """
+
+    thr: "jax.Array"            # (n_banks, P)
+    bank_map: BankMap
+
+    @property
+    def n_banks(self) -> int:
+        return int(self.thr.shape[0])
+
+
+def _banked_count(x, thresholds, bank_map: BankMap):
+    """Thermometer count per column against its own bank's ramp.
+
+    Bank-gathered ``searchsorted(side="left")``: for a single bank this is
+    exactly the legacy count (same binary search per element), preserving
+    the strict-comparator semantics of Eq. (3) bitwise.
+    """
+    thr_cols = thresholds[jnp.asarray(bank_map.idx)]        # (N, P)
+    xm = jnp.moveaxis(x.astype(thresholds.dtype), -1, 0)    # (N, ...)
+    n = jax.vmap(
+        lambda t, xc: jnp.searchsorted(t, xc, side="left"))(thr_cols, xm)
+    return jnp.moveaxis(n, 0, -1)
+
+
+def _nladc_banked_fwd_impl(x, thresholds, y_table, bank_map: BankMap):
+    n = _banked_count(x, thresholds, bank_map)
+    return jnp.take(y_table, n).astype(x.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _nladc_banked_apply(x, thresholds, y_table, grad_name, bank_map):
+    return _nladc_banked_fwd_impl(x, thresholds, y_table, bank_map)
+
+
+def _nladc_banked_vjp_fwd(x, thresholds, y_table, grad_name, bank_map):
+    return _nladc_banked_fwd_impl(x, thresholds, y_table, bank_map), x
+
+
+def _nladc_banked_vjp_bwd(grad_name, bank_map, res, ct):
+    # The STE depends only on the input and the activation derivative — the
+    # banked backward is therefore IDENTICAL to the single-ramp one.
+    return (nladc_ste(grad_name, res, ct), None, None)
+
+
+_nladc_banked_apply.defvjp(_nladc_banked_vjp_fwd, _nladc_banked_vjp_bwd)
 
 
 def _jnp_grad(spec: F.ActivationSpec, x):

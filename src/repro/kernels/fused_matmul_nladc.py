@@ -22,7 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.nladc import Ramp
-from repro.kernels.ref import closed_form_decode, decode_mode, decode_params
+from repro.kernels.ref import (closed_form_decode, decode_mode, decode_params,
+                               thermometer_count)
 
 DEFAULT_BLOCKS = (256, 256, 512)   # (bm, bn, bk)
 
@@ -44,10 +45,8 @@ def _kernel(x_ref, w_ref, thr_ref, b_ref, acc_ref, o_ref, *,
         acc = acc_ref[...]
         if has_bias:
             acc = acc + b_ref[...].astype(jnp.float32)
-        thr = thr_ref[...]
-        n = jnp.zeros(acc.shape, jnp.float32)
-        for t in range(thr.shape[0]):
-            n = n + (acc > thr[t]).astype(jnp.float32)
+        # thr: (P,) shared ramp or (bn, P) per-column (threshold banks)
+        n = thermometer_count(acc, thr_ref[...])
         y = closed_form_decode(n, mode, y0, lsb_l, lsb_r, m)
         o_ref[...] = y.astype(o_ref.dtype)
 
@@ -59,8 +58,9 @@ def fused_matmul_nladc_pallas(
         interpret: bool = True):
     """y = NLADC(x @ w + bias).  x: (M, K), w: (K, N) -> (M, N).
 
-    ``thresholds`` overrides the programmed comparator levels (traced (P,)
-    array; the closed-form decode params stay the ramp's).
+    ``thresholds`` overrides the programmed comparator levels — a traced
+    (P,) array, or an (N, P) per-column matrix for the banked layout (the
+    col-tile ADC periphery); the closed-form decode params stay the ramp's.
     """
     m_dim, k_dim = x.shape
     k2, n_dim = w.shape
@@ -72,6 +72,10 @@ def fused_matmul_nladc_pallas(
     y0, lsb_l, lsb_r, mm = decode_params(ramp)
     thr = jnp.asarray(ramp.thresholds, jnp.float32) if thresholds is None \
         else thresholds.astype(jnp.float32)
+    if thr.ndim == 2:
+        thr_spec = pl.BlockSpec((bn, thr.shape[1]), lambda i, j, k: (j, 0))
+    else:
+        thr_spec = pl.BlockSpec((thr.shape[0],), lambda i, j, k: (0,))
     has_bias = bias is not None
     if bias is None:
         bias = jnp.zeros((n_dim,), jnp.float32)
@@ -84,7 +88,7 @@ def fused_matmul_nladc_pallas(
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
             pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
-            pl.BlockSpec((thr.shape[0],), lambda i, j, k: (0,)),
+            thr_spec,
             pl.BlockSpec((bn,), lambda i, j, k: (j,)),
         ],
         out_specs=[

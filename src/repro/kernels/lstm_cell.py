@@ -23,15 +23,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.nladc import Ramp
-from repro.kernels.ref import closed_form_decode, decode_mode, decode_params
+from repro.kernels.ref import (closed_form_decode, decode_mode, decode_params,
+                               thermometer_count)
 
 DEFAULT_BLOCK = (256, 256)   # (batch, hidden) tile
 
 
 def _quant(x, thr, y0, lsb_l, lsb_r, m, mode):
-    n = jnp.zeros(x.shape, jnp.float32)
-    for t in range(thr.shape[0]):
-        n = n + (x > thr[t]).astype(jnp.float32)
+    # thr: (P,) shared ramp or (bh, P) per-hidden-column (threshold banks)
+    n = thermometer_count(x, thr)
     return closed_form_decode(n, mode, y0, lsb_l, lsb_r, m)
 
 
@@ -55,7 +55,8 @@ def lstm_gates_pallas(gates, c, sig_ramp: Ramp, tanh_ramp: Ramp, *,
     """gates: (B, 4H) [f|a|i|o], c: (B, H) -> (h', c').
 
     ``sig_thresholds`` / ``tanh_thresholds`` override the programmed
-    comparator levels (traced (P,) arrays, NL-ADC-aware training noise).
+    comparator levels — traced (P,) arrays (NL-ADC-aware training noise)
+    or (H, P) per-hidden-column matrices (threshold banks).
     """
     b_dim, h4 = gates.shape
     h_dim = h4 // 4
@@ -69,6 +70,12 @@ def lstm_gates_pallas(gates, c, sig_ramp: Ramp, tanh_ramp: Ramp, *,
         if sig_thresholds is None else sig_thresholds.astype(jnp.float32)
     tthr = jnp.asarray(tanh_ramp.thresholds, jnp.float32) \
         if tanh_thresholds is None else tanh_thresholds.astype(jnp.float32)
+
+    def thr_spec(thr):
+        if thr.ndim == 2:
+            return pl.BlockSpec((bh, thr.shape[1]), lambda i, j: (j, 0))
+        return pl.BlockSpec((thr.shape[0],), lambda i, j: (0,))
+
     gf, ga, gi, go = jnp.split(gates, 4, axis=-1)
     kernel = functools.partial(_kernel, sp=sp, tp=tp)
     gate_spec = pl.BlockSpec((bb, bh), lambda i, j: (i, j))
@@ -76,8 +83,7 @@ def lstm_gates_pallas(gates, c, sig_ramp: Ramp, tanh_ramp: Ramp, *,
         kernel,
         grid=grid,
         in_specs=[gate_spec, gate_spec, gate_spec, gate_spec, gate_spec,
-                  pl.BlockSpec((sthr.shape[0],), lambda i, j: (0,)),
-                  pl.BlockSpec((tthr.shape[0],), lambda i, j: (0,))],
+                  thr_spec(sthr), thr_spec(tthr)],
         out_specs=[gate_spec, gate_spec],
         out_shape=[jax.ShapeDtypeStruct((b_dim, h_dim), gates.dtype),
                    jax.ShapeDtypeStruct((b_dim, h_dim), c.dtype)],

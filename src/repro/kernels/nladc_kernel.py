@@ -25,21 +25,27 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.nladc import Ramp
-from repro.kernels.ref import closed_form_decode, decode_mode, decode_params
+from repro.kernels.ref import (closed_form_decode, decode_mode, decode_params,
+                               thermometer_count)
 
 DEFAULT_BLOCK = (256, 512)
 
 
 def _nladc_kernel(x_ref, thr_ref, o_ref, *, y0, lsb_l, lsb_r, m, mode):
     x = x_ref[...].astype(jnp.float32)
-    thr = thr_ref[...]                     # (P,) in VMEM
-    # Thermometer count: one vectorized compare per ramp level.
-    n = jnp.zeros(x.shape, jnp.float32)
-    p = thr.shape[0]
-    for k in range(p):                     # static unroll: P compares on VPU
-        n = n + (x > thr[k]).astype(jnp.float32)
+    # thr: (P,) shared ramp in VMEM, or (bn, P) per-column (banked layout,
+    # the column->bank gather resolved at trace time by ops.nladc).
+    n = thermometer_count(x, thr_ref[...])
     y = closed_form_decode(n, mode, y0, lsb_l, lsb_r, m)
     o_ref[...] = y.astype(o_ref.dtype)
+
+
+def _thr_spec_2d(thr, bn):
+    """BlockSpec for the threshold operand: broadcast (P,) table, or the
+    (bn, P) per-column slice tracking the lane-dim grid step (banked)."""
+    if thr.ndim == 2:
+        return pl.BlockSpec((bn, thr.shape[1]), lambda i, j: (j, 0))
+    return pl.BlockSpec((thr.shape[0],), lambda i, j: (0,))
 
 
 def nladc_pallas(x, ramp: Ramp, *, thresholds=None,
@@ -47,9 +53,11 @@ def nladc_pallas(x, ramp: Ramp, *, thresholds=None,
                  interpret: bool = True):
     """2D-tiled elementwise NL-ADC.  x: (M, N) -> (M, N).
 
-    ``thresholds`` overrides the programmed comparator levels (a traced
-    (P,) array — NL-ADC-aware training perturbs the ramp per step); the
-    decode stays the ramp's closed form (y-levels are fixed by design).
+    ``thresholds`` overrides the programmed comparator levels — a traced
+    (P,) array (NL-ADC-aware training perturbs the ramp per step) or an
+    (N, P) per-column matrix (threshold banks: each output column compares
+    against its own col-tile's programmed ramp); the decode stays the
+    ramp's closed form (y-levels are fixed by design).
     """
     m_dim, n_dim = x.shape
     bm, bn = min(block[0], m_dim), min(block[1], n_dim)
@@ -65,7 +73,7 @@ def nladc_pallas(x, ramp: Ramp, *, thresholds=None,
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-            pl.BlockSpec((thr.shape[0],), lambda i, j: (0,)),
+            _thr_spec_2d(thr, bn),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m_dim, n_dim), x.dtype),

@@ -15,7 +15,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.nladc import Ramp
+from repro.core.nladc import BankedThresholds, Ramp
 from repro.kernels import crossbar_mac as _cb
 from repro.kernels import flash_decode as _fd
 from repro.kernels import fused_matmul_nladc as _fm
@@ -47,25 +47,58 @@ def _pad_to(x, mult, axis):
     return jnp.pad(x, widths)
 
 
+def _resolve_thr(thresholds, n_cols: int, mult: int):
+    """Banked thresholds -> a padded (N, P) per-column matrix.
+
+    The column→bank gather happens HERE, at trace time — the kernels see a
+    dense per-column threshold operand and never gather on the VPU.  Plain
+    (P,)/None thresholds pass through untouched.  Padded columns replicate
+    the last row (their outputs are sliced away; the compare just needs
+    finite values).
+    """
+    if not isinstance(thresholds, BankedThresholds):
+        return thresholds
+    idx = thresholds.bank_map.idx
+    if idx.shape[0] != n_cols:
+        raise ValueError(
+            f"bank map covers {idx.shape[0]} columns but the operand has "
+            f"{n_cols}")
+    thr_cols = thresholds.thr.astype(jnp.float32)[jnp.asarray(idx)]
+    pad = (-n_cols) % mult
+    if pad:
+        thr_cols = jnp.pad(thr_cols, ((0, pad), (0, 0)), mode="edge")
+    return thr_cols
+
+
 def nladc(x, ramp: Ramp, *, thresholds=None, block=None):
-    """Elementwise NL-ADC of any-shaped x (flattened to 2D tiles)."""
+    """Elementwise NL-ADC of any-shaped x (flattened to 2D tiles).
+
+    ``thresholds`` may be a :class:`BankedThresholds` — each column of the
+    last axis then compares against its own bank's programmed ramp.
+    """
     shape = x.shape
     flat = x.reshape(-1, shape[-1]) if x.ndim > 1 else x.reshape(1, -1)
     blk = block or _nk.DEFAULT_BLOCK
     m0, n0 = flat.shape
+    thr = _resolve_thr(thresholds, n0, blk[1])
     flat = _pad_to(_pad_to(flat, blk[0], 0), blk[1], 1)
-    out = _nk.nladc_pallas(flat, ramp, thresholds=thresholds, block=blk,
+    out = _nk.nladc_pallas(flat, ramp, thresholds=thr, block=blk,
                            interpret=interpret_mode())
     return out[:m0, :n0].reshape(shape)
 
 
 def fused_matmul_nladc(x, w, ramp: Ramp, bias=None, *, thresholds=None,
                        blocks=None):
-    """NLADC(x @ w + bias) with batch-dims flattened into M."""
+    """NLADC(x @ w + bias) with batch-dims flattened into M.
+
+    ``thresholds`` may be a :class:`BankedThresholds` over w's output
+    columns (one ramp per crossbar col-tile).
+    """
     blk = blocks or _fm.DEFAULT_BLOCKS
     lead = x.shape[:-1]
     k = x.shape[-1]
     n = w.shape[-1]
+    thr = _resolve_thr(thresholds, n, blk[1])
     xf = x.reshape(-1, k)
     m0 = xf.shape[0]
     xf = _pad_to(_pad_to(xf, blk[0], 0), blk[2], 1)
@@ -74,7 +107,7 @@ def fused_matmul_nladc(x, w, ramp: Ramp, bias=None, *, thresholds=None,
     if bias is not None:
         bp = _pad_to(bias, blk[1], 0)
     out = _fm.fused_matmul_nladc_pallas(xf, wp, ramp, bp,
-                                        thresholds=thresholds, blocks=blk,
+                                        thresholds=thr, blocks=blk,
                                         interpret=interpret_mode())
     return out[:m0, :n].reshape(lead + (n,))
 
@@ -100,10 +133,17 @@ def analog_tile(x, w, ramp: Ramp, *, input_bits: Optional[int] = None,
 
 def lstm_gates(gates, c, sig_ramp: Ramp, tanh_ramp: Ramp, *,
                sig_thresholds=None, tanh_thresholds=None, block=None):
-    """Fused LSTM tail. gates: (B, 4H), c: (B, H) -> (h', c')."""
+    """Fused LSTM tail. gates: (B, 4H), c: (B, H) -> (h', c').
+
+    Threshold args may be :class:`BankedThresholds` over the hidden dim —
+    every gate (and the cell tanh) of hidden unit h then uses the ramp of
+    h's col-tile bank.
+    """
     blk = block or _lc.DEFAULT_BLOCK
     b0, h4 = gates.shape
     h0 = h4 // 4
+    sig_thresholds = _resolve_thr(sig_thresholds, h0, blk[1])
+    tanh_thresholds = _resolve_thr(tanh_thresholds, h0, blk[1])
     # pad batch and hidden separately (gates padded per-gate inside kernel
     # wrapper: split, pad, re-concat keeps the [f|a|i|o] packing intact)
     gf, ga, gi, go = jnp.split(gates, 4, axis=-1)

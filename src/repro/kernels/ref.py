@@ -51,6 +51,25 @@ def closed_form_decode(n, mode, y0, lsb_l, lsb_r, m):
     return jnp.where(n <= m, y0 - (m - n) * lsb_l, y0 + (n - m) * lsb_r)
 
 
+def thermometer_count(x, thr):
+    """``n = sum_k [x > V_k]`` on a 2D tile, shared by the kernel bodies.
+
+    ``thr`` is either ``(P,)`` — one ramp shared by every column (legacy) —
+    or ``(N, P)`` — per-column comparator levels, the banked layout with
+    the column→bank gather already resolved at trace time.  The compare
+    order (one vectorized VPU compare per ramp level) is identical in both
+    shapes, so a single-bank banked call is bitwise the legacy call.
+    """
+    n = jnp.zeros(x.shape, jnp.float32)
+    if thr.ndim == 2:
+        for k in range(thr.shape[1]):
+            n = n + (x > thr[:, k][None, :]).astype(jnp.float32)
+    else:
+        for k in range(thr.shape[0]):
+            n = n + (x > thr[k]).astype(jnp.float32)
+    return n
+
+
 def nladc_decode(n, ramp: Ramp):
     """Closed-form y(n) (matches ramp.y_table up to fp rounding)."""
     y0, lsb_l, lsb_r, m = decode_params(ramp)
@@ -61,6 +80,15 @@ def nladc_decode(n, ramp: Ramp):
 def nladc(x, ramp: Ramp):
     """Elementwise NL-ADC: thermometer count vs thresholds, affine decode."""
     thr = jnp.asarray(ramp.thresholds, jnp.float32)
+    n = jnp.sum(x.astype(jnp.float32)[..., None] > thr, axis=-1)
+    return nladc_decode(n, ramp).astype(x.dtype)
+
+
+def nladc_cols(x, thr_cols, ramp: Ramp):
+    """Banked oracle: per-column thresholds ``thr_cols (N, P)``; the decode
+    is the ramp's closed form (y-levels are fixed by design, only the
+    comparator levels vary per bank)."""
+    thr = jnp.asarray(thr_cols, jnp.float32)
     n = jnp.sum(x.astype(jnp.float32)[..., None] > thr, axis=-1)
     return nladc_decode(n, ramp).astype(x.dtype)
 

@@ -48,6 +48,14 @@ def main():
                     default="", help="override AnalogSpec.mode (most LM "
                     "configs default to 'exact'; pass 'infer' for the full "
                     "deployment simulation so --device actually acts)")
+    ap.add_argument("--bank-cols", type=int, default=0,
+                    help="threshold banks: output columns per NL-ADC ramp "
+                         "(one ramp per crossbar col-tile; 0 = one shared "
+                         "ramp per activation, the legacy layout)")
+    ap.add_argument("--drain-before-rejit", action="store_true",
+                    help="scheduler-aware continuous batching: drain the "
+                         "in-flight decode wave before a planned chip "
+                         "re-program/re-jit instead of recompiling mid-wave")
     ap.add_argument("--age-per-step-s", type=float, default=0.0,
                     help="device seconds added per engine step; > 0 turns "
                          "on the re-calibration scheduler (infer mode only)")
@@ -72,6 +80,8 @@ def main():
         spec_kw["device"] = args.device
     if args.analog_mode:
         spec_kw["mode"] = args.analog_mode
+    if args.bank_cols:
+        spec_kw["bank_cols"] = args.bank_cols
     if spec_kw:
         cfg = cfg.replace(analog=dataclasses.replace(cfg.analog, **spec_kw))
     model = build(cfg)
@@ -101,8 +111,9 @@ def main():
     if args.resume:
         if not args.ckpt_dir:
             ap.error("--resume requires --ckpt-dir")
-        engine = ServingEngine.restore(model, args.ckpt_dir,
-                                       params_like=params)
+        engine = ServingEngine.restore(
+            model, args.ckpt_dir, params_like=params,
+            drain_before_rejit=args.drain_before_rejit)
         sched = engine.scheduler
         if recal is not None:
             if sched is None:
@@ -118,7 +129,8 @@ def main():
     else:
         engine = ServingEngine(model, params, max_batch=args.max_batch,
                                max_len=args.max_len, device=device,
-                               recal=recal)
+                               recal=recal,
+                               drain_before_rejit=args.drain_before_rejit)
 
     rng = np.random.default_rng(0)
     for uid in range(args.requests):

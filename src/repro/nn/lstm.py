@@ -60,9 +60,18 @@ def lstm_init(key, spec: LSTMSpec, dtype=jnp.float32):
     return p
 
 
-def make_gate_acts(cfg: AnalogConfig):
-    """(sigmoid, tanh) NL-ADC pair shared by gates and the cell tanh."""
-    return (AnalogActivation("sigmoid", cfg), AnalogActivation("tanh", cfg))
+def make_gate_acts(cfg: AnalogConfig, width: int = 0):
+    """(sigmoid, tanh) NL-ADC pair shared by gates and the cell tanh.
+
+    ``width`` (the hidden size) eagerly realizes the per-col-tile threshold
+    banks when ``cfg.bank_cols`` is set, so lifecycle consumers (the
+    serving scheduler) see the full bank inventory before the first trace.
+    """
+    acts = (AnalogActivation("sigmoid", cfg), AnalogActivation("tanh", cfg))
+    if width:
+        for act in acts:
+            act.bank_for(width)
+    return acts
 
 
 def lstm_cell(p, x, h, c, spec: LSTMSpec, acts: Tuple, *, key=None):
@@ -80,8 +89,8 @@ def lstm_cell(p, x, h, c, spec: LSTMSpec, acts: Tuple, *, key=None):
         # elementwise tail is one backend primitive (fused on pallas).
         h_new, c_new = BK.get_backend(cfg.backend).lstm_gates(
             gates, c, sig.adc, tnh.adc,
-            sig_thr=sig.thresholds_for(k_g),
-            tanh_thr=tnh.thresholds_for(k_g))
+            sig_thr=sig.thresholds_for(k_g, spec.n_hidden),
+            tanh_thr=tnh.thresholds_for(k_g, spec.n_hidden))
     else:
         hf, ha, hi, ho = jnp.split(gates, 4, axis=-1)
         hf, ha, hi, ho = sig(hf, key=k_g), tnh(ha, key=k_g), \

@@ -52,6 +52,11 @@ class LM:
         self.sigmoid_act = AnalogActivation("sigmoid", acfg)
         self.softplus_act = AnalogActivation("softplus", acfg)
         self.silu_act = AnalogActivation("silu", acfg)
+        # Eagerly realize the hidden activation's per-col-tile threshold
+        # bank (width = d_ff, the MLP gate output) so lifecycle consumers
+        # (RecalScheduler) see the bank inventory before the first trace;
+        # other widths realize lazily at trace time (same keyed draws).
+        self.act.bank_for(cfg.d_ff)
         # kv_chunk for flash-style attention; smaller for huge sequences.
         self.kv_chunk = 1024
         # Analysis mode: unroll layer/kv scans into Python loops so XLA

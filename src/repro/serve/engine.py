@@ -70,19 +70,38 @@ class ServingEngine:
     weight crossbars to the current age, and re-jits (reprogramming the
     chip invalidates the compiled step's threshold constants).
 
-    The whole deployment — aged params, programmed ramps, scheduler clock,
-    noise-key schedule, decode caches, in-flight requests — checkpoints via
-    :meth:`save` and resumes bit-identically via :meth:`restore`.
+    The whole deployment — aged params, programmed ramps (including the
+    per-col-tile threshold banks), scheduler clock, noise-key schedule,
+    decode caches, in-flight requests — checkpoints via :meth:`save`
+    (schema version ``SCHEMA``) and resumes bit-identically via
+    :meth:`restore` (older schemas migrate; unknown ones are rejected with
+    an upgrade hint).
+
+    ``drain_before_rejit``: scheduler-aware continuous batching.  When a
+    chip re-program lands mid-wave, the engine stops admitting, lets the
+    in-flight decode slots finish on the already-compiled step (the old
+    chip — physically, the re-program is deferred), and only then
+    re-programs and re-jits.  Off (default), the re-program applies
+    immediately, recompiling mid-wave.
     """
 
+    SCHEMA = 2          # checkpoint schema this build writes/understands
+
     def __init__(self, model, params, *, max_batch: int, max_len: int,
-                 device=None, noise_seed: int = 0, recal=None):
+                 device=None, noise_seed: int = 0, recal=None,
+                 drain_before_rejit: bool = False):
         from repro.serve.lifecycle import RecalScheduler, analog_activations
 
         self.device = device
         self._pristine_params = params
         self._acts = analog_activations(model)
         self.scheduler = None
+        self.drain_before_rejit = drain_before_rejit
+        self._rejit_pending = False
+        # Weight-crossbar re-program bookkeeping (probe-driven refresh):
+        # generation salts the tile draws, prog-age anchors the drift clock.
+        self._weight_gen = 0
+        self._weight_prog_age_s = 0.0
         if recal is not None:
             if device is None:
                 raise ValueError("recal policy requires a device model")
@@ -119,10 +138,33 @@ class ServingEngine:
 
         NL-ADC thresholds are closure constants, so any chip re-program
         (scheduler redeploy, checkpoint restore) must drop the old traces.
+        The snapshot taken here is the chip the new traces will SERVE —
+        during a drain window (``drain_before_rejit``) the scheduler may
+        move the host-side thresholds ahead of the still-compiled step, and
+        a checkpoint must record what is being served, not what is pending.
         """
         self._jit_decode = jax.jit(self._decode_all)
         self._jit_prefill = jax.jit(self._prefill_slot,
                                     static_argnames=("length",))
+        self._served_ramps = {name: np.asarray(act.ramp.thresholds).copy()
+                              for name, act in self._acts.items()}
+        self._served_banks = {
+            name: {width: bank.thresholds_f64.copy()
+                   for width, bank in act.banks().items()}
+            for name, act in self._acts.items()}
+
+    def _served_bank_state(self):
+        """Per-act served bank thresholds, including banks realized lazily
+        inside the current traces (those serve their deploy-time state,
+        which is their current state until the next re-jit)."""
+        out = {}
+        for name, act in self._acts.items():
+            snap = self._served_banks.get(name, {})
+            banks = {width: snap.get(width, bank.thresholds_f64)
+                     for width, bank in act.banks().items()}
+            if banks:
+                out[name] = banks
+        return out
 
     def _next_key(self):
         if not self._noisy:
@@ -174,6 +216,11 @@ class ServingEngine:
     def _admit(self):
         """Prefill queued requests into free slots (simplified: per-request
         single-slot prefill on a fresh state, then merged)."""
+        if self._rejit_pending:
+            # draining toward a planned re-jit: no new admissions — they
+            # would keep the wave alive (and prefill on a chip about to be
+            # re-programmed)
+            return
         for slot in range(self.max_batch):
             if not self.queue or not self.slot_free[slot]:
                 continue
@@ -221,6 +268,11 @@ class ServingEngine:
 
     def step(self) -> Dict[int, int]:
         """One engine iteration: admit + decode. Returns {uid: token}."""
+        if self._rejit_pending and all(self.slot_free):
+            # the wave drained: apply the deferred chip re-program, then
+            # resume admission on the fresh traces
+            self._rejit_pending = False
+            self._on_chip_reprogram()
         self._admit()
         active = [s for s in range(self.max_batch) if not self.slot_free[s]]
         if not active:
@@ -245,7 +297,17 @@ class ServingEngine:
                 self.slot_free[s] = True
                 self.slot_req[s] = None
         if self.scheduler is not None and self.scheduler.tick():
-            self._on_chip_reprogram()
+            if self.drain_before_rejit \
+                    and not all(self.slot_free[s] for s in active):
+                # planned re-jit: drain the in-flight wave first (the
+                # deployed thresholds moved host-side, but the compiled
+                # step keeps serving the old chip until the drain point)
+                self._rejit_pending = True
+            else:
+                # also settles any earlier deferral — one reprogram covers
+                # every threshold move up to the scheduler's current age
+                self._rejit_pending = False
+                self._on_chip_reprogram()
         return out
 
     def _on_chip_reprogram(self):
@@ -255,12 +317,28 @@ class ServingEngine:
         pristine params at the scheduler's current age (deterministic —
         the per-tile draws are TilePlan-keyed, so the same age is the same
         chip on every rebuild), then drop the stale jitted traces.
+
+        A pending probe-driven *weight refresh* re-programs the crossbars
+        instead of merely re-aging them: the generation salt draws a fresh
+        per-tile write-noise population and the drift clock restarts at the
+        re-program age.
         """
         sched = self.scheduler
-        if self.device is not None and sched.policy.age_per_step_s > 0:
-            aged_dev = self.device.with_drift(sched.age_s)
+        # After a restored drain window the activations hold the OLD
+        # (served) thresholds; push the scheduler's current-age state
+        # before re-jitting.  In the immediate path this is a no-op (tick
+        # already redeployed).
+        sched.redeploy()
+        if self.device is not None and sched.consume_weight_refresh():
+            self._weight_gen += 1
+            self._weight_prog_age_s = sched.age_s
+        if self.device is not None \
+                and (sched.policy.age_per_step_s > 0 or self._weight_gen):
+            t_eff = max(sched.age_s - self._weight_prog_age_s, 0.0)
+            aged_dev = self.device.with_drift(t_eff)
             if aged_dev.has_build_stage:
-                self.params = aged_dev.age_params(self._pristine_params)
+                self.params = aged_dev.age_params(
+                    self._pristine_params, generation=self._weight_gen)
         self._refresh_jit()
 
     def run_to_completion(self, max_iters: int = 10_000) -> int:
@@ -270,6 +348,11 @@ class ServingEngine:
             if not self.queue and all(self.slot_free):
                 break
             n += len(self.step())
+        if self._rejit_pending and all(self.slot_free):
+            # settle a deferred chip re-program once the last wave drained,
+            # so the deployment doesn't idle on stale traces
+            self._rejit_pending = False
+            self._on_chip_reprogram()
         return n
 
     # -- checkpoint / restore (repro.ckpt) ------------------------------
@@ -290,11 +373,20 @@ class ServingEngine:
             "slot_pos": np.asarray(self.slot_pos),
             "slot_last": np.asarray(self.slot_last),
             "slot_free": np.asarray(self.slot_free, np.bool_),
-            # Deployed comparator thresholds per activation — saved as the
-            # realized float64 arrays so a restore is bitwise the running
-            # chip even when the save lands between scheduler probes.
-            "ramps": {name: np.asarray(act.ramp.thresholds)
-                      for name, act in self._acts.items()},
+            # SERVED comparator thresholds per activation — the float64
+            # arrays the compiled traces actually quantize with, so a
+            # restore is bitwise the running chip even when the save lands
+            # between scheduler probes or inside a drain window (where the
+            # host-side thresholds have already moved ahead of the traces).
+            "ramps": {name: np.asarray(thr)
+                      for name, thr in self._served_ramps.items()},
+            # The banked (n_col_tiles, P) layout per realized width — an
+            # empty dict (no banked activations) contributes no leaves, so
+            # schema-1 checkpoints load against this template unchanged.
+            "ramp_banks": {
+                name: {f"w{width}": np.asarray(thr)
+                       for width, thr in sorted(banks.items())}
+                for name, banks in self._served_bank_state().items()},
         }
         if include_pristine:
             tree["pristine"] = self._pristine_params
@@ -305,10 +397,18 @@ class ServingEngine:
         from repro.ckpt.checkpoint import save_checkpoint
 
         meta = {
+            "schema": self.SCHEMA,
             "engine": {"max_batch": self.max_batch, "max_len": self.max_len},
             "device": None if self.device is None else self.device.to_dict(),
             "scheduler": None if self.scheduler is None
             else self.scheduler.to_dict(),
+            # bank inventory: restore realizes these widths BEFORE building
+            # the template tree, so the leaf paths line up
+            "banks": {name: sorted(act.banks())
+                      for name, act in self._acts.items() if act.banks()},
+            "lifecycle": {"weight_gen": self._weight_gen,
+                          "weight_prog_age_s": self._weight_prog_age_s,
+                          "rejit_pending": self._rejit_pending},
             "requests": {
                 "slots": [None if r is None else r.to_dict()
                           for r in self.slot_req],
@@ -322,7 +422,8 @@ class ServingEngine:
 
     @classmethod
     def restore(cls, model, root: str, *, step: Optional[int] = None,
-                params_like=None) -> "ServingEngine":
+                params_like=None,
+                drain_before_rejit: bool = False) -> "ServingEngine":
         """Resume a checkpointed deployment: same chip, same next token.
 
         ``params_like``: a pytree matching the model's params structure
@@ -338,11 +439,60 @@ class ServingEngine:
         from repro.serve.lifecycle import RecalScheduler
 
         step, meta = read_metadata(root, step=step)
+        if "engine" not in meta:
+            raise ValueError(
+                f"checkpoint at {root!r} (step {step}) is not a "
+                "ServingEngine deployment checkpoint (no 'engine' "
+                "metadata); train checkpoints restore via repro.ckpt "
+                "directly")
+        schema = int(meta.get("schema", 1))
+        if schema > cls.SCHEMA:
+            raise ValueError(
+                f"deployment checkpoint schema {schema} is newer than this "
+                f"build understands (<= {cls.SCHEMA}); upgrade repro, or "
+                "re-serve and re-checkpoint with this version")
+        if schema < 2:
+            # schema 1 (PR 4 era): no threshold banks, no lifecycle
+            # bookkeeping — migrate by filling the v2 fields with their
+            # pre-bank semantics (empty bank inventory, generation 0).
+            meta.setdefault("banks", {})
+            meta.setdefault("lifecycle", {})
         if params_like is None:
             params_like = model.init(jax.random.PRNGKey(0))
         eng = cls(model, params_like,
                   max_batch=meta["engine"]["max_batch"],
-                  max_len=meta["engine"]["max_len"])
+                  max_len=meta["engine"]["max_len"],
+                  drain_before_rejit=drain_before_rejit)
+        # Realize the checkpointed bank inventory BEFORE building the
+        # restore template, so the leaf paths line up with the save — and
+        # fail with a clear bank_cols hint in BOTH mismatch directions
+        # (instead of a tree-mismatch error deep in repro.ckpt).
+        for name, widths in meta["banks"].items():
+            act = eng._acts.get(name)
+            if act is None:
+                raise ValueError(
+                    f"checkpoint carries threshold banks for activation "
+                    f"{name!r} but the model has no such NL-ADC "
+                    f"activation; have {sorted(eng._acts)}")
+            for width in widths:
+                if act.bank_for(int(width)) is None:
+                    raise ValueError(
+                        f"checkpoint carries a threshold bank for {name!r} "
+                        f"at width {width} but this model config does not "
+                        f"bank that width (bank_cols={act.cfg.bank_cols}); "
+                        "restore with the bank_cols the deployment was "
+                        "serving with (--bank-cols)")
+        for name, act in eng._acts.items():
+            saved = {int(w) for w in meta["banks"].get(name, [])}
+            extra = sorted(set(act.banks()) - saved)
+            if extra:
+                raise ValueError(
+                    f"model config banks thresholds for {name!r} at widths "
+                    f"{extra} but the checkpoint has none there (saved "
+                    f"with a different bank_cols"
+                    f"{' — or a pre-bank schema-1 deployment' if schema < 2 else ''}); "
+                    "re-serve a fresh deployment or restore with the "
+                    "original bank_cols")
         has_sched = meta["scheduler"] is not None
         tree, _, _ = load_checkpoint(
             root, eng._ckpt_tree(include_pristine=has_sched), step=step)
@@ -368,6 +518,18 @@ class ServingEngine:
             act = eng._acts[name]
             act.redeploy(act.ramp.with_thresholds(
                 np.asarray(thr, np.float64)))
+        for name, banks in tree.get("ramp_banks", {}).items():
+            act = eng._acts[name]
+            for wkey, thr in banks.items():
+                width = int(wkey[1:])                   # "w{width}"
+                ideal = act.bank_for(width).ideal
+                act.redeploy_bank(width, [
+                    ideal.with_thresholds(np.asarray(row, np.float64))
+                    for row in np.asarray(thr)])
+        lc = meta["lifecycle"]
+        eng._weight_gen = int(lc.get("weight_gen", 0))
+        eng._weight_prog_age_s = float(lc.get("weight_prog_age_s", 0.0))
+        eng._rejit_pending = bool(lc.get("rejit_pending", False))
         if meta["scheduler"] is not None:
             eng.scheduler = RecalScheduler.from_dict(
                 meta["scheduler"], eng._acts)

@@ -12,13 +12,29 @@ This module owns that loop:
   at any device age are a pure function of ``(state, device model, age)``,
   which is what makes an engine restart bit-reproducible.
 * :class:`RecalScheduler` — advances device age across serve steps, probes
-  mean INL (cheap: host-side threshold arrays vs the ideal ramp), triggers
-  one-point re-calibration of every ramp when the probe crosses
-  ``RecalPolicy.inl_threshold_lsb``, and records an
-  age → recalibrate → recovered-accuracy trace.  On every probe it
-  re-deploys the aged thresholds into the model's
+  per-ramp INL (cheap: host-side threshold arrays vs the ideal ramp),
+  triggers one-point re-calibration of **exactly the ramps whose own INL
+  crossed** ``RecalPolicy.inl_threshold_lsb`` (a recal event reprograms
+  only the out-of-spec ramp columns — per-bank for banked activations),
+  and records an age → recalibrate → recovered-accuracy trace.  On every
+  probe it re-deploys the aged thresholds into the model's
   :class:`~repro.core.analog_layer.AnalogActivation` objects — the caller
   (``ServingEngine``) re-jits its step functions when told so.
+
+**Threshold banks.**  A banked activation (``AnalogConfig.bank_cols``)
+carries one :class:`RampState` per col-tile bank, keyed
+``"{name}@{width}:{j}"``; banks realized lazily (first trace) are adopted
+on the next probe.  Each bank ages, probes, and re-calibrates
+independently — two banks of one activation are different physical ramp
+columns.
+
+**Weight refresh.**  One-point recal can only shift ``V_init``; when the
+drifted ramp *shape* (or the weight crossbars behind it) has degraded so
+far that recal no longer brings INL back under the threshold for
+``RecalPolicy.weight_refresh_after_stalls`` consecutive recal events, the
+scheduler raises ``weight_refresh_pending`` — the engine consumes it and
+re-programs the drifted weight crossbars (a fresh tile-keyed write, see
+``DeviceModel.age_weights_tiled(generation=...)``).
 
 All randomness (drift dispersion, the write noise on the re-calibration
 bias devices) is keyed via :meth:`DeviceModel.tile_rng` off stable string
@@ -66,13 +82,20 @@ class RecalPolicy:
                            simulation runs much faster than wall-clock shelf
                            life; 0 freezes age — probes still run).
     ``check_every``        engine steps between INL probes (<= 0 disables).
-    ``inl_threshold_lsb``  mean deployed INL (in LSBs, across all ramps)
-                           above which one-point re-calibration triggers.
+    ``inl_threshold_lsb``  per-ramp deployed INL (LSBs) above which that
+                           ramp (and only that ramp) gets a one-point
+                           re-calibration.
+    ``weight_refresh_after_stalls``
+                           consecutive recal events that fail to bring the
+                           recal'd ramps back under the INL threshold
+                           before the scheduler requests a weight-crossbar
+                           re-program (0 disables the refresh hook).
     """
 
     age_per_step_s: float = 0.0
     check_every: int = 64
     inl_threshold_lsb: float = 1.0
+    weight_refresh_after_stalls: int = 0
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -194,13 +217,45 @@ class RecalScheduler:
             else 0.0
         self.step_count = 0
         self.n_recals = 0
+        self.stall_count = 0
+        self.weight_refresh_pending = False
         self.events: List[dict] = []
         self.ramps: Dict[str, RampState] = {}
         if _program:
             for name, act in self.acts.items():
                 self.ramps[name] = RampState.program(
                     device, act.ideal_ramp, name)
+            self._sync_banks()
             self.redeploy()
+
+    # -- threshold banks ---------------------------------------------------
+
+    @staticmethod
+    def bank_key(name: str, width: int, j: int) -> str:
+        """Ramp-state key of one col-tile bank member (also its rng salt)."""
+        return f"{name}@{width}:{j}"
+
+    def _bank_groups(self):
+        """Yield ``(name, act, width, bank)`` for every realized bank."""
+        for name, act in self.acts.items():
+            for width, bank in sorted(act.banks().items()):
+                yield name, act, width, bank
+
+    def _sync_banks(self) -> None:
+        """Adopt banks the model realized since the last probe.
+
+        Banks deploy lazily (per application width, possibly inside the
+        first jit trace), so the scheduler programs their
+        :class:`RampState` on the next probe.  The draws are keyed purely
+        by the bank-state key, so adoption order never changes a bank's
+        chip.
+        """
+        for name, act, width, bank in self._bank_groups():
+            for j in range(bank.n_banks):
+                key = self.bank_key(name, width, j)
+                if key not in self.ramps:
+                    self.ramps[key] = RampState.program(
+                        self.device, act.ideal_ramp, key)
 
     # -- probes ------------------------------------------------------------
 
@@ -211,6 +266,11 @@ class RecalScheduler:
         return float(np.mean([s.inl_at(self.device, self.age_s)
                               for s in self.ramps.values()]))
 
+    def probe_inl_per_ramp(self) -> Dict[str, float]:
+        """Per-ramp (and per-bank) deployed INL at the current age."""
+        return {k: s.inl_at(self.device, self.age_s)
+                for k, s in self.ramps.items()}
+
     def redeploy(self) -> bool:
         """Push current-age thresholds into the activations.
 
@@ -218,13 +278,26 @@ class RecalScheduler:
         re-jit then — thresholds are closure constants in step functions).
         """
         changed = False
-        for name, state in self.ramps.items():
-            act = self.acts[name]
+        for name, act in self.acts.items():
+            state = self.ramps.get(name)
+            if state is None:
+                continue
             new = state.ramp_at(self.device, self.age_s)
             old = act.ramp.thresholds
             if old.shape != new.thresholds.shape \
                     or np.max(np.abs(old - new.thresholds)) > 0:
                 act.redeploy(new)
+                changed = True
+        for name, act, width, bank in self._bank_groups():
+            states = [self.ramps.get(self.bank_key(name, width, j))
+                      for j in range(bank.n_banks)]
+            if any(s is None for s in states):
+                continue                       # not yet adopted
+            ramps = [s.ramp_at(self.device, self.age_s) for s in states]
+            new_thr = np.stack([r.thresholds for r in ramps])
+            if bank.thresholds_f64.shape != new_thr.shape \
+                    or np.max(np.abs(bank.thresholds_f64 - new_thr)) > 0:
+                act.redeploy_bank(width, ramps)
                 changed = True
         return changed
 
@@ -248,26 +321,58 @@ class RecalScheduler:
         return self.check()
 
     def check(self) -> bool:
-        """One INL probe; re-calibrate every ramp if over threshold."""
+        """One INL probe; re-calibrate exactly the out-of-spec ramps.
+
+        Each ramp (each col-tile bank of a banked activation counts as its
+        own ramp — it is its own physical column) triggers on its OWN INL,
+        so a recal event reprograms only the degraded ramp columns.
+        """
+        self._sync_banks()
         # Deploy the current-age thresholds FIRST so every probe in this
         # event (INL and accuracy alike) sees the same chip at the same age.
         changed = self.redeploy()
-        inl = self.probe_inl()
+        inls = self.probe_inl_per_ramp()
+        inl = float(np.mean(list(inls.values()))) if inls else 0.0
         event = {"step": self.step_count, "age_s": self.age_s,
                  "inl_lsb": round(inl, 4), "recalibrated": False}
         if self.accuracy_probe is not None:
             event["accuracy"] = float(self.accuracy_probe())
-        if inl > self.policy.inl_threshold_lsb and self.ramps:
-            for state in self.ramps.values():
-                state.recalibrate(self.device, self.age_s, self.n_recals)
+        over = sorted(k for k, v in inls.items()
+                      if v > self.policy.inl_threshold_lsb)
+        if over:
+            for key in over:
+                self.ramps[key].recalibrate(self.device, self.age_s,
+                                            self.n_recals)
             self.n_recals += 1
             event["recalibrated"] = True
-            event["inl_after_lsb"] = round(self.probe_inl(), 4)
+            event["recal_ramps"] = over
+            after = self.probe_inl_per_ramp()
+            event["inl_after_lsb"] = round(
+                float(np.mean(list(after.values()))), 4)
             changed = self.redeploy() or changed
             if self.accuracy_probe is not None:
                 event["accuracy_recovered"] = float(self.accuracy_probe())
+            # Recovery-stall tracking: recal only shifts V_init — if the
+            # recal'd ramps are STILL out of spec, the chip (ramp shape
+            # and, on the same clock, the weight crossbars) has drifted
+            # beyond what calibration fixes.
+            stalled = any(after[k] > self.policy.inl_threshold_lsb
+                          for k in over)
+            self.stall_count = self.stall_count + 1 if stalled else 0
+            n_stalls = self.policy.weight_refresh_after_stalls
+            if n_stalls > 0 and self.stall_count >= n_stalls:
+                self.weight_refresh_pending = True
+                self.stall_count = 0
+                event["weight_refresh"] = True
+                changed = True        # the engine must rebuild either way
         self.events.append(event)
         return changed
+
+    def consume_weight_refresh(self) -> bool:
+        """True once per pending weight-crossbar re-program request."""
+        pending, self.weight_refresh_pending = \
+            self.weight_refresh_pending, False
+        return pending
 
     # -- serialization -----------------------------------------------------
 
@@ -279,6 +384,8 @@ class RecalScheduler:
             "age_s": self.age_s,
             "step_count": self.step_count,
             "n_recals": self.n_recals,
+            "stall_count": self.stall_count,
+            "weight_refresh_pending": self.weight_refresh_pending,
             "events": list(self.events),
             "ramps": {k: v.to_dict() for k, v in self.ramps.items()},
         }
@@ -302,12 +409,17 @@ class RecalScheduler:
         sched.age_s = float(d["age_s"])
         sched.step_count = int(d["step_count"])
         sched.n_recals = int(d["n_recals"])
+        sched.stall_count = int(d.get("stall_count", 0))
+        sched.weight_refresh_pending = bool(
+            d.get("weight_refresh_pending", False))
         sched.events = list(d["events"])
-        for name, rd in d["ramps"].items():
+        for key, rd in d["ramps"].items():
+            # bank-state keys are "{act}@{width}:{j}"; plain keys are acts
+            name = key.split("@", 1)[0]
             if name not in sched.acts:
-                raise ValueError(f"checkpointed ramp {name!r} has no "
+                raise ValueError(f"checkpointed ramp {key!r} has no "
                                  f"matching activation; have "
                                  f"{sorted(sched.acts)}")
-            sched.ramps[name] = RampState.from_dict(
+            sched.ramps[key] = RampState.from_dict(
                 rd, sched.acts[name].ideal_ramp)
         return sched

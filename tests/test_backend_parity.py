@@ -345,6 +345,132 @@ def test_lstm_noisy_preset_parity():
     assert float(jnp.max(jnp.abs(ys["ref"] - ys["pallas"]))) < lsb / 2
 
 
+# ---------------------------------------------------------------------------
+# Threshold banks: the (n_col_tiles, P) layout through both backends
+# ---------------------------------------------------------------------------
+
+
+def _banked(adc, n_banks, width, spread=0.0):
+    """A BankedThresholds over ``width`` columns (optionally per-bank
+    distinct thresholds, as an actually-deployed bank would carry)."""
+    from repro.core.nladc import BankedThresholds, bank_map_for
+
+    thr = np.stack([np.asarray(adc.thresholds) + spread * j
+                    for j in range(n_banks)])
+    return BankedThresholds(jnp.asarray(thr, jnp.float32),
+                            bank_map_for(width, -(-width // n_banks)))
+
+
+@pytest.mark.parametrize("be", BACKENDS)
+@pytest.mark.parametrize("name", ["sigmoid", "tanh", "gelu"])
+def test_single_bank_bitwise_equals_legacy(be, name, rng):
+    """n_col_tiles=1 banked path == the legacy (P,) path, BITWISE — ADC
+    codes and STE grads — on ref AND pallas (the acceptance criterion)."""
+    ramp = build_ramp(name, 5)
+    adc = NLADC(ramp)
+    bk = BK.get_backend(be)
+    x = jnp.asarray(rng.normal(0, 2, (13, 24)).astype(np.float32))
+    b1 = _banked(adc, 1, 24)
+
+    y_leg = np.asarray(bk.nladc(x, adc))
+    y_bank = np.asarray(bk.nladc(x, adc, thresholds=b1))
+    np.testing.assert_array_equal(y_leg, y_bank)
+
+    def loss(fn):
+        return jax.grad(lambda v: jnp.sum(fn(v) ** 2))(x)
+
+    g_leg = np.asarray(loss(lambda v: bk.nladc(v, adc)))
+    g_bank = np.asarray(loss(lambda v: bk.nladc(v, adc, thresholds=b1)))
+    np.testing.assert_array_equal(g_leg, g_bank)
+
+    # the fused matmul path too
+    w = jnp.asarray(rng.normal(0, 0.2, (16, 24)).astype(np.float32))
+    m_leg = np.asarray(bk.matmul_nladc(x[:, :16], w, adc))
+    m_bank = np.asarray(bk.matmul_nladc(x[:, :16], w, adc, thresholds=b1))
+    np.testing.assert_array_equal(m_leg, m_bank)
+
+
+def test_banked_codes_bitwise_ref_vs_pallas(rng):
+    """Multi-bank deployed thresholds: both backends produce bitwise-equal
+    ADC codes (each column against its own col-tile's programmed ramp)."""
+    from repro.core.device import get_device
+
+    ramp = build_ramp("sigmoid", 5)
+    dev = get_device("aged-1day")
+    ramps = dev.deploy_ramp_bank(ramp, 4)
+    from repro.core.nladc import BankedThresholds, bank_map_for
+
+    bt = BankedThresholds(
+        jnp.asarray(np.stack([r.thresholds for r in ramps]), jnp.float32),
+        bank_map_for(30, 8))
+    adc = NLADC(ramp)
+    x = jnp.asarray(rng.normal(0, 2, (21, 30)).astype(np.float32))
+    y = {be: np.asarray(BK.get_backend(be).nladc(x, adc, thresholds=bt),
+                        np.float64)
+         for be in BACKENDS}
+    from repro.kernels.ref import decode_params
+
+    y0, lsb_l, _, _ = decode_params(ramp)
+    np.testing.assert_array_equal(
+        np.rint((y["ref"] - y0) / lsb_l).astype(np.int64),
+        np.rint((y["pallas"] - y0) / lsb_l).astype(np.int64))
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_banked_activation_parity_and_grads(mode, rng):
+    """AnalogConfig.bank_cols end-to-end through dense_nladc: outputs
+    quantization-exact across backends, STE grads equal — in every mode
+    (train draws per-bank ramp noise from the shared key)."""
+    x = jnp.asarray(rng.normal(0, 0.4, (9, 40)).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 0.2, (40, 24)).astype(np.float32))
+    outs, grads, lsb = {}, {}, None
+    for be in BACKENDS:
+        act = AnalogActivation(
+            "swish", _cfg(mode, be, device="aged-1day", bank_cols=8))
+        assert act.bank_for(24).n_banks == 3
+        lsb = _lsb(act)
+        outs[be] = dense_nladc({"w": w}, x, act, key=_key(mode))
+
+        def loss(xx, ww):
+            return jnp.sum(dense_nladc({"w": ww}, xx, act,
+                                       key=_key(mode)) ** 2)
+
+        grads[be] = jax.grad(loss, argnums=(0, 1))(x, w)
+    assert float(jnp.max(jnp.abs(outs["ref"] - outs["pallas"]))) < lsb / 2
+    for a, b in zip(grads["ref"], grads["pallas"]):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_banked_lstm_parity(rng):
+    """Banked gate/cell NL-ADCs through the fused LSTM tail, both backends."""
+    from repro.nn import lstm as NN
+
+    ys, lsb = {}, None
+    for be in BACKENDS:
+        spec = NN.LSTMSpec(
+            n_in=10, n_hidden=12,
+            analog=AnalogConfig(enabled=True, adc_bits=5, input_bits=5,
+                                mode="infer", backend=be,
+                                device="aged-1day", bank_cols=4))
+        acts = NN.make_gate_acts(spec.analog, width=12)
+        assert acts[0].bank_for(12).n_banks == 3
+        lsb = _lsb(acts[0])
+        p = NN.lstm_init(jax.random.PRNGKey(1), spec)
+        xs = 0.5 * jax.random.normal(jax.random.PRNGKey(2), (4, 5, 10))
+        ys[be], _ = NN.lstm_scan(p, xs, spec, acts, key=_key("infer"))
+    assert float(jnp.max(jnp.abs(ys["ref"] - ys["pallas"]))) < lsb / 2
+
+
+def test_from_spec_carries_bank_cols():
+    from repro.configs.base import AnalogSpec
+
+    cfg = AnalogConfig.from_spec(AnalogSpec(enabled=True, bank_cols=128))
+    assert cfg.bank_cols == 128
+    cfg2 = AnalogConfig.from_spec(AnalogSpec(enabled=True), bank_cols=64)
+    assert cfg2.bank_cols == 64
+
+
 def test_env_override_selects_backend(monkeypatch):
     from repro.core.backend import PallasBackend, get_backend, resolve_backend
 

@@ -256,6 +256,457 @@ def test_recal_recovers_kws_accuracy():
 
 
 # ---------------------------------------------------------------------------
+# Threshold banks: (n_col_tiles, P) deployment + per-bank lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_bank_deployment_and_single_tile_collapse():
+    """bank_cols deploys one programmed ramp per col-tile; a width inside
+    one tile keeps the legacy (P,) layout (bitwise the unbanked chip)."""
+    dev = get_device("aged-1day")
+    cfg = AnalogConfig(enabled=True, adc_bits=5, mode="infer", device=dev,
+                       bank_cols=8)
+    act = AnalogActivation("tanh", cfg)
+    # single tile -> no bank, thresholds ARE the legacy deployment
+    assert act.bank_for(8) is None
+    legacy = AnalogActivation(
+        "tanh", AnalogConfig(enabled=True, adc_bits=5, mode="infer",
+                             device=dev))
+    np.testing.assert_array_equal(act.ramp.thresholds,
+                                  legacy.ramp.thresholds)
+    # multi-tile -> per-bank chips, distinct and deterministic
+    bank = act.bank_for(32)
+    assert bank.n_banks == 4
+    again = AnalogActivation("tanh", cfg).bank_for(32)
+    np.testing.assert_array_equal(bank.thresholds_f64, again.thresholds_f64)
+    for a in range(4):
+        for b in range(a + 1, 4):
+            assert np.max(np.abs(bank.thresholds_f64[a]
+                                 - bank.thresholds_f64[b])) > 0
+    # the bank map is the TilePlan column grouping
+    np.testing.assert_array_equal(bank.bank_map.idx,
+                                  np.arange(32) // 8)
+
+
+def _banked_acts(device, bank_cols=8, width=32):
+    cfg = AnalogConfig(enabled=True, adc_bits=5, mode="infer", device=device,
+                       bank_cols=bank_cols)
+    acts = {}
+    for n in ("sigmoid", "tanh"):
+        acts[n] = AnalogActivation(n, cfg)
+        acts[n].bank_for(width)
+    return acts
+
+
+def test_scheduler_recals_only_out_of_spec_bank():
+    """The acceptance case: force drift on ONE bank — the recal event
+    reprograms only that ramp column, every other bank stays untouched."""
+    dev = get_device("paper-infer")                    # fresh, in-spec chip
+    acts = _banked_acts(dev)
+    sched = RecalScheduler(dev, acts,
+                           RecalPolicy(age_per_step_s=0.0, check_every=1,
+                                       inl_threshold_lsb=0.4))
+    assert len(sched.ramps) == 2 + 2 * 4               # legacy + banks
+    assert not sched.tick()                            # everything in spec
+    assert sched.n_recals == 0
+
+    # knock one bank's programmed devices out of spec (a local drift /
+    # disturb event on that physical column)
+    victim = sched.bank_key("tanh", 32, 2)
+    state = sched.ramps[victim]
+    shifts = {k: s.cal_shift for k, s in sched.ramps.items()}
+    state.g0_us = np.clip(state.g0_us * 1.25, 0.0, 150.0)
+    assert state.inl_at(dev, sched.age_s) > 0.4
+
+    assert sched.tick()                                # redeploy + recal
+    ev = sched.events[-1]
+    assert ev["recalibrated"] and ev["recal_ramps"] == [victim]
+    assert sched.n_recals == 1
+    # only the victim's calibration moved
+    for k, s in sched.ramps.items():
+        if k == victim:
+            assert s.cal_shift != shifts[k]
+        else:
+            assert s.cal_shift == shifts[k]
+    # and the victim's recovered thresholds are live in the bank
+    bank = acts["tanh"].bank_for(32)
+    np.testing.assert_array_equal(
+        bank.thresholds_f64[2],
+        state.ramp_at(dev, sched.age_s).thresholds)
+
+
+def test_scheduler_adopts_lazily_realized_banks():
+    """A bank realized after scheduler construction (first trace) gets its
+    RampStates on the next probe — keyed draws, so adoption order is
+    irrelevant."""
+    dev = get_device("paper-infer")
+    cfg = AnalogConfig(enabled=True, adc_bits=5, mode="infer", device=dev,
+                       bank_cols=8)
+    act = AnalogActivation("sigmoid", cfg)
+    sched = RecalScheduler(dev, {"sigmoid": act},
+                           RecalPolicy(check_every=1,
+                                       inl_threshold_lsb=10.0))
+    assert len(sched.ramps) == 1
+    act.bank_for(24)                                   # lazy realization
+    sched.tick()
+    assert len(sched.ramps) == 1 + 3
+    # adopted states drive the bank from now on (scheduler's chip)
+    bank = act.bank_for(24)
+    for j in range(3):
+        st_j = sched.ramps[sched.bank_key("sigmoid", 24, j)]
+        np.testing.assert_array_equal(
+            bank.thresholds_f64[j],
+            st_j.ramp_at(dev, sched.age_s).thresholds)
+
+
+def test_weight_refresh_generation_salts_tile_draws():
+    """generation != 0 re-draws every tile's write noise (a re-program);
+    generation 0 is bitwise the legacy stream."""
+    dev = DeviceModel(name="t", write=WriteNoise(), seed=9)
+    plan = CB.plan_tiles(64, 48, tile_rows=32, tile_cols=24)
+    w = np.random.default_rng(0).normal(0, 0.5, (64, 48))
+    g0 = dev.age_weights_tiled(w, "k", plan)
+    np.testing.assert_array_equal(
+        g0, dev.age_weights_tiled(w, "k", plan, generation=0))
+    g1 = dev.age_weights_tiled(w, "k", plan, generation=1)
+    assert np.max(np.abs(g1 - g0)) > 0
+    np.testing.assert_array_equal(
+        g1, dev.age_weights_tiled(w, "k", plan, generation=1))
+
+
+def test_scheduler_weight_refresh_on_recal_stall():
+    """When per-bank recal cannot bring INL back under threshold for
+    ``weight_refresh_after_stalls`` consecutive events, the scheduler
+    requests a weight-crossbar re-program."""
+    dev = get_device("aged-1day")
+    acts = _banked_acts(dev)
+    # threshold far below what a V_init shift can reach on an aged chip
+    pol = RecalPolicy(age_per_step_s=1e4, check_every=1,
+                      inl_threshold_lsb=0.05, weight_refresh_after_stalls=2)
+    sched = RecalScheduler(dev, acts, pol)
+    assert not sched.weight_refresh_pending
+    sched.tick()                                       # recal 1: stall 1
+    assert sched.stall_count == 1 and not sched.weight_refresh_pending
+    sched.tick()                                       # recal 2: stall 2
+    assert sched.weight_refresh_pending
+    assert sched.events[-1].get("weight_refresh") is True
+    assert sched.consume_weight_refresh()
+    assert not sched.consume_weight_refresh()          # one-shot
+
+
+def test_engine_weight_refresh_reprograms_crossbars():
+    from repro import configs
+    from repro.configs.base import AnalogSpec
+    from repro.nn.model import build
+    from repro.serve.engine import Request, ServingEngine
+
+    cfg = configs.get_smoke("qwen2.5-3b").replace(
+        dtype="float32",
+        analog=AnalogSpec(enabled=True, mode="infer", device="aged-1day"))
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    dev = get_device("aged-1day")
+    pol = RecalPolicy(age_per_step_s=1e5, check_every=2,
+                      inl_threshold_lsb=0.05, weight_refresh_after_stalls=1)
+    eng = ServingEngine(model, params, max_batch=1, max_len=32, device=dev,
+                        recal=pol)
+    eng.submit(Request(uid=0, prompt=np.asarray([1, 2, 3], np.int32),
+                       max_new_tokens=8))
+    eng.run_to_completion()
+    assert eng._weight_gen >= 1                        # crossbars rewritten
+    assert eng._weight_prog_age_s > 0
+    assert any(e.get("weight_refresh") for e in eng.scheduler.events)
+    # the refresh is part of the checkpointed deployment state
+    import tempfile
+
+    root = tempfile.mkdtemp()
+    eng.save(root, eng.scheduler.step_count)
+    eng2 = ServingEngine.restore(model, root, params_like=params)
+    assert eng2._weight_gen == eng._weight_gen
+    assert eng2._weight_prog_age_s == eng._weight_prog_age_s
+
+
+def test_drain_before_rejit_waits_for_wave():
+    """Scheduler-aware continuous batching: with drain on, the chip
+    re-program (and re-jit) lands only when every decode slot is free."""
+    from repro import configs
+    from repro.configs.base import AnalogSpec
+    from repro.nn.model import build
+    from repro.serve.engine import Request, ServingEngine
+
+    cfg = configs.get_smoke("qwen2.5-3b").replace(
+        dtype="float32",
+        analog=AnalogSpec(enabled=True, mode="infer", device="aged-1day"))
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    dev = get_device("aged-1day")
+    pol = RecalPolicy(age_per_step_s=3600.0, check_every=2,
+                      inl_threshold_lsb=0.4)
+
+    def run(drain):
+        eng = ServingEngine(model, params, max_batch=2, max_len=48,
+                            device=dev, recal=pol,
+                            drain_before_rejit=drain)
+        req = Request(uid=0, prompt=np.arange(1, 6, dtype=np.int32),
+                      max_new_tokens=9)
+        eng.submit(req)
+        states = []
+        orig = eng._on_chip_reprogram
+
+        def spy():
+            states.append(all(eng.slot_free))
+            orig()
+
+        eng._on_chip_reprogram = spy
+        eng.run_to_completion()
+        return req, states
+
+    req, states = run(drain=True)
+    assert len(req.generated) == 9                     # traffic unharmed
+    assert states and all(states)                      # only at drain points
+    _, states_hot = run(drain=False)
+    assert not all(states_hot)                         # default: mid-wave
+
+
+def test_drain_window_checkpoint_resumes_bitwise(tmp_path):
+    """A save that lands INSIDE a drain window (re-jit deferred, host-side
+    thresholds already moved ahead of the compiled traces) still restores
+    to the SERVED chip: the resumed run finishes the wave on the old
+    thresholds and re-programs at the drain point, token-for-token equal
+    to the uninterrupted run."""
+    from repro.serve.engine import Request, ServingEngine
+
+    model, params, _ = _smoke_engine(tmp_path)
+    dev = get_device("aged-1day")
+    pol = RecalPolicy(age_per_step_s=3600.0, check_every=2,
+                      inl_threshold_lsb=0.4)
+
+    def fresh():
+        eng = ServingEngine(model, params, max_batch=2, max_len=48,
+                            device=dev, noise_seed=7, recal=pol,
+                            drain_before_rejit=True)
+        req = Request(uid=0, prompt=np.arange(1, 6, dtype=np.int32),
+                      max_new_tokens=9)
+        eng.submit(req)
+        return eng, req
+
+    eng, req = fresh()
+    for _ in range(12):
+        eng.step()
+    full = list(req.generated)
+
+    eng_a, req_a = fresh()
+    steps_a = 0
+    while not eng_a._rejit_pending:                    # land mid-drain
+        eng_a.step()
+        steps_a += 1
+        assert steps_a < 12
+    eng_a.save(str(tmp_path), steps_a)
+    eng_b = ServingEngine.restore(model, str(tmp_path), params_like=params,
+                                  drain_before_rejit=True)
+    assert eng_b._rejit_pending                        # window survives
+    req_b = eng_b.slot_req[0]
+    assert req_b.generated == full[:len(req_b.generated)]
+    for _ in range(12 - steps_a):
+        eng_b.step()
+    assert req_b.generated == full
+
+
+def test_restore_rejects_bank_cols_mismatch_both_ways(tmp_path):
+    """Resuming with the wrong --bank-cols fails with a bank_cols hint in
+    BOTH directions, not a tree-mismatch KeyError deep in repro.ckpt."""
+    from repro.serve.engine import ServingEngine
+
+    # banked deployment saved...
+    model_b, params_b, fresh_b = _smoke_engine(tmp_path, bank_cols=16)
+    eng, _ = fresh_b()
+    eng.step()
+    eng.save(str(tmp_path / "banked"), 1)
+    # ...restored into an unbanked model config
+    model_u, params_u, fresh_u = _smoke_engine(tmp_path)
+    with pytest.raises(ValueError, match="does not bank that width"):
+        ServingEngine.restore(model_u, str(tmp_path / "banked"),
+                              params_like=params_u)
+    # unbanked deployment saved, restored into a banked model config
+    eng_u, _ = fresh_u()
+    eng_u.step()
+    eng_u.save(str(tmp_path / "flat"), 1)
+    with pytest.raises(ValueError, match="checkpoint has none there"):
+        ServingEngine.restore(model_b, str(tmp_path / "flat"),
+                              params_like=params_b)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint schema: banks, v1 migration, unknown-version rejection
+# ---------------------------------------------------------------------------
+
+
+def _smoke_engine(tmp_path, bank_cols=0, **spec_kw):
+    from repro import configs
+    from repro.configs.base import AnalogSpec
+    from repro.nn.model import build
+    from repro.serve.engine import Request, ServingEngine
+
+    cfg = configs.get_smoke("qwen2.5-3b").replace(
+        dtype="float32",
+        analog=AnalogSpec(enabled=True, mode="infer", device="aged-1day",
+                          bank_cols=bank_cols, **spec_kw))
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    dev = get_device("aged-1day")
+    pol = RecalPolicy(age_per_step_s=3600.0, check_every=3,
+                      inl_threshold_lsb=0.4)
+
+    def fresh():
+        eng = ServingEngine(model, params, max_batch=2, max_len=48,
+                            device=dev, noise_seed=7, recal=pol)
+        req = Request(uid=0, prompt=np.arange(1, 6, dtype=np.int32),
+                      max_new_tokens=8)
+        eng.submit(req)
+        return eng, req
+
+    return model, params, fresh
+
+
+def test_engine_banked_checkpoint_roundtrip(tmp_path):
+    """A banked deployment (d_ff spans several col-tiles) checkpoints and
+    resumes bit-identically — schema v2 carries the (n_col_tiles, P)
+    banks."""
+    from repro.serve.engine import ServingEngine
+
+    model, params, fresh = _smoke_engine(tmp_path, bank_cols=16)
+    assert model.act.bank_for(model.cfg.d_ff).n_banks > 1
+    eng, req = fresh()
+    for _ in range(8):
+        eng.step()
+    full = list(req.generated)
+
+    eng_a, req_a = fresh()
+    for _ in range(4):
+        eng_a.step()
+    eng_a.save(str(tmp_path), 4)
+    eng_b = ServingEngine.restore(model, str(tmp_path), params_like=params)
+    req_b = eng_b.slot_req[0]
+    assert req_b.generated == full[:4]
+    # the restored banks are bitwise the running chip
+    for name, act in eng_a._acts.items():
+        for width, bank in act.banks().items():
+            np.testing.assert_array_equal(
+                bank.thresholds_f64,
+                eng_b._acts[name].bank_for(width).thresholds_f64)
+    for _ in range(4):
+        eng_b.step()
+    assert req_b.generated == full
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_single_tile_bank_cols_tokens_bitwise_legacy(backend, tmp_path):
+    """The acceptance criterion: with every activation width inside one
+    col-tile (n_col_tiles=1), a banked deployment serves bitwise-identical
+    tokens to bank_cols=0, on both backends."""
+    from repro import configs
+    from repro.configs.base import AnalogSpec
+    from repro.nn.model import build
+    from repro.serve.engine import Request, ServingEngine
+
+    tokens = {}
+    for bc in (0, 4096):                     # 4096 > every smoke width
+        cfg = configs.get_smoke("qwen2.5-3b").replace(
+            dtype="float32",
+            analog=AnalogSpec(enabled=True, mode="infer",
+                              device="aged-1day", backend=backend,
+                              bank_cols=bc))
+        model = build(cfg)
+        assert not any(a.banks() for a in
+                       __import__("repro.serve.lifecycle",
+                                  fromlist=["analog_activations"])
+                       .analog_activations(model).values())
+        params = model.init(jax.random.PRNGKey(0))
+        eng = ServingEngine(model, params, max_batch=1, max_len=32,
+                            device=get_device("aged-1day"), noise_seed=7)
+        req = Request(uid=0, prompt=np.asarray([1, 2, 3], np.int32),
+                      max_new_tokens=6)
+        eng.submit(req)
+        eng.run_to_completion()
+        tokens[bc] = list(req.generated)
+    assert tokens[0] == tokens[4096]
+
+
+def _rewrite_manifest_meta(root, mutate):
+    import os
+
+    from repro.ckpt.checkpoint import list_checkpoints
+
+    step = list_checkpoints(root)[-1]
+    path = os.path.join(root, f"step_{step:08d}", "manifest.json")
+    with open(path) as f:
+        manifest = json.load(f)
+    mutate(manifest["metadata"])
+    with open(path, "w") as f:
+        json.dump(manifest, f)
+
+
+def test_restore_migrates_schema1_checkpoint(tmp_path):
+    """A PR 4-era (schema-1) deployment checkpoint — no schema field, no
+    bank inventory, no lifecycle bookkeeping — restores through the
+    versioned migration and continues bit-identically."""
+    from repro.serve.engine import ServingEngine
+
+    model, params, fresh = _smoke_engine(tmp_path)
+    eng, req = fresh()
+    for _ in range(8):
+        eng.step()
+    full = list(req.generated)
+
+    eng_a, req_a = fresh()
+    for _ in range(4):
+        eng_a.step()
+    eng_a.save(str(tmp_path), 4)
+
+    def to_v1(meta):
+        for key in ("schema", "banks", "lifecycle"):
+            meta.pop(key, None)
+
+    _rewrite_manifest_meta(str(tmp_path), to_v1)
+    eng_b = ServingEngine.restore(model, str(tmp_path), params_like=params)
+    assert eng_b._weight_gen == 0
+    req_b = eng_b.slot_req[0]
+    for _ in range(4):
+        eng_b.step()
+    assert req_b.generated == full
+
+
+def test_restore_rejects_unknown_schema(tmp_path):
+    from repro.serve.engine import ServingEngine
+
+    model, params, fresh = _smoke_engine(tmp_path)
+    eng, _ = fresh()
+    eng.step()
+    eng.save(str(tmp_path), 1)
+    _rewrite_manifest_meta(str(tmp_path),
+                           lambda m: m.update(schema=99))
+    with pytest.raises(ValueError, match="schema 99.*upgrade repro"):
+        ServingEngine.restore(model, str(tmp_path), params_like=params)
+
+
+def test_restore_rejects_non_engine_checkpoint(tmp_path):
+    """A train-style checkpoint (no engine metadata) fails with a clear
+    message instead of a KeyError deep in repro.ckpt."""
+    from repro.ckpt.checkpoint import save_checkpoint
+    from repro.serve.engine import ServingEngine
+
+    from repro import configs
+    from repro.nn.model import build
+
+    cfg = configs.get_smoke("qwen2.5-3b").replace(dtype="float32")
+    model = build(cfg)
+    save_checkpoint(str(tmp_path), 0, {"params": np.zeros(3)},
+                    metadata={"whatever": 1})
+    with pytest.raises(ValueError, match="not a ServingEngine deployment"):
+        ServingEngine.restore(model, str(tmp_path))
+
+
+# ---------------------------------------------------------------------------
 # Engine checkpoint/restore (in-process; the cross-process bitwise test
 # is below)
 # ---------------------------------------------------------------------------

@@ -13,7 +13,8 @@ from repro.core import crossbar as CB
 from repro.core.device import (Calibration, DeviceModel, Drift, ReadNoise,
                                Redundancy, StuckAt, TrainNoise, WriteNoise,
                                device_from_dict, device_names, get_device)
-from repro.core.nladc import build_ramp, nladc_reference, pwm_quantize
+from repro.core.nladc import (BankedThresholds, bank_map_for, build_ramp,
+                              nladc_reference, pwm_quantize)
 from repro.dist.compress import (dequantize_int8, ef_compress, ef_init,
                                  quantize_int8)
 from repro.kernels import ref
@@ -219,6 +220,88 @@ def test_tile_draws_permutation_independent(rows, cols, seed, pyrandom):
         out[rs, cs] = dev.age_weights(w[rs, cs],
                                       dev.tile_rng("leaf", 0, i, j))
     np.testing.assert_array_equal(out, whole)
+
+
+# ---------------------------------------------------------------------------
+# Threshold banks (the (n_col_tiles, P) layout invariants)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.sampled_from(["sigmoid", "tanh", "gelu", "swish"]),
+       st.integers(3, 6), st.integers(1, 40), st.integers(1, 24),
+       st.sampled_from(["ref", "pallas"]))
+def test_single_bank_banked_bitwise_legacy(name, bits, width, rows, be):
+    """A one-bank BankedThresholds is BITWISE the legacy (P,) path — ADC
+    codes AND STE grads — for arbitrary shapes, on ref and pallas."""
+    from repro.core import backend as BK
+    from repro.core.nladc import NLADC
+
+    ramp = build_ramp(name, bits)
+    adc = NLADC(ramp)
+    bk = BK.get_backend(be)
+    x = jnp.asarray(
+        np.random.default_rng(rows * 211 + width).normal(0, 2, (rows, width))
+        .astype(np.float32))
+    banked = BankedThresholds(adc.thresholds[None],
+                              bank_map_for(width, width))
+    y_leg, g_leg = jax.value_and_grad(
+        lambda v: jnp.sum(bk.nladc(v, adc) ** 2))(x)
+    y_b, g_b = jax.value_and_grad(
+        lambda v: jnp.sum(bk.nladc(v, adc, thresholds=banked) ** 2))(x)
+    np.testing.assert_array_equal(np.asarray(y_leg), np.asarray(y_b))
+    np.testing.assert_array_equal(np.asarray(g_leg), np.asarray(g_b))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 8), st.integers(0, 2**16),
+       st.randoms(use_true_random=False))
+def test_bank_draws_permutation_independent(n_banks, seed, pyrandom):
+    """Each bank's deployed ramp depends only on its col-tile index: it is
+    independent of how many banks exist and of realization order."""
+    dev = get_device("aged-1day").replace(seed=seed)
+    ramp = build_ramp("tanh", 5)
+    bank = dev.deploy_ramp_bank(ramp, n_banks)
+    order = list(range(n_banks))
+    pyrandom.shuffle(order)
+    for j in order:
+        # one-at-a-time realization, any order, any total count
+        solo = dev.deploy_ramp(ramp, instance=f"col{j}")
+        np.testing.assert_array_equal(solo.thresholds, bank[j].thresholds)
+        wider = dev.deploy_ramp_bank(ramp, n_banks + 3)[j]
+        np.testing.assert_array_equal(wider.thresholds, bank[j].thresholds)
+    # distinct banks are distinct chips (write noise present in the preset)
+    for a in range(n_banks):
+        for b in range(a + 1, n_banks):
+            assert np.max(np.abs(bank[a].thresholds
+                                 - bank[b].thresholds)) > 0
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 5), st.integers(6, 48), st.integers(1, 16))
+def test_banked_ref_matches_percolumn_oracle(n_banks, width, rows):
+    """The backend's banked quantize == the naive per-column oracle
+    (gather each column's bank ramp, quantize against it)."""
+    from repro.core import backend as BK
+    from repro.core.nladc import NLADC
+
+    ramp = build_ramp("sigmoid", 5)
+    adc = NLADC(ramp)
+    rng_l = np.random.default_rng(n_banks * 1000 + width)
+    thr = np.sort(np.stack([
+        np.asarray(ramp.thresholds) + rng_l.normal(0, 0.01, ramp.thresholds.shape)
+        for _ in range(n_banks)]), axis=-1)
+    bmap = bank_map_for(width, -(-width // n_banks))
+    banked = BankedThresholds(jnp.asarray(thr, jnp.float32), bmap)
+    x = rng_l.normal(0, 2, (rows, width)).astype(np.float32)
+    got = np.asarray(BK.get_backend("ref").nladc(jnp.asarray(x), adc,
+                                                 thresholds=banked))
+    thr32 = thr.astype(np.float32)
+    want = np.empty_like(x)
+    for j in range(width):
+        n = np.sum(x[:, j][:, None] > thr32[bmap.idx[j]][None, :], axis=-1)
+        want[:, j] = np.asarray(ramp.y_table, np.float32)[n]
+    np.testing.assert_array_equal(got, want)
 
 
 @settings(max_examples=10, deadline=None)
