@@ -1,0 +1,115 @@
+"""Fleet-orchestration CI gate: re-run the fleet sweep, diff the baseline.
+
+    PYTHONPATH=src python -m benchmarks.fleet_gate [--tol-steps N] \
+        [--tol-tokens F]
+
+Runs ``benchmarks.fleet_sweep`` on the quick grid and fails — exit code
+1 — when the orchestration regresses against the committed
+``BENCH_fleet.json``:
+
+* ``min_accepting_frac`` below the planner's floor for that cell is an
+  UNCONDITIONAL failure (the capacity invariant, no tolerance);
+* ``p95_admission_steps`` moving more than ``--tol-steps`` fleet steps,
+  or ``tokens_total``/``steps_total`` moving more than a ``--tol-tokens``
+  fraction, trips the gate (routing or drain-scheduling drift);
+* maintenance event counts are diffed exactly — an extra or missing drain
+  window means the planner changed behavior.
+
+Wall-clock ``tokens_per_s`` is recorded but never diffed.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+
+from benchmarks import fleet_sweep
+
+BASELINE = os.path.join(os.path.dirname(__file__), "BENCH_fleet.json")
+
+GATED_EVENTS = ("maintenance_requested", "drain_start", "reprogram_done",
+                "canary_warning")
+
+
+def _floor_of(key: str) -> float:
+    return float(key.split("_floor")[1])
+
+
+def _chips_of(key: str) -> int:
+    return int(key.split("_floor")[0][1:])
+
+
+def compare(results: dict, baseline: dict, tol_steps: float,
+            tol_tokens: float) -> list:
+    failures = []
+    want_cells, got_cells = baseline["cells"], results["cells"]
+    for key in sorted(set(want_cells) ^ set(got_cells)):
+        side = "baseline" if key in want_cells else "sweep"
+        failures.append(f"cell {key}: only present in the {side}; "
+                        "re-record BENCH_fleet.json")
+    for key in sorted(set(want_cells) & set(got_cells)):
+        want, got = want_cells[key], got_cells[key]
+        n, floor = _chips_of(key), _floor_of(key)
+        # the invariant itself, independent of the baseline
+        hard_floor = 1.0 - math.ceil(n * (1.0 - floor)) / n
+        if got["min_accepting_frac"] < hard_floor - 1e-9:
+            failures.append(
+                f"{key}: capacity {got['min_accepting_frac']:.2f} dropped "
+                f"below the planner floor {hard_floor:.2f} — the "
+                "MaintenancePlanner invariant is broken")
+        if abs(got["p95_admission_steps"]
+               - want["p95_admission_steps"]) > tol_steps:
+            failures.append(
+                f"{key}: p95 admission {got['p95_admission_steps']:.0f} "
+                f"steps vs baseline {want['p95_admission_steps']:.0f} "
+                f"(tol {tol_steps:.0f})")
+        for field in ("tokens_total", "steps_total"):
+            bound = tol_tokens * max(want[field], 1)
+            if abs(got[field] - want[field]) > bound:
+                failures.append(
+                    f"{key}: {field} {got[field]} vs baseline "
+                    f"{want[field]} (tol {tol_tokens:.0%})")
+        for ev in GATED_EVENTS:
+            w, g = want["events"].get(ev, 0), got["events"].get(ev, 0)
+            if w != g:
+                failures.append(
+                    f"{key}: {g} {ev!r} events vs baseline {w} — the "
+                    "maintenance schedule changed")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tol-steps", type=float, default=3.0,
+                    help="p95 admission-latency delta allowed (fleet steps)")
+    ap.add_argument("--tol-tokens", type=float, default=0.15,
+                    help="relative tokens/steps-total delta allowed")
+    args = ap.parse_args()
+
+    with open(BASELINE) as f:
+        baseline = json.load(f)
+    if not baseline.get("quick", True):
+        print("[fleet-gate] note: baseline was recorded with quick=False; "
+              "the gate compares a quick run against it")
+    results = fleet_sweep.run(quick=True)
+
+    failures = compare(results, baseline, args.tol_steps, args.tol_tokens)
+    if failures:
+        print(f"\n[fleet-gate] FAIL — {len(failures)} deltas over "
+              "tolerance vs benchmarks/BENCH_fleet.json:")
+        for fail in failures:
+            print("  " + fail)
+        print("If the shift is intentional, re-record the (quick) "
+              "baseline: rm benchmarks/BENCH_fleet.json && PYTHONPATH=src "
+              "python -m benchmarks.run --only fleet_sweep")
+        return 1
+    print("\n[fleet-gate] OK — fleet orchestration within tolerance of "
+          "BENCH_fleet.json")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,131 @@
+"""Fleet serving sweep: throughput + admission latency vs N chips × floor.
+
+The orchestration claim (``repro.serve.fleet``): under a recal storm —
+every chip's INL over threshold on roughly the same schedule — the
+maintenance planner serializes drain windows so fleet capacity never drops
+below the configured floor, and the router keeps admission latency bounded
+while chips rotate through re-programming.
+
+Each grid cell builds a fleet of ``n`` independently-seeded aged chips
+(one ``stressed`` canary) behind a round-robin router, then serves a
+deterministic open-loop request stream through an aggressive recal policy.
+Recorded per cell:
+
+* ``tokens_per_s``        wall-clock decode throughput (informational —
+                          the gate never diffs wall time);
+* ``p95_admission_steps`` p95 first-token latency in fleet steps
+                          (deterministic: routing, draws, and drain
+                          scheduling are all seeded);
+* ``min_accepting_frac``  the observed capacity low-water mark — the
+                          planner invariant says it never drops below the
+                          floor;
+* maintenance event counts (requests / drains / reprograms / canary
+  warnings) from the fleet event trace.
+
+Writes ``benchmarks/BENCH_fleet.json`` as the recorded baseline for
+``benchmarks.fleet_gate``.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+import time
+
+import numpy as np
+
+from repro import configs
+from repro.configs.base import AnalogSpec
+from repro.serve.engine import Request
+from repro.serve.fleet import FleetEngine, FleetPolicy
+from repro.serve.lifecycle import RecalPolicy
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "BENCH_fleet.json")
+
+GRID_QUICK = {"n_chips": (2, 4), "floors": (0.5, 0.75)}
+GRID_FULL = {"n_chips": (2, 4, 8), "floors": (0.5, 0.75, 0.9)}
+
+MAX_NEW = 2
+REQS_PER_CHIP = 4
+
+
+def _p95(xs):
+    if not xs:
+        return 0.0
+    return float(np.percentile(np.asarray(xs, np.float64), 95))
+
+
+def _cell(n_chips: int, floor: float) -> dict:
+    cfg = configs.get_smoke("qwen2.5-3b").replace(
+        dtype="float32",
+        analog=AnalogSpec(enabled=True, mode="infer", device="aged-1day"))
+    # every chip out of spec at its first probe: the storm
+    pol = RecalPolicy(age_per_step_s=5e4, check_every=2,
+                      inl_threshold_lsb=0.05)
+    fleet = FleetEngine.build(
+        cfg, n_chips,
+        policy=FleetPolicy(capacity_floor=floor, router="round-robin"),
+        recal=pol, max_batch=1, max_len=48, canary_presets=("stressed",))
+
+    rng = np.random.default_rng(0)
+    n_req = REQS_PER_CHIP * n_chips
+    uid = 0
+    tokens = 0
+    min_frac = 1.0
+    t0 = time.perf_counter()
+    while uid < n_req or any(c.engine.queue or not all(c.engine.slot_free)
+                             for c in fleet.chips.values()):
+        if uid < n_req:
+            fleet.submit(Request(
+                uid=uid,
+                prompt=rng.integers(0, cfg.vocab, 4).astype(np.int32),
+                max_new_tokens=MAX_NEW))
+            uid += 1
+        tokens += len(fleet.step())
+        min_frac = min(min_frac, fleet.capacity())
+        if fleet.step_count > 40 * n_req:       # runaway guard
+            break
+    wall = time.perf_counter() - t0
+
+    counts = {}
+    for ev in fleet.events:
+        counts[ev["type"]] = counts.get(ev["type"], 0) + 1
+    assert min_frac >= 1.0 - math.ceil(
+        n_chips * (1.0 - floor)) / n_chips - 1e-9, (min_frac, n_chips, floor)
+    return {
+        "tokens_total": tokens,
+        "steps_total": fleet.step_count,
+        "tokens_per_s": round(tokens / max(wall, 1e-9), 1),
+        "p95_admission_steps": _p95(fleet.admission_latency_steps()),
+        "min_accepting_frac": round(min_frac, 4),
+        "events": counts,
+    }
+
+
+def run(quick=True):
+    grid = GRID_QUICK if quick else GRID_FULL
+    cells = {}
+    for n in grid["n_chips"]:
+        for floor in grid["floors"]:
+            key = f"n{n}_floor{floor}"
+            print(f"=== fleet sweep: {n} chips, capacity floor {floor} ===")
+            cell = _cell(n, floor)
+            cells[key] = cell
+            print(f"  {cell['tokens_total']} tok in {cell['steps_total']} "
+                  f"steps ({cell['tokens_per_s']} tok/s wall)  "
+                  f"p95 admission {cell['p95_admission_steps']:.0f} steps  "
+                  f"min capacity {cell['min_accepting_frac']:.2f}  "
+                  f"events {cell['events']}")
+
+    results = {"quick": quick, "max_new": MAX_NEW,
+               "reqs_per_chip": REQS_PER_CHIP, "cells": cells}
+    if not quick or not os.path.exists(OUT_PATH):
+        with open(OUT_PATH, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"  baseline written to {OUT_PATH}")
+    return results
+
+
+if __name__ == "__main__":
+    run(quick=True)

@@ -28,6 +28,7 @@ MODULES = [
     ("device_sweep", "repro.core.device preset sweep (drift/redundancy)"),
     ("bank_sweep", "threshold-bank sweep (INL/accuracy vs col-tile count)"),
     ("recal_schedule", "serving-lifetime re-calibration schedule sweep"),
+    ("fleet_sweep", "fleet serving sweep (N chips x capacity floor)"),
     ("kernel_bench", "kernel microbench"),
     ("backend_parity", "ref-vs-pallas backend parity + throughput"),
     ("dist_scaling", "repro.dist device-count scaling sweep"),

@@ -117,8 +117,22 @@ def read_metadata(root: str, *, step: Optional[int] = None):
     if not steps:
         raise FileNotFoundError(f"no checkpoints under {root}")
     step = steps[-1] if step is None else step
-    with open(os.path.join(root, f"step_{step:08d}", "manifest.json")) as f:
-        return step, json.load(f)["metadata"]
+    path = os.path.join(root, f"step_{step:08d}", "manifest.json")
+    with open(path) as f:
+        try:
+            manifest = json.load(f)
+        except ValueError as e:
+            raise ValueError(
+                f"{path} is not a repro checkpoint manifest (malformed "
+                f"JSON: {e}); was this directory written by something "
+                "other than repro.ckpt?") from None
+    if not isinstance(manifest, dict) or "metadata" not in manifest:
+        raise ValueError(
+            f"{path} is not a repro checkpoint manifest (no 'metadata' "
+            "entry); train/deployment checkpoints are written by "
+            "repro.ckpt.save_checkpoint — a foreign or hand-edited "
+            "payload cannot be restored here")
+    return step, manifest["metadata"]
 
 
 def load_checkpoint(root: str, tree_like, *, step: Optional[int] = None,

@@ -49,7 +49,7 @@ from __future__ import annotations
 import dataclasses
 import os
 import zlib
-from typing import Any, Dict, Optional, Union
+from typing import Any, Callable, Dict, Optional, Union
 
 import numpy as np
 
@@ -311,7 +311,9 @@ class DeviceModel:
 
     def age_weights_tiled(self, w: np.ndarray, key: str,
                           plan: Optional[CB.TilePlan] = None,
-                          generation: int = 0) -> np.ndarray:
+                          generation: int = 0,
+                          col_overrides: Optional[Dict[int, tuple]] = None
+                          ) -> np.ndarray:
         """:meth:`age_weights`, drawn independently per physical crossbar.
 
         The matrix's last two dims are partitioned by ``plan`` (default: the
@@ -328,6 +330,13 @@ class DeviceModel:
         tile's rng, so the rewrite realizes fresh write noise — a new
         population of device errors, exactly like writing the cells again.
         Generation 0 is bitwise the pre-refresh stream.
+
+        ``col_overrides`` maps a col-tile index ``j`` to ``(generation,
+        t_eff_s)`` for a *partial* re-program: only the crossbars feeding
+        one NL-ADC bank were rewritten (the per-tile weight refresh), so
+        those col-tiles carry their own generation salt and their own drift
+        clock (``t_eff_s`` seconds since THEIR re-program) while the rest
+        of the matrix keeps the chip-wide ``generation`` / drift age.
         """
         w = np.asarray(w, dtype=np.float64)
         mats = w.reshape((-1,) + w.shape[-2:])
@@ -343,15 +352,25 @@ class DeviceModel:
         out = np.empty_like(mats)
         for mi in range(mats.shape[0]):
             for (ti, tj), rs, cs in p.blocks():
-                out[mi, rs, cs] = self.age_weights(
-                    mats[mi, rs, cs],
-                    self.tile_rng(key, mi, ti, tj, *gen_salt))
+                ov = col_overrides.get(tj) if col_overrides else None
+                if ov is None:
+                    out[mi, rs, cs] = self.age_weights(
+                        mats[mi, rs, cs],
+                        self.tile_rng(key, mi, ti, tj, *gen_salt))
+                else:
+                    gen_j, t_j = int(ov[0]), float(ov[1])
+                    dev_j = self.with_drift(t_j)
+                    salt_j = (gen_j,) if gen_j else ()
+                    out[mi, rs, cs] = dev_j.age_weights(
+                        mats[mi, rs, cs],
+                        dev_j.tile_rng(key, mi, ti, tj, *salt_j))
         return out.reshape(w.shape)
 
     def age_params(self, params, rng: Optional[np.random.Generator] = None,
                    min_ndim: int = 2,
                    plan: Optional[CB.TilePlan] = None,
-                   generation: int = 0):
+                   generation: int = 0,
+                   leaf_overrides: Optional[Callable] = None):
         """Apply build-stage aging to every matrix leaf of a param pytree.
 
         Leaves with fewer than ``min_ndim`` dims (biases, norm scales,
@@ -370,6 +389,12 @@ class DeviceModel:
         keeps the legacy sequential stream (one generator threaded through
         the whole tree — the Supp. S13 benchmark call sequences, pinned
         bit-for-bit by tests/test_device.py).
+
+        ``leaf_overrides`` (tile path only): an optional callable
+        ``(keystr_path, leaf_shape) -> Optional[col_overrides]`` feeding
+        :meth:`age_weights_tiled`'s per-col-tile re-program overrides — the
+        per-tile weight refresh, where only the crossbar col-tiles behind a
+        stalled NL-ADC bank get a fresh write.
         """
         if not self.has_build_stage:
             return params
@@ -383,9 +408,12 @@ class DeviceModel:
                 if getattr(w, "ndim", 0) < min_ndim:
                     out.append(w)
                     continue
+                pstr = jax.tree_util.keystr(path)
+                cov = leaf_overrides(pstr, np.asarray(w).shape) \
+                    if leaf_overrides is not None else None
                 aged = self.age_weights_tiled(
-                    np.asarray(w, np.float64), jax.tree_util.keystr(path),
-                    plan, generation=generation)
+                    np.asarray(w, np.float64), pstr,
+                    plan, generation=generation, col_overrides=cov)
                 out.append(jnp.asarray(aged.astype(np.asarray(w).dtype)))
             return jax.tree_util.tree_unflatten(treedef, out)
 

@@ -70,3 +70,27 @@ def reshard(tree, mesh: Mesh, *, replicate_all: bool = False):
     specs = SH.param_specs(tree, mesh, replicate_all=replicate_all)
     shardings = SH.shardings_for(specs, mesh)
     return jax.tree.map(jax.device_put, tree, shardings)
+
+
+def plan_request_rebalance(displaced, loads: Dict[str, int]
+                           ) -> Dict[str, list]:
+    """Assign displaced serving requests to surviving chips, least-loaded
+    first.
+
+    The serving-side elastic move: a chip pulled for re-program
+    (:meth:`repro.serve.engine.ServingEngine.take_queue`) hands its queued
+    requests to siblings.  ``loads`` maps chip id -> current load (active +
+    queued); each request goes to the momentarily least-loaded chip, ties
+    broken by chip id — fully deterministic, so a fleet checkpoint replays
+    the identical assignment.  Returns chip id -> list of requests (every
+    id present, possibly empty).
+    """
+    if not loads:
+        raise ValueError("no surviving chips to rebalance onto")
+    cur = dict(loads)
+    out: Dict[str, list] = {cid: [] for cid in loads}
+    for req in displaced:
+        cid = min(sorted(cur), key=lambda c: cur[c])
+        out[cid].append(req)
+        cur[cid] += 1
+    return out

@@ -69,6 +69,23 @@ def main():
     ap.add_argument("--resume", action="store_true",
                     help="restore the deployment from --ckpt-dir instead "
                          "of programming a fresh chip")
+    ap.add_argument("--fleet", type=int, default=0,
+                    help="serve a fleet of N chips (each its own device "
+                         "draws, drift clock, and recal schedule) behind "
+                         "the fleet router/planner; 0 = single chip")
+    ap.add_argument("--capacity-floor", type=float, default=0.75,
+                    help="fleet: fraction of chips that must keep "
+                         "accepting traffic; bounds concurrent drains")
+    ap.add_argument("--router", default="least-loaded",
+                    help="fleet admission policy: round-robin | "
+                         "least-loaded | health-weighted")
+    ap.add_argument("--canary", action="append", default=[],
+                    help="fleet: pin one chip to this device preset as a "
+                         "canary (repeatable; canaries age ahead and "
+                         "tighten sibling recal cadence on first recal)")
+    ap.add_argument("--force-drain-step", type=int, default=0,
+                    help="fleet: force a maintenance request on the first "
+                         "chip at this step (CI smoke for the drain path)")
     args = ap.parse_args()
 
     cfg = configs.get_smoke(args.arch) if args.smoke \
@@ -84,6 +101,9 @@ def main():
         spec_kw["bank_cols"] = args.bank_cols
     if spec_kw:
         cfg = cfg.replace(analog=dataclasses.replace(cfg.analog, **spec_kw))
+    if args.fleet:
+        _serve_fleet(ap, args, cfg)
+        return
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(0))
     # Build-stage aging only composes with infer mode: exact mode would pair
@@ -169,6 +189,84 @@ def main():
             step = (prev[-1] if prev else 0) + n_tokens
         out = engine.save(args.ckpt_dir, step=step)
         print(f"[serve] deployment checkpointed to {out}")
+
+
+def _serve_fleet(ap, args, cfg):
+    """The --fleet path: N chips, router, planner, canaries, manifest."""
+    from repro.serve.fleet import ROUTERS, FleetEngine, FleetPolicy
+
+    if args.router not in ROUTERS:
+        ap.error(f"--router must be one of {ROUTERS}")
+    recal = None
+    if args.age_per_step_s > 0:
+        if cfg.analog.mode != "infer":
+            ap.error("--age-per-step-s requires --analog-mode infer (the "
+                     "lifecycle acts on deployed device models)")
+        recal = RecalPolicy(age_per_step_s=args.age_per_step_s,
+                            check_every=args.recal_every,
+                            inl_threshold_lsb=args.recal_inl_lsb)
+    if args.canary and cfg.analog.mode != "infer":
+        ap.error("--canary requires --analog-mode infer (canaries are "
+                 "pinned to deployed device presets)")
+    policy = FleetPolicy(capacity_floor=args.capacity_floor,
+                         router=args.router)
+    if args.resume:
+        if not args.ckpt_dir:
+            ap.error("--resume requires --ckpt-dir")
+        fleet = FleetEngine.restore(cfg, args.ckpt_dir)
+        print(f"[serve] resumed fleet of {len(fleet.chips)} chips from "
+              f"{args.ckpt_dir} (step {fleet.step_count}, "
+              f"{len(fleet.events)} events)")
+    else:
+        fleet = FleetEngine.build(
+            cfg, args.fleet, policy=policy, recal=recal,
+            max_batch=args.max_batch, max_len=args.max_len,
+            canary_presets=tuple(args.canary))
+        roles = ", ".join(
+            f"{cid}{' (canary: ' + c.device.name + ')' if c.spec.canary else ''}"
+            for cid, c in fleet.chips.items())
+        print(f"[serve] fleet up: {roles}")
+        print(f"[serve] router={policy.router} "
+              f"capacity_floor={policy.capacity_floor} "
+              f"(max {fleet.planner.max_drain} draining)")
+
+    rng = np.random.default_rng(0)
+    for uid in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab,
+                              size=rng.integers(4, 12)).astype(np.int32)
+        cid = fleet.submit(Request(uid=uid, prompt=prompt,
+                                   max_new_tokens=args.max_new))
+        print(f"[serve] request {uid} -> {cid}")
+
+    t0 = time.time()
+    n_tokens = 0
+    min_accepting = len(fleet.chips)
+    while any(c.engine.queue or not all(c.engine.slot_free)
+              for c in fleet.chips.values()):
+        if args.force_drain_step \
+                and fleet.step_count + 1 == args.force_drain_step:
+            first = sorted(fleet.chips)[0]
+            print(f"[serve] forcing maintenance on {first}")
+            fleet.force_maintenance(first)
+        n_tokens += len(fleet.step())
+        min_accepting = min(min_accepting, len(fleet.accepting()))
+    dt = time.time() - t0
+    lat = fleet.admission_latency_steps()
+    p95 = float(np.percentile(lat, 95)) if lat else 0.0
+    print(f"[serve] fleet: {args.requests} requests, {n_tokens} tokens "
+          f"in {dt:.2f}s ({n_tokens / max(dt, 1e-9):.1f} tok/s), "
+          f"p95 first-token {p95:.1f} steps, "
+          f"min accepting {min_accepting}/{len(fleet.chips)}")
+    for ev in fleet.events:
+        extra = {k: v for k, v in ev.items() if k not in ("step", "type")}
+        print(f"  step {ev['step']:>5}  {ev['type']}"
+              + (f"  {extra}" if extra else ""))
+    for cid, h in fleet.health().items():
+        print(f"  {cid}: age {h['age_s']:.0f}s  INL {h['inl_lsb']:.3f} LSB  "
+              f"weight_gen {h['weight_gen']}")
+    if args.ckpt_dir:
+        out = fleet.save(args.ckpt_dir, fleet.step_count)
+        print(f"[serve] fleet checkpointed to {out}")
 
 
 if __name__ == "__main__":

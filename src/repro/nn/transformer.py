@@ -142,6 +142,26 @@ class LM:
             blk["mlp"] = mlp_init(ks[1], d, cfg.d_ff, self.mlp_kind)
         return blk
 
+    def act_param_leaves(self) -> Dict[str, Tuple[str, ...]]:
+        """NL-ADC activation -> keystr substrings of the param leaves whose
+        crossbar columns feed it.
+
+        Only the hidden activation (``act``) maps cleanly: it digitizes the
+        MLP gate projection's output (width d_ff), so the gate/up matrices
+        of every family's MLP — and the MoE expert / shared-expert
+        equivalents — are the crossbars behind its threshold banks.  The
+        auxiliary sigmoid/softplus/silu activations ride inside recurrence
+        cells at assorted widths and are deliberately unmapped: a weight
+        refresh they trigger falls back to the chip-wide re-program.
+        Consumed by ``ServingEngine`` for per-tile weight refresh.
+        """
+        return {"act": ("['mlp']['wi_gate']['w']", "['mlp']['wi']['w']",
+                        "['moe']['w_gate']", "['moe']['w_up']",
+                        "['mlp']['wi_up']['w']",
+                        "['moe']['shared']['wi_gate']['w']",
+                        "['moe']['shared']['wi_up']['w']",
+                        "['moe']['shared']['wi']['w']")}
+
     def layer_kinds(self) -> Tuple[str, ...]:
         cfg = self.cfg
         if cfg.family == "ssm":

@@ -1,7 +1,14 @@
 """Batched serving engine: prefill/decode split, request scheduling,
-device lifecycle (aging + re-calibration + checkpointable deployments)."""
+device lifecycle (aging + re-calibration + checkpointable deployments),
+and fleet orchestration (router + maintenance planner + canaries)."""
 
 from repro.serve.engine import Request, ServingEngine  # noqa: F401
+from repro.serve.fleet import (  # noqa: F401
+    ChipSpec,
+    FleetEngine,
+    FleetPolicy,
+    MaintenancePlanner,
+)
 from repro.serve.lifecycle import (  # noqa: F401
     RecalPolicy,
     RecalScheduler,

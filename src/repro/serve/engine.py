@@ -83,13 +83,23 @@ class ServingEngine:
     chip — physically, the re-program is deferred), and only then
     re-programs and re-jits.  Off (default), the re-program applies
     immediately, recompiling mid-wave.
+
+    ``external_maintenance``: fleet mode.  A due chip re-program does NOT
+    apply on its own schedule — the engine only raises
+    :attr:`maintenance_pending` and keeps serving (and admitting) on the
+    already-compiled traces until an external planner
+    (:class:`repro.serve.fleet.FleetEngine`) calls :meth:`begin_drain`,
+    which stops admission and lets the standard drain point apply the
+    re-program.  This is how a fleet staggers maintenance windows so
+    capacity never drops below its floor.
     """
 
     SCHEMA = 2          # checkpoint schema this build writes/understands
 
     def __init__(self, model, params, *, max_batch: int, max_len: int,
                  device=None, noise_seed: int = 0, recal=None,
-                 drain_before_rejit: bool = False):
+                 drain_before_rejit: bool = False,
+                 external_maintenance: bool = False):
         from repro.serve.lifecycle import RecalScheduler, analog_activations
 
         self.device = device
@@ -97,11 +107,19 @@ class ServingEngine:
         self._acts = analog_activations(model)
         self.scheduler = None
         self.drain_before_rejit = drain_before_rejit
+        self.external_maintenance = external_maintenance
         self._rejit_pending = False
+        self._maint_pending = False
         # Weight-crossbar re-program bookkeeping (probe-driven refresh):
         # generation salts the tile draws, prog-age anchors the drift clock.
+        # A refresh scoped to the stalled banks' col-tiles (the per-tile
+        # path) lands in _tile_gens instead of bumping the chip-wide
+        # generation; _refresh_ord is the shared ordinal keeping every
+        # re-program's rng salt unique across both paths.
         self._weight_gen = 0
         self._weight_prog_age_s = 0.0
+        self._refresh_ord = 0
+        self._tile_gens: Dict[str, dict] = {}
         if recal is not None:
             if device is None:
                 raise ValueError("recal policy requires a device model")
@@ -213,6 +231,50 @@ class ServingEngine:
         req.generated = []
         self.queue.append(req)
 
+    # -- fleet-facing maintenance surface --------------------------------
+
+    @property
+    def maintenance_pending(self) -> bool:
+        """True while a chip re-program is due or draining toward one."""
+        return self._maint_pending or self._rejit_pending
+
+    @property
+    def draining(self) -> bool:
+        """True once drain started: admission is closed until the re-jit."""
+        return self._rejit_pending
+
+    def begin_drain(self) -> None:
+        """Grant the pending maintenance window: stop admitting, let the
+        in-flight wave finish on the old chip, then re-program + re-jit at
+        the standard drain point (top of :meth:`step`).  Queued requests
+        should be handed to siblings via :meth:`take_queue` first."""
+        self._rejit_pending = True
+
+    def take_queue(self) -> List[Request]:
+        """Pop every queued (not yet prefilled) request for sibling
+        handoff — in-flight slots always finish on this chip."""
+        out, self.queue = self.queue, []
+        return out
+
+    def health(self) -> dict:
+        """Cheap health snapshot for routing/planning (no fresh probes —
+        INL comes from the scheduler's last recorded event)."""
+        ev = {}
+        if self.scheduler is not None and self.scheduler.events:
+            ev = self.scheduler.events[-1]
+        return {
+            "active": int(sum(not f for f in self.slot_free)),
+            "queued": len(self.queue),
+            "free_slots": int(sum(self.slot_free)),
+            "age_s": 0.0 if self.scheduler is None
+            else float(self.scheduler.age_s),
+            "inl_lsb": float(ev.get("inl_after_lsb",
+                                    ev.get("inl_lsb", 0.0))),
+            "maintenance_pending": self.maintenance_pending,
+            "draining": self.draining,
+            "weight_gen": self._weight_gen,
+        }
+
     def _admit(self):
         """Prefill queued requests into free slots (simplified: per-request
         single-slot prefill on a fresh state, then merged)."""
@@ -297,7 +359,12 @@ class ServingEngine:
                 self.slot_free[s] = True
                 self.slot_req[s] = None
         if self.scheduler is not None and self.scheduler.tick():
-            if self.drain_before_rejit \
+            if self.external_maintenance:
+                # fleet mode: the planner decides WHEN this chip drains.
+                # Keep serving (and admitting) the old chip — physically
+                # the re-program is deferred — until begin_drain().
+                self._maint_pending = True
+            elif self.drain_before_rejit \
                     and not all(self.slot_free[s] for s in active):
                 # planned re-jit: drain the in-flight wave first (the
                 # deployed thresholds moved host-side, but the compiled
@@ -321,25 +388,108 @@ class ServingEngine:
         A pending probe-driven *weight refresh* re-programs the crossbars
         instead of merely re-aging them: the generation salt draws a fresh
         per-tile write-noise population and the drift clock restarts at the
-        re-program age.
+        re-program age.  When every stalled ramp is a col-tile bank whose
+        activation maps to param leaves (``model.act_param_leaves``), only
+        the crossbar col-tiles feeding those banks are rewritten (the
+        per-tile refresh); otherwise the whole chip re-programs.
         """
         sched = self.scheduler
+        if sched is None:
+            # externally-forced drain on a schedulerless chip (fleet smoke):
+            # nothing ages, the "re-program" is just a trace rebuild
+            self._maint_pending = False
+            self._refresh_jit()
+            return
         # After a restored drain window the activations hold the OLD
         # (served) thresholds; push the scheduler's current-age state
         # before re-jitting.  In the immediate path this is a no-op (tick
         # already redeployed).
         sched.redeploy()
-        if self.device is not None and sched.consume_weight_refresh():
-            self._weight_gen += 1
-            self._weight_prog_age_s = sched.age_s
+        if self.device is not None:
+            stalled = list(sched.weight_refresh_ramps)
+            if sched.consume_weight_refresh():
+                self._refresh_ord += 1
+                scope = self._per_tile_refresh_scope(stalled)
+                if scope is not None:
+                    for key in scope:
+                        self._tile_gens[key] = {"gen": self._refresh_ord,
+                                                "age_s": sched.age_s}
+                else:
+                    # full-chip rewrite supersedes any partials
+                    self._weight_gen = self._refresh_ord
+                    self._weight_prog_age_s = sched.age_s
+                    self._tile_gens.clear()
         if self.device is not None \
-                and (sched.policy.age_per_step_s > 0 or self._weight_gen):
+                and (sched.policy.age_per_step_s > 0 or self._weight_gen
+                     or self._tile_gens):
             t_eff = max(sched.age_s - self._weight_prog_age_s, 0.0)
             aged_dev = self.device.with_drift(t_eff)
             if aged_dev.has_build_stage:
                 self.params = aged_dev.age_params(
-                    self._pristine_params, generation=self._weight_gen)
+                    self._pristine_params, generation=self._weight_gen,
+                    leaf_overrides=self._tile_overrides_fn())
+        self._maint_pending = False
         self._refresh_jit()
+
+    def _per_tile_refresh_scope(self, stalled):
+        """The bank keys eligible for a col-tile-scoped rewrite, or None.
+
+        Per-tile needs every stalled ramp to be (a) a bank key — an
+        unbanked ramp spans all of its activation's columns, so its refresh
+        IS chip-wide for those leaves — and (b) an activation the model
+        maps to param leaves.  Anything else falls back to the full
+        re-program (correct, just coarser).
+        """
+        if not stalled:
+            return None
+        leaf_map = getattr(self.model, "act_param_leaves", None)
+        if leaf_map is None:
+            return None
+        mapped = leaf_map()
+        for key in stalled:
+            if "@" not in key or key.split("@", 1)[0] not in mapped:
+                return None
+        return stalled
+
+    def _tile_overrides_fn(self):
+        """Realize ``_tile_gens`` as an ``age_params`` leaf_overrides
+        callable: for each leaf feeding a refreshed bank, the TilePlan
+        col-tiles intersecting that bank's output columns carry the bank's
+        own (generation, drift-age) instead of the chip-wide ones."""
+        if not self._tile_gens:
+            return None
+        from repro.core import crossbar as CB
+
+        mapped = self.model.act_param_leaves()
+        # act -> [(width, col_lo, col_hi, gen, prog_age)] in sorted key
+        # order, so overlapping spans resolve deterministically
+        spans: Dict[str, list] = {}
+        for key, rec in sorted(self._tile_gens.items()):
+            name, rest = key.split("@", 1)
+            width_s, j_s = rest.split(":")
+            width, j = int(width_s), int(j_s)
+            bc = self._acts[name].cfg.bank_cols
+            spans.setdefault(name, []).append(
+                (width, j * bc, min((j + 1) * bc, width),
+                 int(rec["gen"]), float(rec["age_s"])))
+        sched_age = self.scheduler.age_s
+
+        def overrides(path, shape):
+            cov = {}
+            for name, spanlist in spans.items():
+                if not any(p in path for p in mapped.get(name, ())):
+                    continue
+                plan = CB.plan_tiles(shape[-2], shape[-1])
+                for width, lo, hi, gen, prog_age in spanlist:
+                    if shape[-1] != width:
+                        continue
+                    t_eff = max(sched_age - prog_age, 0.0)
+                    for (ti, tj), _, cs in plan.blocks():
+                        if ti == 0 and cs.start < hi and cs.stop > lo:
+                            cov[tj] = (gen, t_eff)
+            return cov or None
+
+        return overrides
 
     def run_to_completion(self, max_iters: int = 10_000) -> int:
         """Drain the queue; returns the number of tokens generated."""
@@ -408,7 +558,11 @@ class ServingEngine:
                       for name, act in self._acts.items() if act.banks()},
             "lifecycle": {"weight_gen": self._weight_gen,
                           "weight_prog_age_s": self._weight_prog_age_s,
-                          "rejit_pending": self._rejit_pending},
+                          "rejit_pending": self._rejit_pending,
+                          "maint_pending": self._maint_pending,
+                          "refresh_ord": self._refresh_ord,
+                          "tile_gens": {k: dict(v) for k, v
+                                        in self._tile_gens.items()}},
             "requests": {
                 "slots": [None if r is None else r.to_dict()
                           for r in self.slot_req],
@@ -423,7 +577,8 @@ class ServingEngine:
     @classmethod
     def restore(cls, model, root: str, *, step: Optional[int] = None,
                 params_like=None,
-                drain_before_rejit: bool = False) -> "ServingEngine":
+                drain_before_rejit: bool = False,
+                external_maintenance: bool = False) -> "ServingEngine":
         """Resume a checkpointed deployment: same chip, same next token.
 
         ``params_like``: a pytree matching the model's params structure
@@ -440,11 +595,14 @@ class ServingEngine:
 
         step, meta = read_metadata(root, step=step)
         if "engine" not in meta:
+            hint = ("this is a fleet manifest — restore via "
+                    "repro.serve.fleet.FleetEngine.restore"
+                    if isinstance(meta, dict) and "fleet" in meta else
+                    "train checkpoints restore via repro.ckpt directly")
             raise ValueError(
                 f"checkpoint at {root!r} (step {step}) is not a "
-                "ServingEngine deployment checkpoint (no 'engine' "
-                "metadata); train checkpoints restore via repro.ckpt "
-                "directly")
+                f"ServingEngine deployment checkpoint (no 'engine' "
+                f"metadata); {hint}")
         schema = int(meta.get("schema", 1))
         if schema > cls.SCHEMA:
             raise ValueError(
@@ -462,7 +620,8 @@ class ServingEngine:
         eng = cls(model, params_like,
                   max_batch=meta["engine"]["max_batch"],
                   max_len=meta["engine"]["max_len"],
-                  drain_before_rejit=drain_before_rejit)
+                  drain_before_rejit=drain_before_rejit,
+                  external_maintenance=external_maintenance)
         # Realize the checkpointed bank inventory BEFORE building the
         # restore template, so the leaf paths line up with the save — and
         # fail with a clear bank_cols hint in BOTH mismatch directions
@@ -530,6 +689,12 @@ class ServingEngine:
         eng._weight_gen = int(lc.get("weight_gen", 0))
         eng._weight_prog_age_s = float(lc.get("weight_prog_age_s", 0.0))
         eng._rejit_pending = bool(lc.get("rejit_pending", False))
+        eng._maint_pending = bool(lc.get("maint_pending", False))
+        eng._refresh_ord = int(lc.get("refresh_ord", lc.get("weight_gen",
+                                                            0)))
+        eng._tile_gens = {k: {"gen": int(v["gen"]),
+                              "age_s": float(v["age_s"])}
+                          for k, v in lc.get("tile_gens", {}).items()}
         if meta["scheduler"] is not None:
             eng.scheduler = RecalScheduler.from_dict(
                 meta["scheduler"], eng._acts)

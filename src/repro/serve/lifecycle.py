@@ -219,6 +219,11 @@ class RecalScheduler:
         self.n_recals = 0
         self.stall_count = 0
         self.weight_refresh_pending = False
+        # Ramp-state keys whose recal stalled when the pending refresh was
+        # raised — the engine re-programs only the crossbar col-tiles
+        # feeding these ramps (falling back to a full re-program when a
+        # stalled ramp can't be mapped to param leaves).
+        self.weight_refresh_ramps: List[str] = []
         self.events: List[dict] = []
         self.ramps: Dict[str, RampState] = {}
         if _program:
@@ -362,14 +367,24 @@ class RecalScheduler:
             n_stalls = self.policy.weight_refresh_after_stalls
             if n_stalls > 0 and self.stall_count >= n_stalls:
                 self.weight_refresh_pending = True
+                self.weight_refresh_ramps = sorted(
+                    k for k in over
+                    if after[k] > self.policy.inl_threshold_lsb)
                 self.stall_count = 0
                 event["weight_refresh"] = True
+                event["weight_refresh_ramps"] = \
+                    list(self.weight_refresh_ramps)
                 changed = True        # the engine must rebuild either way
         self.events.append(event)
         return changed
 
     def consume_weight_refresh(self) -> bool:
-        """True once per pending weight-crossbar re-program request."""
+        """True once per pending weight-crossbar re-program request.
+
+        The stalled ramp keys driving the request stay readable in
+        ``weight_refresh_ramps`` until the next probe raises a new one —
+        callers snapshot them *before* consuming.
+        """
         pending, self.weight_refresh_pending = \
             self.weight_refresh_pending, False
         return pending
@@ -386,6 +401,7 @@ class RecalScheduler:
             "n_recals": self.n_recals,
             "stall_count": self.stall_count,
             "weight_refresh_pending": self.weight_refresh_pending,
+            "weight_refresh_ramps": list(self.weight_refresh_ramps),
             "events": list(self.events),
             "ramps": {k: v.to_dict() for k, v in self.ramps.items()},
         }
@@ -412,6 +428,7 @@ class RecalScheduler:
         sched.stall_count = int(d.get("stall_count", 0))
         sched.weight_refresh_pending = bool(
             d.get("weight_refresh_pending", False))
+        sched.weight_refresh_ramps = list(d.get("weight_refresh_ramps", []))
         sched.events = list(d["events"])
         for key, rd in d["ramps"].items():
             # bank-state keys are "{act}@{width}:{j}"; plain keys are acts
