@@ -29,6 +29,7 @@ MODULES = [
     ("bank_sweep", "threshold-bank sweep (INL/accuracy vs col-tile count)"),
     ("recal_schedule", "serving-lifetime re-calibration schedule sweep"),
     ("fleet_sweep", "fleet serving sweep (N chips x capacity floor)"),
+    ("serve_throughput", "offline serving: scan vs bucketed AOT prefill"),
     ("kernel_bench", "kernel microbench"),
     ("backend_parity", "ref-vs-pallas backend parity + throughput"),
     ("dist_scaling", "repro.dist device-count scaling sweep"),

@@ -1,0 +1,108 @@
+"""Serving-throughput CI gate: re-run the offline burst, diff the baseline.
+
+    PYTHONPATH=src python -m benchmarks.serve_gate [--min-speedup F] \
+        [--tol-speedup F]
+
+Runs ``benchmarks.serve_throughput`` on the quick burst and fails — exit
+code 1 — when the throughput path regresses against the committed
+``BENCH_serve.json``:
+
+* **bitwise parity** is asserted twice: the sweep itself aborts if any
+  cell's token streams diverge from the scan cell, and the gate diffs
+  every cell's streams + token totals EXACTLY against the recorded
+  baseline (exact-mode smoke config on the ref backend — deterministic,
+  so a single changed token means the serving numerics moved);
+* the ``bucketed_pack`` speedup over the scan cell must stay above
+  ``--min-speedup`` (hard floor, default 1.5x) AND above the baseline
+  ratio scaled by ``--tol-speedup`` — the ratio is scan-normalized on
+  the same machine in the same process, so it gates compile-amortization
+  and packing without ever diffing wall-clock seconds across machines.
+
+Raw ``tokens_per_s`` is recorded in the baseline but never diffed.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from benchmarks import serve_throughput
+
+BASELINE = os.path.join(os.path.dirname(__file__), "BENCH_serve.json")
+
+
+def compare(results: dict, baseline: dict, min_speedup: float,
+            tol_speedup: float) -> list:
+    failures = []
+    want_cells, got_cells = baseline["cells"], results["cells"]
+    for key in sorted(set(want_cells) ^ set(got_cells)):
+        side = "baseline" if key in want_cells else "sweep"
+        failures.append(f"cell {key}: only present in the {side}; "
+                        "re-record BENCH_serve.json")
+    for key in sorted(set(want_cells) & set(got_cells)):
+        want, got = want_cells[key], got_cells[key]
+        if got["streams"] != want["streams"]:
+            bad = sorted(uid for uid in want["streams"]
+                         if got["streams"].get(uid) != want["streams"][uid])
+            failures.append(
+                f"{key}: token streams changed vs the recorded baseline "
+                f"(uids {bad}) — the serving numerics moved")
+        if got["tokens_total"] != want["tokens_total"]:
+            failures.append(
+                f"{key}: {got['tokens_total']} tokens vs baseline "
+                f"{want['tokens_total']}")
+        if got["buckets"] != want["buckets"]:
+            failures.append(
+                f"{key}: prefill buckets {got['buckets']} vs baseline "
+                f"{want['buckets']} — the bucket ladder changed")
+
+    got_ratio = results["speedup"].get("bucketed_pack", 0.0)
+    want_ratio = baseline["speedup"].get("bucketed_pack", 0.0)
+    floor = max(min_speedup, want_ratio * tol_speedup)
+    if got_ratio < floor:
+        failures.append(
+            f"bucketed_pack speedup {got_ratio:.2f}x vs scan, below "
+            f"{floor:.2f}x (hard floor {min_speedup:.2f}x, baseline "
+            f"{want_ratio:.2f}x scaled by {tol_speedup:.2f}) — AOT bucket "
+            "amortization or packing regressed")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--min-speedup", type=float, default=1.5,
+                    help="hard floor on the bucketed_pack/scan tokens/s "
+                         "ratio, machine-independent")
+    ap.add_argument("--tol-speedup", type=float, default=0.25,
+                    help="fraction of the baseline ratio that must be "
+                         "retained (ratios vary with CI load; the hard "
+                         "floor is the real gate)")
+    args = ap.parse_args()
+
+    with open(BASELINE) as f:
+        baseline = json.load(f)
+    if not baseline.get("quick", True):
+        print("[serve-gate] note: baseline was recorded with quick=False; "
+              "the gate compares a quick run against it")
+    results = serve_throughput.run(quick=True)
+
+    failures = compare(results, baseline, args.min_speedup, args.tol_speedup)
+    if failures:
+        print(f"\n[serve-gate] FAIL — {len(failures)} deltas over "
+              "tolerance vs benchmarks/BENCH_serve.json:")
+        for fail in failures:
+            print("  " + fail)
+        print("If the shift is intentional, re-record the (quick) "
+              "baseline: rm benchmarks/BENCH_serve.json && PYTHONPATH=src "
+              "python -m benchmarks.run --only serve_throughput")
+        return 1
+    print("\n[serve-gate] OK — offline serving parity bitwise and speedup "
+          f"{results['speedup']['bucketed_pack']:.1f}x within tolerance of "
+          "BENCH_serve.json")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -3,6 +3,12 @@
 Spins up the batched serving engine, submits a wave of synthetic requests,
 and reports tokens/s + per-request outputs.
 
+Throughput knobs: ``--prefill-buckets`` (AOT-compiled power-of-two prefill
+buckets; 'auto' or an explicit list), ``--pack-prefill`` (one padded
+prefill call per admission wave), ``--detok-thread`` (background
+detokenize pipeline), and ``--offline`` (MLPerf-offline style: ``warmup()``
+pre-compiles everything, then one measured burst).
+
 Device-lifecycle knobs (``--age-per-step-s`` / ``--recal-every`` /
 ``--recal-inl-lsb``) attach a :class:`repro.serve.lifecycle.RecalScheduler`
 to the engine: device age advances every step, INL probes run on the
@@ -52,6 +58,28 @@ def main():
                     help="threshold banks: output columns per NL-ADC ramp "
                          "(one ramp per crossbar col-tile; 0 = one shared "
                          "ramp per activation, the legacy layout)")
+    ap.add_argument("--prefill-buckets", default="",
+                    help="throughput path: comma-separated AOT prefill "
+                         "bucket lengths (e.g. '8,16,32') or 'auto' for "
+                         "powers of two up to max_len-1; empty = legacy "
+                         "per-length scan prefill")
+    ap.add_argument("--pack-prefill", action="store_true",
+                    help="pack a whole admission wave of short prompts "
+                         "into one padded bucket call (requires "
+                         "--prefill-buckets)")
+    ap.add_argument("--detok-thread", action="store_true",
+                    help="background detokenize/backlog thread: host "
+                         "transfer + bookkeeping overlap the next device "
+                         "step")
+    ap.add_argument("--offline", action="store_true",
+                    help="MLPerf-offline style run: warmup() pre-compiles "
+                         "every bucket + the decode step, then the whole "
+                         "request burst is submitted and drained under one "
+                         "wall-clock measurement")
+    ap.add_argument("--shelf-age-per-step-s", type=float, default=0.0,
+                    help="fleet: device seconds added per fleet step to "
+                         "chips serving no traffic (idle chips keep "
+                         "drifting and probing; 0 disables)")
     ap.add_argument("--drain-before-rejit", action="store_true",
                     help="scheduler-aware continuous batching: drain the "
                          "in-flight decode wave before a planned chip "
@@ -88,6 +116,20 @@ def main():
                          "chip at this step (CI smoke for the drain path)")
     args = ap.parse_args()
 
+    if args.pack_prefill and not args.prefill_buckets:
+        ap.error("--pack-prefill requires --prefill-buckets")
+    prefill_kw = {"detok_thread": args.detok_thread}
+    if args.prefill_buckets:
+        prefill_kw["prefill"] = "bucketed"
+        prefill_kw["pack_prefill"] = args.pack_prefill
+        if args.prefill_buckets != "auto":
+            try:
+                prefill_kw["prefill_buckets"] = tuple(
+                    int(b) for b in args.prefill_buckets.split(","))
+            except ValueError:
+                ap.error("--prefill-buckets must be 'auto' or a "
+                         "comma-separated list of ints")
+
     cfg = configs.get_smoke(args.arch) if args.smoke \
         else configs.get(args.arch)
     spec_kw = {}
@@ -102,7 +144,7 @@ def main():
     if spec_kw:
         cfg = cfg.replace(analog=dataclasses.replace(cfg.analog, **spec_kw))
     if args.fleet:
-        _serve_fleet(ap, args, cfg)
+        _serve_fleet(ap, args, cfg, prefill_kw)
         return
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -133,7 +175,7 @@ def main():
             ap.error("--resume requires --ckpt-dir")
         engine = ServingEngine.restore(
             model, args.ckpt_dir, params_like=params,
-            drain_before_rejit=args.drain_before_rejit)
+            drain_before_rejit=args.drain_before_rejit, **prefill_kw)
         sched = engine.scheduler
         if recal is not None:
             if sched is None:
@@ -150,23 +192,39 @@ def main():
         engine = ServingEngine(model, params, max_batch=args.max_batch,
                                max_len=args.max_len, device=device,
                                recal=recal,
-                               drain_before_rejit=args.drain_before_rejit)
+                               drain_before_rejit=args.drain_before_rejit,
+                               **prefill_kw)
 
     rng = np.random.default_rng(0)
+    reqs = []
     for uid in range(args.requests):
         prompt = rng.integers(0, cfg.vocab,
                               size=rng.integers(4, 12)).astype(np.int32)
-        engine.submit(Request(uid=uid, prompt=prompt,
-                              max_new_tokens=args.max_new))
+        reqs.append(Request(uid=uid, prompt=prompt,
+                            max_new_tokens=args.max_new))
 
-    t0 = time.time()
-    n_tokens = 0
-    while engine.queue or not all(engine.slot_free):
-        out = engine.step()
-        n_tokens += len(out)
-    dt = time.time() - t0
-    print(f"[serve] {args.requests} requests, {n_tokens} tokens "
-          f"in {dt:.2f}s ({n_tokens / max(dt, 1e-9):.1f} tok/s)")
+    if args.offline:
+        w = engine.warmup()
+        print(f"[serve] warmup: {len(w['prefill_buckets'])} prefill bucket "
+              f"executables {tuple(w['prefill_buckets'])} + decode step "
+              "compiled")
+        stats = engine.run_offline(reqs)
+        n_tokens, dt = stats["tokens"], stats["seconds"]
+        print(f"[serve] offline: {args.requests} requests, "
+              f"{n_tokens} tokens in {dt:.2f}s "
+              f"({stats['tokens_per_s']:.1f} tok/s, warmup excluded)")
+    else:
+        for req in reqs:
+            engine.submit(req)
+        t0 = time.time()
+        n_tokens = 0
+        while engine.queue or not all(engine.slot_free):
+            out = engine.step()
+            n_tokens += len(out)
+        n_tokens += sum(len(b) for b in engine.detok_flush())
+        dt = time.time() - t0
+        print(f"[serve] {args.requests} requests, {n_tokens} tokens "
+              f"in {dt:.2f}s ({n_tokens / max(dt, 1e-9):.1f} tok/s)")
     if engine.scheduler is not None:
         s = engine.scheduler
         print(f"[serve] lifecycle: age {s.age_s:.0f}s, "
@@ -191,7 +249,7 @@ def main():
         print(f"[serve] deployment checkpointed to {out}")
 
 
-def _serve_fleet(ap, args, cfg):
+def _serve_fleet(ap, args, cfg, prefill_kw):
     """The --fleet path: N chips, router, planner, canaries, manifest."""
     from repro.serve.fleet import ROUTERS, FleetEngine, FleetPolicy
 
@@ -209,7 +267,8 @@ def _serve_fleet(ap, args, cfg):
         ap.error("--canary requires --analog-mode infer (canaries are "
                  "pinned to deployed device presets)")
     policy = FleetPolicy(capacity_floor=args.capacity_floor,
-                         router=args.router)
+                         router=args.router,
+                         shelf_age_per_step_s=args.shelf_age_per_step_s)
     if args.resume:
         if not args.ckpt_dir:
             ap.error("--resume requires --ckpt-dir")
@@ -221,7 +280,7 @@ def _serve_fleet(ap, args, cfg):
         fleet = FleetEngine.build(
             cfg, args.fleet, policy=policy, recal=recal,
             max_batch=args.max_batch, max_len=args.max_len,
-            canary_presets=tuple(args.canary))
+            canary_presets=tuple(args.canary), **prefill_kw)
         roles = ", ".join(
             f"{cid}{' (canary: ' + c.device.name + ')' if c.spec.canary else ''}"
             for cid, c in fleet.chips.items())
@@ -230,6 +289,10 @@ def _serve_fleet(ap, args, cfg):
               f"capacity_floor={policy.capacity_floor} "
               f"(max {fleet.planner.max_drain} draining)")
 
+    if args.offline:
+        fleet.warmup()
+        print("[serve] fleet warmup: bucket executables + decode steps "
+              "compiled on every chip")
     rng = np.random.default_rng(0)
     for uid in range(args.requests):
         prompt = rng.integers(0, cfg.vocab,
@@ -250,6 +313,8 @@ def _serve_fleet(ap, args, cfg):
             fleet.force_maintenance(first)
         n_tokens += len(fleet.step())
         min_accepting = min(min_accepting, len(fleet.accepting()))
+    n_tokens += sum(len(b) for c in fleet.chips.values()
+                    for b in c.engine.detok_flush())
     dt = time.time() - t0
     lat = fleet.admission_latency_steps()
     p95 = float(np.percentile(lat, 95)) if lat else 0.0

@@ -183,6 +183,16 @@ class EncDecLM:
                 *, key=None):
         return self.forward(params, tokens, extra, key=key)[:, -1:]
 
+    def prefill_cache(self, params, state, tokens, valid_len, *, key=None,
+                      batch_axes=None):
+        """Cache-writing chunked/batched decoder prefill (generic masked
+        scan over :meth:`decode_step`; the cross K/V in ``state`` ride
+        along untouched by the per-row mask — they are per-row anyway)."""
+        from repro.nn import model as M
+
+        return M.prefill_cache(self, params, state, tokens, valid_len,
+                               key=key, batch_axes=batch_axes)
+
     def init_decode_state(self, batch: int, max_len: int) -> Dict:
         cfg = self.cfg
         one = A.init_cache(batch, max_len, cfg.n_kv_heads, cfg.head_dim,

@@ -499,7 +499,17 @@ class LM:
 
         The baseline prefill recomputes no cache fill (the dry-run cell
         measures the forward FLOPs); cache-filling prefill for the serving
-        engine lives in repro.serve.engine.
+        engine is :meth:`prefill_cache`.
         """
         logits = self.forward(params, tokens, extra, key=key)
         return logits[:, -1:]
+
+    def prefill_cache(self, params, state, tokens, valid_len, *, key=None,
+                      batch_axes=None):
+        """Cache-writing chunked/batched prefill (see
+        :func:`repro.nn.model.prefill_cache` — exact w.r.t. the decode
+        path, per-row length masking, shared global index)."""
+        from repro.nn import model as M
+
+        return M.prefill_cache(self, params, state, tokens, valid_len,
+                               key=key, batch_axes=batch_axes)

@@ -10,20 +10,44 @@ Production shape (vLLM-style, sized down to JAX-native primitives):
   batching); finished slots (EOS / max_tokens) free immediately;
 * per-slot position offsets let requests of different lengths coexist.
 
-Prefill-cache-fill uses the decode path token-by-token via a **jitted
-lax.scan** (exact w.r.t. the cache layout, including rolling windows, and
-one compile per prompt length instead of one eager dispatch per token); the
-chunked-prefill fast path is a §Perf iteration.  Inside the decode step the
-attention/recurrence primitives dispatch through the model's configured
-analog backend (``AnalogConfig.backend``) — with ``kv_cache_dtype="int8"``
-and ``backend="pallas"`` the batched decode hot loop runs the fused
-flash-decode kernel.
+Two prefill paths share one correctness anchor (bitwise-identical token
+streams and decode caches, tested on both backends, noisy and noiseless):
+
+* ``prefill="scan"`` (default) — the legacy path: per-request jitted
+  ``lax.scan`` over ``decode_step`` (exact w.r.t. the cache layout,
+  including rolling windows), one compile per distinct prompt length.
+* ``prefill="bucketed"`` — the MLPerf-offline-style throughput path:
+  **power-of-two prefill length buckets**, each an **AOT-compiled
+  executable** (``jax.jit(...).lower(...).compile()``) built once and
+  reused for every prompt that rounds up into the bucket; ``warmup()``
+  pre-compiles every bucket and the decode step before traffic arrives.
+  With ``pack_prefill=True`` one padded prefill call carries the whole
+  admission wave (several short prompts batched into the pack rows, each
+  masked to its own length) and the resulting caches **scatter** into
+  their batch slots — generalizing the single-slot ``_merge_slot``.
+  Prompts longer than the largest bucket run **chunked**: repeated
+  largest-bucket calls carrying the state, the shared ``index`` keeping
+  cache positions and the noise-key schedule global.
+
+``detok_thread=True`` moves argmax→host transfer→request bookkeeping onto
+a background detokenize/backlog thread: the next device step dispatches
+against a device-side last-token vector while the previous step's tokens
+land asynchronously (results lag up to one ``step``; ``detok_flush``
+joins the backlog — checkpoints do it automatically).
+
+Inside the decode step the attention/recurrence primitives dispatch
+through the model's configured analog backend (``AnalogConfig.backend``)
+— with ``kv_cache_dtype="int8"`` and ``backend="pallas"`` the batched
+decode hot loop runs the fused flash-decode kernel.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+import queue as _queue
+import threading
+import time
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -50,6 +74,82 @@ class Request:
                    prompt=np.asarray(d["prompt"], np.int32),
                    max_new_tokens=d["max_new_tokens"], eos_id=d["eos_id"],
                    generated=list(d["generated"]))
+
+
+class _DetokWorker:
+    """Background detokenize/backlog pipeline.
+
+    The engine hands each decode step's device token vector plus a
+    snapshot of the active ``(slot, request)`` pairs to this thread; the
+    thread performs the device→host transfer (``np.asarray`` blocks on the
+    computation — off the dispatch path) and the per-request bookkeeping
+    (append to ``generated``, EOS detection), so the next device step
+    launches without waiting for the previous step's host work.
+
+    Ordering is preserved (one FIFO queue, one worker), so ``generated``
+    streams are bitwise what the synchronous path appends.  EOS detection
+    necessarily lags one step: the slot is reaped at the top of the *next*
+    engine step, and the worker stops appending past the EOS token so the
+    stream itself stays truncated exactly like the synchronous path.
+    """
+
+    def __init__(self):
+        self._q: _queue.Queue = _queue.Queue()
+        self._results: _queue.Queue = _queue.Queue()
+        self._lock = threading.Lock()
+        self._eos: List[Tuple[int, int]] = []      # (slot, uid)
+        self._thread = threading.Thread(
+            target=self._loop, name="serve-detok", daemon=True)
+        self._thread.start()
+
+    def put(self, next_tok, snapshot) -> None:
+        """Enqueue one decode step's device tokens + active-slot snapshot."""
+        self._q.put((next_tok, snapshot))
+
+    def _loop(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is None:
+                self._q.task_done()
+                return
+            next_tok, snapshot = item
+            toks = np.asarray(next_tok)            # device -> host, here
+            out = {}
+            for slot, req in snapshot:
+                if getattr(req, "_eos_seen", False):
+                    continue                       # truncate past EOS
+                tok = int(toks[slot])
+                req.generated.append(tok)
+                out[req.uid] = tok
+                if req.eos_id >= 0 and tok == req.eos_id:
+                    req._eos_seen = True
+                    with self._lock:
+                        self._eos.append((slot, req.uid))
+            self._results.put(out)
+            self._q.task_done()
+
+    def take_eos(self) -> List[Tuple[int, int]]:
+        """Slots whose request hit EOS since the last call (one-step lag)."""
+        with self._lock:
+            out, self._eos = self._eos, []
+        return out
+
+    def pop_one(self) -> Dict[int, int]:
+        """At most one landed step batch (non-blocking; {} if none yet)."""
+        try:
+            return self._results.get_nowait()
+        except _queue.Empty:
+            return {}
+
+    def flush(self) -> List[Dict[int, int]]:
+        """Block until the backlog is processed; return the landed batches."""
+        self._q.join()
+        out = []
+        while True:
+            try:
+                out.append(self._results.get_nowait())
+            except _queue.Empty:
+                return out
 
 
 class ServingEngine:
@@ -99,8 +199,20 @@ class ServingEngine:
     def __init__(self, model, params, *, max_batch: int, max_len: int,
                  device=None, noise_seed: int = 0, recal=None,
                  drain_before_rejit: bool = False,
-                 external_maintenance: bool = False):
+                 external_maintenance: bool = False,
+                 prefill: str = "scan",
+                 prefill_buckets=None,
+                 pack_prefill: bool = False,
+                 detok_thread: bool = False):
         from repro.serve.lifecycle import RecalScheduler, analog_activations
+
+        if prefill not in ("scan", "bucketed"):
+            raise ValueError(
+                f"prefill must be 'scan' or 'bucketed', got {prefill!r}")
+        if prefill != "bucketed" and (pack_prefill
+                                      or prefill_buckets is not None):
+            raise ValueError(
+                "pack_prefill / prefill_buckets require prefill='bucketed'")
 
         self.device = device
         self._pristine_params = params
@@ -149,6 +261,35 @@ class ServingEngine:
         self.slot_pos = np.zeros(max_batch, np.int32)     # next position
         self.slot_last = np.zeros(max_batch, np.int32)    # last token
         self.queue: List[Request] = []
+        # -- throughput path: bucketed AOT prefill / packing / detokenize --
+        self.prefill_mode = prefill
+        self.pack_prefill = bool(pack_prefill)
+        self._pack_rows = max_batch if pack_prefill else 1
+        if prefill == "bucketed":
+            buckets = tuple(int(b) for b in (
+                prefill_buckets if prefill_buckets is not None
+                else self._default_buckets(max_len)))
+            if not buckets or any(b <= 0 for b in buckets) \
+                    or list(buckets) != sorted(set(buckets)):
+                raise ValueError(
+                    f"prefill_buckets must be strictly increasing positive "
+                    f"lengths, got {buckets}")
+            self.prefill_buckets: tuple = buckets
+        else:
+            self.prefill_buckets = ()
+        self._prefill_exec: Dict[int, object] = {}   # bucket -> executable
+        self._exec_fp: Dict[int, tuple] = {}         # bucket -> thresholds
+        self._batch_axes_cache = None
+        self._pack_tmpl = None
+        self.last_invalidation: Optional[dict] = None
+        # detokenize pipeline: per-slot emitted-token counters replace
+        # len(generated) for the done-check (the worker owns `generated`),
+        # and the decode input comes from a device-side last-token vector
+        # so the next step never waits on the previous step's host landing
+        self._slot_ntok = np.zeros(max_batch, np.int64)
+        self._detok = _DetokWorker() if detok_thread else None
+        self._slot_last_dev = jnp.asarray(self.slot_last, jnp.int32) \
+            if detok_thread else None
         self._refresh_jit()
 
     def _refresh_jit(self):
@@ -164,6 +305,8 @@ class ServingEngine:
         self._jit_decode = jax.jit(self._decode_all)
         self._jit_prefill = jax.jit(self._prefill_slot,
                                     static_argnames=("length",))
+        self._prefill_exec.clear()
+        self._exec_fp.clear()
         self._served_ramps = {name: np.asarray(act.ramp.thresholds).copy()
                               for name, act in self._acts.items()}
         self._served_banks = {
@@ -184,6 +327,167 @@ class ServingEngine:
                 out[name] = banks
         return out
 
+    # -- bucketed AOT prefill ------------------------------------------
+
+    @staticmethod
+    def _default_buckets(max_len: int) -> tuple:
+        """Power-of-two prefill lengths 8, 16, ... capped by the longest
+        legal prefill (``max_len - 1``), which terminates the ladder so
+        in-range prompts never need chunking."""
+        top = max(max_len - 1, 1)
+        out, b = [], 8
+        while b < top:
+            out.append(b)
+            b *= 2
+        out.append(top)
+        return tuple(out)
+
+    def _bucket_for(self, length: int) -> int:
+        """Smallest bucket covering ``length`` (largest bucket if none
+        does — the caller then chunks)."""
+        for b in self.prefill_buckets:
+            if b >= length:
+                return b
+        return self.prefill_buckets[-1]
+
+    def _batch_axes(self):
+        """Per-leaf batch axis of the decode-state tree (cached; -1 for
+        shared leaves) — drives both the pack-row length masking and the
+        row->slot scatter."""
+        if self._batch_axes_cache is None:
+            from repro.nn.model import decode_state_batch_axes
+
+            self._batch_axes_cache = decode_state_batch_axes(self.model)
+        return self._batch_axes_cache
+
+    def _pack_template(self):
+        """The fresh (all-zero) pack-rows decode state every prefill wave
+        starts from.  Never mutated (executables return new arrays), so
+        one allocation serves the engine's lifetime."""
+        if self._pack_tmpl is None:
+            self._pack_tmpl = self.model.init_decode_state(
+                self._pack_rows, self.max_len)
+        return self._pack_tmpl
+
+    def _prefill_packed(self, params, state, tokens, valid_len, key):
+        """Jittable body of one bucket executable: the model's cache-
+        writing prefill (masked scan over the decode seam — exact by
+        construction, see :func:`repro.nn.model.prefill_cache`)."""
+        fn = getattr(self.model, "prefill_cache", None)
+        if fn is None:
+            from repro.nn.model import prefill_cache
+
+            return prefill_cache(self.model, params, state, tokens,
+                                 valid_len, key=key,
+                                 batch_axes=self._batch_axes())
+        return fn(params, state, tokens, valid_len, key=key,
+                  batch_axes=self._batch_axes())
+
+    def _ensure_prefill_exec(self, bucket: int):
+        """The AOT-compiled executable for one bucket length.
+
+        Compiled once (``jax.jit(...).lower(...).compile()``) and reused
+        for every wave that rounds up into the bucket; invalidated only
+        when a chip re-program moves the thresholds its trace baked in
+        (see :meth:`_refresh_jit_selective`).
+        """
+        ex = self._prefill_exec.get(bucket)
+        if ex is not None:
+            return ex
+        P = self._pack_rows
+        tokens = jnp.zeros((P, bucket), jnp.int32)
+        vlen = jnp.zeros((P,), jnp.int32)
+        key = self._noise_key if self._noisy else None
+        ex = jax.jit(self._prefill_packed).lower(
+            self.params, self._pack_template(), tokens, vlen, key).compile()
+        self._prefill_exec[bucket] = ex
+        # fingerprint AFTER compiling: the trace may have realized
+        # threshold banks lazily, and those are part of what it serves
+        self._exec_fp[bucket] = self._threshold_fp()
+        return ex
+
+    def warmup(self) -> dict:
+        """Pre-compile every prefill bucket executable and the decode step
+        before traffic arrives (MLPerf-offline style: compile time is paid
+        here, not inside the measured burst)."""
+        out = {"prefill_buckets": [], "decode": True}
+        for b in self.prefill_buckets:
+            self._ensure_prefill_exec(b)
+            out["prefill_buckets"].append(b)
+        # one representative-shape decode call triggers (and caches) the
+        # jit compile; the result is discarded and no engine state — in
+        # particular the noise-key schedule — advances
+        tokens = jnp.zeros((self.max_batch, 1), jnp.int32)
+        positions = jnp.zeros((self.max_batch,), jnp.int32)
+        key = self._noise_key if self._noisy else None
+        self._jit_decode(self.params, self.state, tokens, positions, key)
+        return out
+
+    # -- threshold fingerprints (bucket-aware invalidation) ------------
+
+    def _threshold_fp(self) -> tuple:
+        """Bytes-level fingerprint of every deployed comparator threshold
+        (shared ramps + realized per-col-tile banks) — exactly the
+        constants a trace bakes in."""
+        fp = []
+        for name in sorted(self._acts):
+            act = self._acts[name]
+            banks = act.banks()
+            fp.append((name, np.asarray(act.ramp.thresholds).tobytes(),
+                       tuple((w, banks[w].thresholds_f64.tobytes())
+                             for w in sorted(banks))))
+        return tuple(fp)
+
+    def _served_fp(self) -> tuple:
+        """The fingerprint the *currently compiled* decode/legacy-prefill
+        traces serve (their snapshot, not the host-side activations —
+        during a drain window the two differ)."""
+        banks_all = self._served_bank_state()
+        fp = []
+        for name in sorted(self._acts):
+            banks = banks_all.get(name, {})
+            fp.append((name,
+                       np.asarray(self._served_ramps[name]).tobytes(),
+                       tuple((w, np.asarray(banks[w]).tobytes())
+                             for w in sorted(banks))))
+        return tuple(fp)
+
+    def _refresh_jit_selective(self):
+        """Bucket-aware re-jit after a chip re-program.
+
+        Drops (and eagerly re-AOTs) only the bucket executables whose
+        traced thresholds actually moved, and keeps the decode /
+        legacy-prefill traces when no threshold did — a weight-only
+        re-program passes params as runtime arguments, so its traces
+        still serve the current chip.  A recal storm therefore no longer
+        throws away every compiled prefill.  What happened lands in
+        ``last_invalidation`` (the fleet surfaces it on
+        ``reprogram_done`` events).
+        """
+        new_fp = self._threshold_fp()
+        warm = sorted(self._prefill_exec)
+        dropped = sorted(b for b, fp in self._exec_fp.items()
+                         if fp != new_fp)
+        kept = [b for b in warm if b not in dropped]
+        decode_rebuilt = self._served_fp() != new_fp
+        if decode_rebuilt:
+            keep_exec = {b: self._prefill_exec[b] for b in kept}
+            keep_fp = {b: self._exec_fp[b] for b in kept}
+            self._refresh_jit()
+            self._prefill_exec.update(keep_exec)
+            self._exec_fp.update(keep_fp)
+        else:
+            for b in dropped:
+                del self._prefill_exec[b]
+                del self._exec_fp[b]
+        for b in dropped:
+            # it was warm before the re-program — re-AOT now so the next
+            # admission wave doesn't pay the compile on the serving path
+            self._ensure_prefill_exec(b)
+        self.last_invalidation = {
+            "kept_buckets": kept, "dropped_buckets": dropped,
+            "decode_rebuilt": bool(decode_rebuilt)}
+
     def _next_key(self):
         if not self._noisy:
             return None
@@ -203,18 +507,18 @@ class ServingEngine:
         return next_tok, new_state
 
     def _prefill_slot(self, params, state, tokens, key, *, length: int):
-        """Feed a prompt through decode steps to fill the cache (exact)."""
+        """Feed a prompt through decode steps to fill the cache (exact).
 
-        if key is None:
-            def body(st, tok):
-                _, st = self.model.decode_step(params, st, tok[None, None])
-                return st, None
-
-            state, _ = jax.lax.scan(body, state, tokens[:length])
-            return state
+        Per-step noise keys fold the admission wave's key at the absolute
+        prompt position (``fold_in(key, t)``) — length-independent, and
+        the same schedule the bucketed/packed executables derive from the
+        global index, which is what makes the two prefill paths bitwise
+        interchangeable under noise.
+        """
 
         def body(st, inp):
-            tok, k = inp
+            t, tok = inp
+            k = None if key is None else jax.random.fold_in(key, t)
             _, st = self.model.decode_step(params, st, tok[None, None],
                                            key=k)
             return st, None
@@ -222,7 +526,7 @@ class ServingEngine:
         # note: fills batch slot 0 of a broadcast state; engine embeds the
         # single-request state into the big batch after (host-side gather).
         state, _ = jax.lax.scan(
-            body, state, (tokens[:length], jax.random.split(key, length)))
+            body, state, (jnp.arange(length), tokens[:length]))
         return state
 
     # -- host-side scheduling -------------------------------------------
@@ -259,53 +563,155 @@ class ServingEngine:
     def health(self) -> dict:
         """Cheap health snapshot for routing/planning (no fresh probes —
         INL comes from the scheduler's last recorded event)."""
+        sched = self.scheduler
         ev = {}
-        if self.scheduler is not None and self.scheduler.events:
-            ev = self.scheduler.events[-1]
+        if sched is not None and sched.events:
+            ev = sched.events[-1]
         return {
             "active": int(sum(not f for f in self.slot_free)),
             "queued": len(self.queue),
             "free_slots": int(sum(self.slot_free)),
-            "age_s": 0.0 if self.scheduler is None
-            else float(self.scheduler.age_s),
+            "age_s": 0.0 if sched is None else float(sched.age_s),
             "inl_lsb": float(ev.get("inl_after_lsb",
                                     ev.get("inl_lsb", 0.0))),
+            # probe freshness: engine steps since the INL above was
+            # recorded (-1: never probed) + the probe cadence, so routers
+            # can discount a health number that has gone stale
+            "inl_age_steps": int(sched.step_count - ev["step"]) if ev
+            else -1,
+            "check_every": 0 if sched is None
+            else int(sched.policy.check_every),
             "maintenance_pending": self.maintenance_pending,
             "draining": self.draining,
             "weight_gen": self._weight_gen,
         }
 
     def _admit(self):
-        """Prefill queued requests into free slots (simplified: per-request
-        single-slot prefill on a fresh state, then merged)."""
+        """Prefill queued requests into free slots.
+
+        One noise key per admission wave (drawn iff any admitted prompt
+        actually prefills), shared by every request admitted together —
+        all reads of one wave see the same physical chip instance, and
+        noise draws are weight-/threshold-shaped, never batch-shaped, so
+        the scan, bucketed, and packed paths consume the key schedule
+        identically (the parity anchor).
+        """
         if self._rejit_pending:
             # draining toward a planned re-jit: no new admissions — they
             # would keep the wave alive (and prefill on a chip about to be
             # re-programmed)
             return
+        admits = []
         for slot in range(self.max_batch):
             if not self.queue or not self.slot_free[slot]:
                 continue
-            req = self.queue.pop(0)
+            admits.append((slot, self.queue.pop(0)))
+        if not admits:
+            return
+        wave_key = self._next_key() if any(len(r.prompt) > 1
+                                           for _, r in admits) else None
+        if self.prefill_mode == "bucketed":
+            self._admit_bucketed(admits, wave_key)
+            return
+        for slot, req in admits:
             mini_state = self.model.init_decode_state(1, self.max_len)
-            mini_state = self._fill(mini_state, req.prompt)
-            self.slot_free[slot] = False
-            self.slot_req[slot] = req
-            # positions 0..len-2 are cached; the LAST prompt token decodes
-            # in the shared batch step at position len-1.
-            self.slot_pos[slot] = len(req.prompt) - 1
-            self.slot_last[slot] = int(req.prompt[-1])
+            mini_state = self._fill(mini_state, req.prompt, wave_key)
+            self._bookkeep_admit(slot, req)
             self._merge_slot(mini_state, slot)
 
-    def _fill(self, state, prompt):
+    def _fill(self, state, prompt, wave_key):
         # Jitted scan over the prompt (minus the last token, which decodes
         # in the shared batch step).  One compile per distinct prompt
-        # length; standard bucketing applies for production traffic.
+        # length; the bucketed path exists precisely to amortize that.
         if len(prompt) <= 1:
             return state
         tokens = jnp.asarray(np.asarray(prompt), jnp.int32)
-        return self._jit_prefill(self.params, state, tokens,
-                                 self._next_key(), length=len(prompt) - 1)
+        return self._jit_prefill(self.params, state, tokens, wave_key,
+                                 length=len(prompt) - 1)
+
+    def _bookkeep_admit(self, slot: int, req: Request):
+        self.slot_free[slot] = False
+        self.slot_req[slot] = req
+        # positions 0..len-2 are cached; the LAST prompt token decodes
+        # in the shared batch step at position len-1.
+        self.slot_pos[slot] = len(req.prompt) - 1
+        self._slot_ntok[slot] = len(req.generated or [])
+        self._set_slot_last(slot, int(req.prompt[-1]))
+
+    def _set_slot_last(self, slot: int, tok: int):
+        self.slot_last[slot] = tok
+        if self._detok is not None:
+            self._slot_last_dev = self._slot_last_dev.at[slot].set(tok)
+
+    def _admit_bucketed(self, admits, wave_key):
+        """Bucketed/packed admission: round the wave's longest prefill up
+        to a compiled bucket, run the whole wave through that executable
+        (packed: all rows in one call; unpacked: one row-call each), chunk
+        with repeated largest-bucket calls when the prompt is longer than
+        every bucket, then scatter the resulting cache rows into their
+        batch slots."""
+        groups = [admits] if self.pack_prefill else [[a] for a in admits]
+        P = self._pack_rows
+        for group in groups:
+            lens = [len(req.prompt) - 1 for _, req in group]
+            state = self._pack_template()
+            l_max = max(lens)
+            if l_max > 0:
+                toks = np.zeros((P, l_max), np.int32)
+                vlen = np.zeros((P,), np.int32)
+                for row, (_, req) in enumerate(group):
+                    toks[row, :lens[row]] = np.asarray(
+                        req.prompt[:lens[row]], np.int32)
+                    vlen[row] = lens[row]
+                vlen_j = jnp.asarray(vlen)
+                pos = 0
+                while pos < l_max:
+                    bucket = self._bucket_for(l_max - pos)
+                    ex = self._ensure_prefill_exec(bucket)
+                    chunk = np.zeros((P, bucket), np.int32)
+                    width = min(bucket, l_max - pos)
+                    chunk[:, :width] = toks[:, pos:pos + width]
+                    # the state's shared index carries the global position
+                    # between chunks (cache writes and the fold_in key
+                    # schedule both key off it)
+                    state = ex(self.params, state, jnp.asarray(chunk),
+                               vlen_j, wave_key)
+                    pos += bucket
+            for row, (slot, req) in enumerate(group):
+                self._bookkeep_admit(slot, req)
+            self._scatter_rows(state, [(row, slot) for row, (slot, _)
+                                       in enumerate(group)])
+            # global index = max over active slots, as in _merge_slot
+            self.state["index"] = jnp.maximum(
+                self.state["index"],
+                jnp.asarray(np.int32(max(self.slot_pos[slot]
+                                         for slot, _ in group))))
+
+    def _scatter_rows(self, mini, assign):
+        """Scatter pack rows into their batch slots (generalizing the
+        single-slot :meth:`_merge_slot` to a whole admission wave): per
+        leaf, gather the assigned rows along the batch axis and commit
+        them only at the assigned slots — exact copies, untouched slots
+        keep their in-flight state bit-for-bit."""
+        perm = np.zeros(self.max_batch, np.int64)
+        mask = np.zeros(self.max_batch, bool)
+        for row, slot in assign:
+            perm[slot] = row
+            mask[slot] = True
+        perm_j = jnp.asarray(perm)
+        mask_np = mask
+
+        def sel(big, small, ax):
+            if ax < 0:
+                return big        # shared leaves (index) set by the caller
+            rows = jnp.take(small, perm_j, axis=ax)
+            shape = [1] * big.ndim
+            shape[ax] = self.max_batch
+            return jnp.where(jnp.reshape(jnp.asarray(mask_np), shape),
+                             rows, big)
+
+        self.state = jax.tree.map(sel, self.state, mini,
+                                  self._batch_axes())
 
     def _merge_slot(self, mini_state, slot):
         """Copy the single-request cache into batch slot ``slot``."""
@@ -329,16 +735,32 @@ class ServingEngine:
             self.state["index"], jnp.asarray(self.slot_pos[slot]))
 
     def step(self) -> Dict[int, int]:
-        """One engine iteration: admit + decode. Returns {uid: token}."""
+        """One engine iteration: admit + decode. Returns {uid: token}.
+
+        With ``detok_thread`` the returned batch is one that LANDED from
+        an earlier step (at most one step of lag; {} while the first step
+        is still in flight) — :meth:`detok_flush` joins the backlog.
+        """
         if self._rejit_pending and all(self.slot_free):
             # the wave drained: apply the deferred chip re-program, then
             # resume admission on the fresh traces
             self._rejit_pending = False
             self._on_chip_reprogram()
+        if self._detok is not None:
+            self._reap_detok_eos()
         self._admit()
         active = [s for s in range(self.max_batch) if not self.slot_free[s]]
         if not active:
-            return {}
+            return self._drain_detok() if self._detok is not None else {}
+        out = self._step_detok(active) if self._detok is not None \
+            else self._step_sync(active)
+        if self.scheduler is not None and self.scheduler.tick():
+            self._handle_reprogram_due(active)
+        return out
+
+    def _step_sync(self, active) -> Dict[int, int]:
+        """The synchronous decode step: dispatch, block on the host
+        transfer, do the per-request bookkeeping inline."""
         tokens = jnp.asarray(self.slot_last[:, None], jnp.int32)
         positions = jnp.asarray(self.slot_pos, jnp.int32)
         next_tok, self.state = self._jit_decode(
@@ -352,30 +774,104 @@ class ServingEngine:
             out[req.uid] = tok
             self.slot_last[s] = tok
             self.slot_pos[s] += 1
+            self._slot_ntok[s] += 1
             done = (len(req.generated) >= req.max_new_tokens
                     or tok == req.eos_id
                     or self.slot_pos[s] >= self.max_len - 1)
             if done:
                 self.slot_free[s] = True
                 self.slot_req[s] = None
-        if self.scheduler is not None and self.scheduler.tick():
-            if self.external_maintenance:
-                # fleet mode: the planner decides WHEN this chip drains.
-                # Keep serving (and admitting) the old chip — physically
-                # the re-program is deferred — until begin_drain().
-                self._maint_pending = True
-            elif self.drain_before_rejit \
-                    and not all(self.slot_free[s] for s in active):
-                # planned re-jit: drain the in-flight wave first (the
-                # deployed thresholds moved host-side, but the compiled
-                # step keeps serving the old chip until the drain point)
-                self._rejit_pending = True
-            else:
-                # also settles any earlier deferral — one reprogram covers
-                # every threshold move up to the scheduler's current age
-                self._rejit_pending = False
-                self._on_chip_reprogram()
         return out
+
+    def _step_detok(self, active) -> Dict[int, int]:
+        """The pipelined decode step: dispatch against the device-side
+        last-token vector (no host sync), hand the result to the detok
+        worker, and return whatever batch already landed.
+
+        The done-by-count check runs on host counters (the worker owns
+        ``generated``); EOS detection necessarily lags one step — the
+        slot keeps decoding one speculative token (discarded by the
+        worker) and is reaped at the top of the next step.
+        """
+        tokens = self._slot_last_dev[:, None]
+        positions = jnp.asarray(self.slot_pos, jnp.int32)
+        next_tok, self.state = self._jit_decode(
+            self.params, self.state, tokens, positions, self._next_key())
+        mask = np.zeros(self.max_batch, bool)
+        for s in active:
+            mask[s] = True
+        self._slot_last_dev = jnp.where(jnp.asarray(mask), next_tok,
+                                        self._slot_last_dev)
+        self._detok.put(next_tok, [(s, self.slot_req[s]) for s in active])
+        for s in active:
+            self.slot_pos[s] += 1
+            self._slot_ntok[s] += 1
+            done = (self._slot_ntok[s] >= self.slot_req[s].max_new_tokens
+                    or self.slot_pos[s] >= self.max_len - 1)
+            if done:
+                # the worker still holds its reference; streams finish
+                # landing asynchronously
+                self.slot_free[s] = True
+                self.slot_req[s] = None
+        return self._drain_detok()
+
+    def _drain_detok(self) -> Dict[int, int]:
+        """At most one landed step batch, so a caller counting tokens as
+        ``len(step())`` per call stays exact across the pipeline lag."""
+        return self._detok.pop_one()
+
+    def _reap_detok_eos(self):
+        """Free slots whose request hit EOS (worker-detected, one step
+        after the synchronous path — the speculative extra token never
+        lands in ``generated``)."""
+        for slot, uid in self._detok.take_eos():
+            req = self.slot_req[slot]
+            if req is not None and req.uid == uid:
+                self.slot_free[slot] = True
+                self.slot_req[slot] = None
+
+    def detok_flush(self) -> List[Dict[int, int]]:
+        """Join the detokenize backlog (no-op without the thread): blocks
+        until every handed-off step has landed, re-syncs the host
+        last-token mirror, reaps any EOS that landed with the flush, and
+        returns the landed step batches."""
+        if self._detok is None:
+            return []
+        batches = self._detok.flush()
+        self.slot_last = np.asarray(self._slot_last_dev, np.int32).copy()
+        self._reap_detok_eos()
+        return batches
+
+    def shelf_tick(self, age_per_step_s: float) -> None:
+        """Advance the device clock for a chip serving NO traffic this
+        step (fleet shelf aging): an idle chip still sits powered in the
+        rack, so retention drift accrues and the probe cadence keeps
+        running — an unrouted canary can still fire its warning.  Same
+        tick/reprogram machinery as :meth:`step`, age rate overridden."""
+        if self.scheduler is None:
+            return
+        if self.scheduler.tick(age_per_step_s=age_per_step_s):
+            self._handle_reprogram_due([])
+
+    def _handle_reprogram_due(self, active):
+        """A scheduler tick crossed the probe cadence and the chip wants
+        re-programming; route it per the maintenance policy."""
+        if self.external_maintenance:
+            # fleet mode: the planner decides WHEN this chip drains.
+            # Keep serving (and admitting) the old chip — physically
+            # the re-program is deferred — until begin_drain().
+            self._maint_pending = True
+        elif self.drain_before_rejit \
+                and not all(self.slot_free[s] for s in active):
+            # planned re-jit: drain the in-flight wave first (the
+            # deployed thresholds moved host-side, but the compiled
+            # step keeps serving the old chip until the drain point)
+            self._rejit_pending = True
+        else:
+            # also settles any earlier deferral — one reprogram covers
+            # every threshold move up to the scheduler's current age
+            self._rejit_pending = False
+            self._on_chip_reprogram()
 
     def _on_chip_reprogram(self):
         """The scheduler moved the deployed thresholds (aging/recal).
@@ -396,9 +892,10 @@ class ServingEngine:
         sched = self.scheduler
         if sched is None:
             # externally-forced drain on a schedulerless chip (fleet smoke):
-            # nothing ages, the "re-program" is just a trace rebuild
+            # nothing ages, so the selective re-jit keeps every warm
+            # bucket and the compiled decode step
             self._maint_pending = False
-            self._refresh_jit()
+            self._refresh_jit_selective()
             return
         # After a restored drain window the activations hold the OLD
         # (served) thresholds; push the scheduler's current-age state
@@ -429,7 +926,10 @@ class ServingEngine:
                     self._pristine_params, generation=self._weight_gen,
                     leaf_overrides=self._tile_overrides_fn())
         self._maint_pending = False
-        self._refresh_jit()
+        # bucket-aware: only executables whose traced thresholds moved are
+        # dropped (a weight-only refresh keeps everything — params are
+        # runtime arguments, not constants)
+        self._refresh_jit_selective()
 
     def _per_tile_refresh_scope(self, stalled):
         """The bank keys eligible for a col-tile-scoped rewrite, or None.
@@ -498,12 +998,27 @@ class ServingEngine:
             if not self.queue and all(self.slot_free):
                 break
             n += len(self.step())
+        # join the detokenize backlog (the loop's last steps are still
+        # landing asynchronously) and count what it delivered
+        n += sum(len(batch) for batch in self.detok_flush())
         if self._rejit_pending and all(self.slot_free):
             # settle a deferred chip re-program once the last wave drained,
             # so the deployment doesn't idle on stale traces
             self._rejit_pending = False
             self._on_chip_reprogram()
         return n
+
+    def run_offline(self, requests=None, max_iters: int = 100_000) -> dict:
+        """MLPerf-offline-style measured run: submit the whole burst up
+        front, drain it, report wall-clock tokens/s.  Call :meth:`warmup`
+        first — compile time belongs outside the measurement."""
+        for req in (requests or []):
+            self.submit(req)
+        t0 = time.perf_counter()
+        n = self.run_to_completion(max_iters=max_iters)
+        dt = time.perf_counter() - t0
+        return {"tokens": int(n), "seconds": float(dt),
+                "tokens_per_s": float(n / dt) if dt > 0 else 0.0}
 
     # -- checkpoint / restore (repro.ckpt) ------------------------------
 
@@ -546,6 +1061,10 @@ class ServingEngine:
         """Atomic full-deployment checkpoint; returns the directory."""
         from repro.ckpt.checkpoint import save_checkpoint
 
+        # land the detokenize backlog first: `generated` streams and the
+        # host last-token mirror must be caught up with the device before
+        # they are written down
+        self.detok_flush()
         meta = {
             "schema": self.SCHEMA,
             "engine": {"max_batch": self.max_batch, "max_len": self.max_len},
@@ -578,7 +1097,11 @@ class ServingEngine:
     def restore(cls, model, root: str, *, step: Optional[int] = None,
                 params_like=None,
                 drain_before_rejit: bool = False,
-                external_maintenance: bool = False) -> "ServingEngine":
+                external_maintenance: bool = False,
+                prefill: str = "scan",
+                prefill_buckets=None,
+                pack_prefill: bool = False,
+                detok_thread: bool = False) -> "ServingEngine":
         """Resume a checkpointed deployment: same chip, same next token.
 
         ``params_like``: a pytree matching the model's params structure
@@ -621,7 +1144,9 @@ class ServingEngine:
                   max_batch=meta["engine"]["max_batch"],
                   max_len=meta["engine"]["max_len"],
                   drain_before_rejit=drain_before_rejit,
-                  external_maintenance=external_maintenance)
+                  external_maintenance=external_maintenance,
+                  prefill=prefill, prefill_buckets=prefill_buckets,
+                  pack_prefill=pack_prefill, detok_thread=detok_thread)
         # Realize the checkpointed bank inventory BEFORE building the
         # restore template, so the leaf paths line up with the save — and
         # fail with a clear bank_cols hint in BOTH mismatch directions
@@ -670,6 +1195,13 @@ class ServingEngine:
         eng.slot_req = [None if d is None else Request.from_dict(d)
                         for d in meta["requests"]["slots"]]
         eng.queue = [Request.from_dict(d) for d in meta["requests"]["queue"]]
+        # throughput-path mirrors: the checkpoint was flushed at save, so
+        # the host arrays are authoritative (any prefill/detok mode can
+        # resume any checkpoint — the modes share one state layout)
+        if eng._detok is not None:
+            eng._slot_last_dev = jnp.asarray(eng.slot_last, jnp.int32)
+        for s, req in enumerate(eng.slot_req):
+            eng._slot_ntok[s] = 0 if req is None else len(req.generated)
         if meta["device"] is not None:
             eng.device = device_from_dict(meta["device"])
         # Reprogram the chip exactly as checkpointed.

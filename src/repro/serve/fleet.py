@@ -56,11 +56,17 @@ class FleetPolicy:
     ``router``           admission policy, one of :data:`ROUTERS`.
     ``canary_tighten``   divisor applied to sibling ``check_every`` when a
                          canary fires its early warning (1 disables).
+    ``shelf_age_per_step_s``  wall-clock aging applied to chips serving NO
+                         traffic on a fleet step (0 disables).  Drift does
+                         not care about load: a powered idle chip — in
+                         particular an unrouted canary — keeps aging and
+                         keeps probing, so its early warning still fires.
     """
 
     capacity_floor: float = 0.75
     router: str = "least-loaded"
     canary_tighten: int = 2
+    shelf_age_per_step_s: float = 0.0
 
     def __post_init__(self):
         if not 0.0 <= self.capacity_floor <= 1.0:
@@ -69,6 +75,9 @@ class FleetPolicy:
         if self.router not in ROUTERS:
             raise ValueError(f"unknown router {self.router!r}; "
                              f"one of {ROUTERS}")
+        if self.shelf_age_per_step_s < 0:
+            raise ValueError(f"shelf_age_per_step_s must be >= 0, got "
+                             f"{self.shelf_age_per_step_s}")
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -207,7 +216,9 @@ class FleetEngine:
     @classmethod
     def build(cls, cfg, n_chips: int, *, policy: FleetPolicy = FleetPolicy(),
               recal=None, max_batch: int = 2, max_len: int = 64,
-              canary_presets=(), params=None, noise_seed: int = 0
+              canary_presets=(), params=None, noise_seed: int = 0,
+              prefill: str = "scan", prefill_buckets=None,
+              pack_prefill: bool = False, detok_thread: bool = False
               ) -> "FleetEngine":
         """Instantiate a fresh fleet of ``n_chips`` for one model config.
 
@@ -215,7 +226,9 @@ class FleetEngine:
         those device presets; the rest inherit ``cfg.analog.device``.
         ``params`` (pristine, pre-aging) is shared — chips differ by their
         device draws, not their trained weights; default is
-        ``model.init(PRNGKey(0))`` built once.
+        ``model.init(PRNGKey(0))`` built once.  The throughput knobs
+        (``prefill`` / ``prefill_buckets`` / ``pack_prefill`` /
+        ``detok_thread``) pass through to every chip's engine.
         """
         if n_chips < 1:
             raise ValueError(f"n_chips must be >= 1, got {n_chips}")
@@ -235,13 +248,17 @@ class FleetEngine:
         for spec in specs:
             chip, params = cls._build_chip(
                 cfg, spec, recal=recal, max_batch=max_batch,
-                max_len=max_len, params=params, noise_seed=noise_seed)
+                max_len=max_len, params=params, noise_seed=noise_seed,
+                prefill=prefill, prefill_buckets=prefill_buckets,
+                pack_prefill=pack_prefill, detok_thread=detok_thread)
             chips[spec.chip_id] = chip
         return cls(chips, policy, recal=recal)
 
     @staticmethod
     def _build_chip(cfg, spec: ChipSpec, *, recal, max_batch, max_len,
-                    params, noise_seed, device_dict=None):
+                    params, noise_seed, device_dict=None,
+                    prefill: str = "scan", prefill_buckets=None,
+                    pack_prefill: bool = False, detok_thread: bool = False):
         """Realize one chip (device, model, engine); returns (chip, params)
         with params initialized on first use so the fleet shares one tree.
 
@@ -275,7 +292,9 @@ class FleetEngine:
             model, params, max_batch=max_batch, max_len=max_len,
             device=dev, recal=recal,
             noise_seed=noise_seed ^ zlib.crc32(spec.chip_id.encode()),
-            external_maintenance=True)
+            external_maintenance=True,
+            prefill=prefill, prefill_buckets=prefill_buckets,
+            pack_prefill=pack_prefill, detok_thread=detok_thread)
         return Chip(spec, dev, model, engine), params
 
     # -- routing -----------------------------------------------------------
@@ -307,10 +326,21 @@ class FleetEngine:
         if self.policy.router == "least-loaded":
             return min(open_ids, key=lambda c: (load(c), c))
         # health-weighted: prefer lightly-loaded AND in-spec chips — a chip
-        # probing near the INL threshold costs more per queued request
+        # probing near the INL threshold costs more per queued request.
+        # The INL term is freshness-discounted: a probe older than the
+        # cadence (check_every) decays linearly to zero over one more
+        # cadence, so a stale reading cannot keep steering traffic away
+        # from (or toward) a chip whose drift has since moved on.
         def score(cid):
             h = self.chips[cid].engine.health()
-            return (h["active"] + h["queued"] + 1) * (1.0 + h["inl_lsb"])
+            age, ce = h["inl_age_steps"], h["check_every"]
+            if age < 0 or ce <= 0:
+                w = 0.0                       # never probed: no INL signal
+            elif age <= ce:
+                w = 1.0
+            else:
+                w = max(0.0, 1.0 - (age - ce) / ce)
+            return (h["active"] + h["queued"] + 1) * (1.0 + w * h["inl_lsb"])
 
         return min(open_ids, key=lambda c: (score(c), c))
 
@@ -330,14 +360,33 @@ class FleetEngine:
         """
         self.step_count += 1
         out: Dict[int, int] = {}
+        shelf: List[str] = []
         for cid, chip in self.chips.items():
+            # an idle chip never reaches its engine's scheduler tick (the
+            # step returns before decoding) — shelf-age it instead, so an
+            # unrouted canary still drifts, probes, and warns
+            idle = not chip.engine.queue and all(chip.engine.slot_free)
             toks = chip.engine.step()
             for uid in toks:
                 if uid not in self._first_tok_step:
                     self._first_tok_step[uid] = self.step_count
             out.update(toks)
+            if idle and not toks:
+                shelf.append(cid)
         self._update_maintenance()
+        # shelf-age AFTER the maintenance loop: a chip that re-programmed
+        # at the top of this step must close its planner window before a
+        # fresh shelf tick may raise the next one (else the window never
+        # completes and the capacity floor wedges the whole fleet)
+        if self.policy.shelf_age_per_step_s > 0:
+            for cid in shelf:
+                self.chips[cid].engine.shelf_tick(
+                    self.policy.shelf_age_per_step_s)
         return out
+
+    def warmup(self) -> Dict[str, dict]:
+        """Pre-compile every chip's bucket executables + decode step."""
+        return {cid: c.engine.warmup() for cid, c in self.chips.items()}
 
     def run_to_completion(self, max_iters: int = 10_000) -> int:
         n = 0
@@ -355,7 +404,13 @@ class FleetEngine:
         for cid in list(self.planner.draining):
             if not self.chips[cid].engine.maintenance_pending:
                 self.planner.complete(cid)
-                self._event("reprogram_done", chip=cid)
+                # bucket-aware re-jit observability: which AOT prefill
+                # executables the re-program kept vs re-compiled
+                inval = self.chips[cid].engine.last_invalidation or {}
+                self._event(
+                    "reprogram_done", chip=cid,
+                    buckets_kept=list(inval.get("kept_buckets", [])),
+                    buckets_dropped=list(inval.get("dropped_buckets", [])))
         for cid, chip in self.chips.items():
             if chip.engine.maintenance_pending and not chip.engine.draining:
                 if self.planner.request(cid):

@@ -308,17 +308,24 @@ class RecalScheduler:
 
     # -- the serving loop hook --------------------------------------------
 
-    def tick(self, n_steps: int = 1) -> bool:
+    def tick(self, n_steps: int = 1, *,
+             age_per_step_s: Optional[float] = None) -> bool:
         """Advance ``n_steps`` engine steps; probe/recalibrate on cadence.
 
         A probe fires whenever the step counter *crosses* a multiple of
         ``check_every`` (once per tick, even if a large ``n_steps`` crosses
         several), so batched callers can't silently skip a due probe.
         Returns True when deployed thresholds changed (re-jit required).
+
+        ``age_per_step_s`` overrides the policy's per-step age rate for
+        THIS tick only — fleet shelf aging uses it to age a chip that is
+        powered but serving no traffic (drift doesn't care about load).
         """
         prev = self.step_count
         self.step_count += n_steps
-        self.age_s += self.policy.age_per_step_s * n_steps
+        rate = self.policy.age_per_step_s if age_per_step_s is None \
+            else float(age_per_step_s)
+        self.age_s += rate * n_steps
         if self.policy.check_every <= 0 \
                 or self.step_count // self.policy.check_every \
                 == prev // self.policy.check_every:

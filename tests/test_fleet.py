@@ -508,3 +508,112 @@ def test_fleet_restart_bitwise_reproducible(backend, tmp_path):
     assert resumed["events"] == full["events"]
     # every chip's probe/recal trace is the uninterrupted one
     assert resumed["sched"] == full["sched"]
+
+
+# ---------------------------------------------------------------------------
+# Shelf aging (idle chips keep drifting) + probe-freshness routing
+# ---------------------------------------------------------------------------
+
+
+def test_shelf_aging_wakes_idle_canary():
+    """Chips only tick their scheduler on steps where they decode, so an
+    unrouted canary never ages and never warns — unless the fleet policy
+    applies shelf aging to idle chips."""
+    import dataclasses as _dc
+
+    cfg = configs.get_smoke("qwen2.5-3b").replace(
+        dtype="float32",
+        analog=AnalogSpec(enabled=True, mode="infer", device="aged-1day"))
+    pol = RecalPolicy(age_per_step_s=5e4, check_every=2,
+                      inl_threshold_lsb=0.05)
+    fleet = FleetEngine.build(
+        cfg, 3, policy=FleetPolicy(router="round-robin"), recal=pol,
+        max_batch=1, max_len=32, canary_presets=("stressed",))
+    # default policy (shelf_age 0): no traffic -> no aging, no probes,
+    # no warning — the silent-canary failure mode
+    for _ in range(6):
+        fleet.step()
+    assert fleet.events == []
+    assert all(c.engine.scheduler.step_count == 0
+               for c in fleet.chips.values())
+    # shelf aging on: the still-idle canary drifts, probes, recals, warns
+    fleet.policy = _dc.replace(fleet.policy, shelf_age_per_step_s=5e4)
+    for _ in range(12):
+        fleet.step()
+    kinds = [e["type"] for e in fleet.events]
+    assert "canary_warning" in kinds
+    warn = next(e for e in fleet.events if e["type"] == "canary_warning")
+    assert warn["chip"] == "chip02"
+    assert all(c.engine.scheduler.age_s > 0 for c in fleet.chips.values())
+    # the maintenance loop runs for idle chips too, and reprogram_done
+    # carries the bucket-invalidation observability payload
+    fleet.run_to_completion()
+    for _ in range(8):
+        fleet.step()
+    done = [e for e in fleet.events if e["type"] == "reprogram_done"]
+    assert done and {"buckets_kept", "buckets_dropped"} <= set(done[0])
+
+
+def test_fleet_policy_rejects_negative_shelf_age():
+    with pytest.raises(ValueError, match="shelf_age_per_step_s"):
+        FleetPolicy(shelf_age_per_step_s=-1.0)
+
+
+def test_health_reports_probe_freshness():
+    """health() exposes how stale the last INL probe is (in engine steps)
+    plus the probe cadence, so routers can discount old readings."""
+    cfg = configs.get_smoke("qwen2.5-3b").replace(
+        dtype="float32",
+        analog=AnalogSpec(enabled=True, mode="infer", device="aged-1day"))
+    model = build(cfg)
+    params = jax.tree.map(np.asarray, model.init(jax.random.PRNGKey(0)))
+    pol = RecalPolicy(age_per_step_s=1.0, check_every=3,
+                      inl_threshold_lsb=100.0)      # probe, never recal
+    eng = ServingEngine(model, params, max_batch=1, max_len=32,
+                        device=get_device("aged-1day"), recal=pol)
+    h = eng.health()
+    assert h["inl_age_steps"] == -1 and h["check_every"] == 3
+    eng.submit(Request(uid=0, prompt=np.asarray([1, 2, 3], np.int32),
+                       max_new_tokens=7))
+    eng.run_to_completion()
+    sched = eng.scheduler
+    assert sched.events                              # probes fired
+    h = eng.health()
+    assert h["inl_age_steps"] == sched.step_count - sched.events[-1]["step"]
+    assert 0 <= h["inl_age_steps"] < 3
+
+
+def test_health_weighted_router_discounts_stale_probes(exact_fleet):
+    """The health-weighted router's INL term decays once the probe is
+    older than check_every (linearly to zero over one more cadence) and
+    is ignored entirely for a never-probed chip."""
+    _, fleet = exact_fleet
+    fleet.policy = FleetPolicy(router="health-weighted")
+    engines = [fleet.chips[c].engine for c in ("chip00", "chip01", "chip02")]
+    saved = [e.health for e in engines]
+
+    def fake(inl, age, ce=4):
+        return lambda: {"active": 0, "queued": 0, "inl_lsb": inl,
+                        "inl_age_steps": age, "check_every": ce}
+
+    try:
+        engines[2].health = fake(1.5, 1)         # fixed mid score (2.5)
+        # fresh high-INL chip loses to a fresh clean chip
+        engines[0].health = fake(2.0, 1)
+        engines[1].health = fake(0.0, 1)
+        assert fleet._route() == "chip01"
+        # probe staler than 2x cadence: INL fully discounted -> tie on
+        # score, lowest id wins despite the (stale) high reading
+        engines[0].health = fake(2.0, 9)
+        assert fleet._route() == "chip00"
+        # half-stale: w = 0.5, so INL 2.0 scores like a fresh 1.0
+        engines[0].health = fake(2.0, 6)
+        engines[1].health = fake(1.0, 1)
+        assert fleet._route() == "chip00"            # tie -> lowest id
+        # never probed: no INL signal at all
+        engines[0].health = fake(5.0, -1)
+        engines[1].health = fake(0.0, 1)
+        assert fleet._route() == "chip00"
+    finally:
+        for eng, h in zip(engines, saved):
+            eng.health = h
