@@ -20,7 +20,11 @@ Recorded per cell:
                           planner invariant says it never drops below the
                           floor;
 * maintenance event counts (requests / drains / reprograms / canary
-  warnings) from the fleet event trace.
+  warnings) from the fleet event trace;
+* per-chip **costed energy efficiency** from ``repro.obs.energy`` —
+  tokens-per-joule and TOPS/W under the NL-ADC periphery vs the digital
+  LUT baseline, plus their energy ratio (deterministic: token counts ×
+  the hwcost price, no wall clock involved).
 
 Writes ``benchmarks/BENCH_fleet.json`` as the recorded baseline for
 ``benchmarks.fleet_gate``.
@@ -93,6 +97,18 @@ def _cell(n_chips: int, floor: float) -> dict:
         counts[ev["type"]] = counts.get(ev["type"], 0) + 1
     assert min_frac >= 1.0 - math.ceil(
         n_chips * (1.0 - floor)) / n_chips - 1e-9, (min_frac, n_chips, floor)
+    energy = {}
+    for cid, rep in sorted(fleet.energy_report().items()):
+        energy[cid] = {
+            "generated_tokens": rep["generated_tokens"],
+            "nladc_tokens_per_joule": round(
+                rep["nladc"]["tokens_per_joule"], 1),
+            "nladc_tops_per_w": round(rep["nladc"]["tops_per_w"], 2),
+            "digital_lut_tops_per_w": round(
+                rep["digital_lut"]["tops_per_w"], 2),
+            "nladc_vs_digital_energy": round(
+                rep.get("nladc_vs_digital_energy", 0.0), 4),
+        }
     return {
         "tokens_total": tokens,
         "steps_total": fleet.step_count,
@@ -100,6 +116,7 @@ def _cell(n_chips: int, floor: float) -> dict:
         "p95_admission_steps": _p95(fleet.admission_latency_steps()),
         "min_accepting_frac": round(min_frac, 4),
         "events": counts,
+        "energy": energy,
     }
 
 
@@ -117,6 +134,12 @@ def run(quick=True):
                   f"p95 admission {cell['p95_admission_steps']:.0f} steps  "
                   f"min capacity {cell['min_accepting_frac']:.2f}  "
                   f"events {cell['events']}")
+            for cid, e in cell["energy"].items():
+                print(f"    {cid}: {e['generated_tokens']} tok, "
+                      f"{e['nladc_tokens_per_joule']:.0f} tok/J, "
+                      f"nladc {e['nladc_tops_per_w']:.1f} TOPS/W vs "
+                      f"digital {e['digital_lut_tops_per_w']:.1f} "
+                      f"(energy ratio {e['nladc_vs_digital_energy']:.3f})")
 
     results = {"quick": quick, "max_new": MAX_NEW,
                "reqs_per_chip": REQS_PER_CHIP, "cells": cells}

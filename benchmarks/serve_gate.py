@@ -16,7 +16,11 @@ code 1 — when the throughput path regresses against the committed
   ``--min-speedup`` (hard floor, default 1.5x) AND above the baseline
   ratio scaled by ``--tol-speedup`` — the ratio is scan-normalized on
   the same machine in the same process, so it gates compile-amortization
-  and packing without ever diffing wall-clock seconds across machines.
+  and packing without ever diffing wall-clock seconds across machines;
+* the ``bucketed_pack_obs`` cell (full ``repro.obs`` tracing + metrics +
+  energy counters) must hold >= ``--min-obs-ratio`` (default 0.95) of
+  the plain bucketed cell's tokens/s — observability stays under 5%
+  throughput overhead, measured same-run/same-machine.
 
 Raw ``tokens_per_s`` is recorded in the baseline but never diffed.
 """
@@ -34,7 +38,7 @@ BASELINE = os.path.join(os.path.dirname(__file__), "BENCH_serve.json")
 
 
 def compare(results: dict, baseline: dict, min_speedup: float,
-            tol_speedup: float) -> list:
+            tol_speedup: float, min_obs_ratio: float = 0.95) -> list:
     failures = []
     want_cells, got_cells = baseline["cells"], results["cells"]
     for key in sorted(set(want_cells) ^ set(got_cells)):
@@ -67,6 +71,13 @@ def compare(results: dict, baseline: dict, min_speedup: float,
             f"{floor:.2f}x (hard floor {min_speedup:.2f}x, baseline "
             f"{want_ratio:.2f}x scaled by {tol_speedup:.2f}) — AOT bucket "
             "amortization or packing regressed")
+
+    obs_ratio = results.get("obs_overhead", 0.0)
+    if obs_ratio < min_obs_ratio:
+        failures.append(
+            f"obs overhead: bucketed_pack_obs runs at {obs_ratio:.3f}x of "
+            f"bucketed_pack, below {min_obs_ratio:.2f}x — observability "
+            "instrumentation costs more than its throughput budget")
     return failures
 
 
@@ -79,6 +90,9 @@ def main() -> int:
                     help="fraction of the baseline ratio that must be "
                          "retained (ratios vary with CI load; the hard "
                          "floor is the real gate)")
+    ap.add_argument("--min-obs-ratio", type=float, default=0.95,
+                    help="floor on bucketed_pack_obs/bucketed_pack "
+                         "tokens/s — full observability must cost < 5%%")
     args = ap.parse_args()
 
     with open(BASELINE) as f:
@@ -88,7 +102,8 @@ def main() -> int:
               "the gate compares a quick run against it")
     results = serve_throughput.run(quick=True)
 
-    failures = compare(results, baseline, args.min_speedup, args.tol_speedup)
+    failures = compare(results, baseline, args.min_speedup,
+                       args.tol_speedup, args.min_obs_ratio)
     if failures:
         print(f"\n[serve-gate] FAIL — {len(failures)} deltas over "
               "tolerance vs benchmarks/BENCH_serve.json:")
@@ -98,9 +113,9 @@ def main() -> int:
               "baseline: rm benchmarks/BENCH_serve.json && PYTHONPATH=src "
               "python -m benchmarks.run --only serve_throughput")
         return 1
-    print("\n[serve-gate] OK — offline serving parity bitwise and speedup "
+    print("\n[serve-gate] OK — offline serving parity bitwise, speedup "
           f"{results['speedup']['bucketed_pack']:.1f}x within tolerance of "
-          "BENCH_serve.json")
+          f"BENCH_serve.json, obs overhead {results['obs_overhead']:.3f}x")
     return 0
 
 

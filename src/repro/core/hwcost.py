@@ -194,6 +194,41 @@ def conventional_macro(n_rows: int, n_cols: int, *, bits_in: int = 5,
     return MacroCost(name, modules, latency, 2 * n_rows * n_cols)
 
 
+def digital_lut_macro(n_rows: int, n_cols: int, *, bits_in: int = 5,
+                      bits_out: int = 5, phases: int = 1,
+                      n_crossbars: int = 1, k_procs: int = 1,
+                      name: str = "digital-lut") -> MacroCost:
+    """NEON-style digital baseline (arXiv 2211.05730): crossbar MAC +
+    conventional ramp ADC + a digital LUT activation unit.
+
+    A LUT lookup retires one activation per processor cycle (``n_cyc=1``
+    vs the iterative CORDIC/Taylor ``n_cyc=2`` of :func:`conventional_
+    macro`) — the *cheapest* digital nonlinearity, which makes it the
+    honest baseline for the NL-ADC's ramp+comparator periphery: any
+    energy win priced against it survives a LUT rebuttal.  Used by
+    ``repro.obs.energy`` to cost served tokens under both peripheries.
+    """
+    return conventional_macro(n_rows, n_cols, bits_in=bits_in,
+                              bits_out=bits_out, phases=phases,
+                              n_crossbars=n_crossbars, k_procs=k_procs,
+                              n_cyc=1, with_nl=True, name=name)
+
+
+# Published calibration anchors for the obs energy counters: the serving
+# stack's TOPS/W must land inside the bracket real silicon publishes.
+# * NL-CIM (arXiv 2512.06362): 65 nm LSTM macro with in-memory nonlinear
+#   conversion — 33.6 TOPS/W dense to 136.2 TOPS/W sparse-optimized.
+# * NEON (arXiv 2211.05730): 28 nm digital LUT-based NLFA accelerator —
+#   the digital baseline's efficiency class (order 1-10 TOPS/W at macro
+#   level once the ADC is included).
+CALIBRATION_TARGETS = {
+    "nlcim_65nm": dict(source="arXiv 2512.06362", tech_nm=65,
+                       tops_per_w_min=33.6, tops_per_w_max=136.2),
+    "neon_digital": dict(source="arXiv 2211.05730", tech_nm=28,
+                         tops_per_w_min=0.5, tops_per_w_max=10.0),
+}
+
+
 def lstm_elementwise_tail(n_hidden: int, n_procs: int,
                           name: str = "LSTM elementwise") -> MacroCost:
     """Digital pipeline for Eq. (S3) (pointwise mults + tanh), Fig. S6."""

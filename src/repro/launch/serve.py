@@ -114,6 +114,22 @@ def main():
     ap.add_argument("--force-drain-step", type=int, default=0,
                     help="fleet: force a maintenance request on the first "
                          "chip at this step (CI smoke for the drain path)")
+    ap.add_argument("--metrics-dir", default="",
+                    help="observability: write the metrics registry here at "
+                         "exit (metrics.json snapshot + metrics.prom "
+                         "Prometheus text)")
+    ap.add_argument("--trace", default="",
+                    help="observability: record the span/event trace and "
+                         "write it to this JSONL path at exit (step-clock "
+                         "primary — seeded runs emit bitwise-identical "
+                         "traces; replay with python -m repro.obs.replay)")
+    ap.add_argument("--trace-wall-clock", action="store_true",
+                    help="add wall_s/wall_dur_s fields to --trace entries "
+                         "(off by default: wall fields break trace "
+                         "bitwise-reproducibility)")
+    ap.add_argument("--prom", action="store_true",
+                    help="observability: print the Prometheus text "
+                         "exposition at exit")
     args = ap.parse_args()
 
     if args.pack_prefill and not args.prefill_buckets:
@@ -143,8 +159,12 @@ def main():
         spec_kw["bank_cols"] = args.bank_cols
     if spec_kw:
         cfg = cfg.replace(analog=dataclasses.replace(cfg.analog, **spec_kw))
+    from repro.obs import Obs
+
+    obs = Obs(trace=bool(args.trace), wall_clock=args.trace_wall_clock)
     if args.fleet:
-        _serve_fleet(ap, args, cfg, prefill_kw)
+        _serve_fleet(ap, args, cfg, prefill_kw, obs)
+        _export_obs(args, obs)
         return
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -175,7 +195,8 @@ def main():
             ap.error("--resume requires --ckpt-dir")
         engine = ServingEngine.restore(
             model, args.ckpt_dir, params_like=params,
-            drain_before_rejit=args.drain_before_rejit, **prefill_kw)
+            drain_before_rejit=args.drain_before_rejit, obs=obs,
+            **prefill_kw)
         sched = engine.scheduler
         if recal is not None:
             if sched is None:
@@ -193,7 +214,7 @@ def main():
                                max_len=args.max_len, device=device,
                                recal=recal,
                                drain_before_rejit=args.drain_before_rejit,
-                               **prefill_kw)
+                               obs=obs, **prefill_kw)
 
     rng = np.random.default_rng(0)
     reqs = []
@@ -213,6 +234,22 @@ def main():
         print(f"[serve] offline: {args.requests} requests, "
               f"{n_tokens} tokens in {dt:.2f}s "
               f"({stats['tokens_per_s']:.1f} tok/s, warmup excluded)")
+        for key, unit in (("ttft_steps", "steps"), ("ttft_ms", "ms"),
+                          ("itl_steps", "steps"), ("itl_ms", "ms")):
+            s = stats[key]
+            what = "TTFT" if key.startswith("ttft") else "ITL"
+            print(f"[serve] {what:4s} ({unit}): p50 {s['p50']:.3f}  "
+                  f"p95 {s['p95']:.3f}  p99 {s['p99']:.3f}  "
+                  f"(n={s['count']})")
+        e = stats["energy"]
+        for variant in ("nladc", "digital_lut"):
+            v = e[variant]
+            print(f"[serve] energy[{variant}]: {v['energy_j']:.3e} J, "
+                  f"{v['tokens_per_joule']:.3e} tok/J, "
+                  f"{v['tops_per_w']:.1f} TOPS/W")
+        if "nladc_vs_digital_energy" in e:
+            print(f"[serve] nladc / digital-LUT energy: "
+                  f"{e['nladc_vs_digital_energy']:.3f}x")
     else:
         for req in reqs:
             engine.submit(req)
@@ -247,9 +284,34 @@ def main():
             step = (prev[-1] if prev else 0) + n_tokens
         out = engine.save(args.ckpt_dir, step=step)
         print(f"[serve] deployment checkpointed to {out}")
+    _export_obs(args, obs)
 
 
-def _serve_fleet(ap, args, cfg, prefill_kw):
+def _export_obs(args, obs) -> None:
+    """Flush the run's observability per the CLI flags (trace JSONL,
+    metrics dir, Prometheus stdout)."""
+    import os
+
+    if args.trace:
+        os.makedirs(os.path.dirname(os.path.abspath(args.trace)),
+                    exist_ok=True)
+        obs.tracer.write_jsonl(args.trace)
+        print(f"[serve] trace: {len(obs.tracer.entries)} entries -> "
+              f"{args.trace}")
+    if args.metrics_dir:
+        os.makedirs(args.metrics_dir, exist_ok=True)
+        jpath = os.path.join(args.metrics_dir, "metrics.json")
+        with open(jpath, "w") as f:
+            f.write(obs.metrics.dump_json())
+        ppath = os.path.join(args.metrics_dir, "metrics.prom")
+        with open(ppath, "w") as f:
+            f.write(obs.metrics.to_prometheus())
+        print(f"[serve] metrics -> {jpath} + {ppath}")
+    if args.prom:
+        print(obs.metrics.to_prometheus(), end="")
+
+
+def _serve_fleet(ap, args, cfg, prefill_kw, obs):
     """The --fleet path: N chips, router, planner, canaries, manifest."""
     from repro.serve.fleet import ROUTERS, FleetEngine, FleetPolicy
 
@@ -272,7 +334,7 @@ def _serve_fleet(ap, args, cfg, prefill_kw):
     if args.resume:
         if not args.ckpt_dir:
             ap.error("--resume requires --ckpt-dir")
-        fleet = FleetEngine.restore(cfg, args.ckpt_dir)
+        fleet = FleetEngine.restore(cfg, args.ckpt_dir, obs=obs)
         print(f"[serve] resumed fleet of {len(fleet.chips)} chips from "
               f"{args.ckpt_dir} (step {fleet.step_count}, "
               f"{len(fleet.events)} events)")
@@ -280,7 +342,7 @@ def _serve_fleet(ap, args, cfg, prefill_kw):
         fleet = FleetEngine.build(
             cfg, args.fleet, policy=policy, recal=recal,
             max_batch=args.max_batch, max_len=args.max_len,
-            canary_presets=tuple(args.canary), **prefill_kw)
+            canary_presets=tuple(args.canary), obs=obs, **prefill_kw)
         roles = ", ".join(
             f"{cid}{' (canary: ' + c.device.name + ')' if c.spec.canary else ''}"
             for cid, c in fleet.chips.items())
@@ -329,6 +391,12 @@ def _serve_fleet(ap, args, cfg, prefill_kw):
     for cid, h in fleet.health().items():
         print(f"  {cid}: age {h['age_s']:.0f}s  INL {h['inl_lsb']:.3f} LSB  "
               f"weight_gen {h['weight_gen']}")
+    for cid, e in fleet.energy_report().items():
+        nl = e["nladc"]
+        print(f"  {cid}: energy {nl['energy_j']:.3e} J  "
+              f"{nl['tokens_per_joule']:.3e} tok/J  "
+              f"{nl['tops_per_w']:.1f} TOPS/W (nl-adc; digital-LUT "
+              f"{e['digital_lut']['tops_per_w']:.1f} TOPS/W)")
     if args.ckpt_dir:
         out = fleet.save(args.ckpt_dir, fleet.step_count)
         print(f"[serve] fleet checkpointed to {out}")

@@ -203,7 +203,9 @@ class ServingEngine:
                  prefill: str = "scan",
                  prefill_buckets=None,
                  pack_prefill: bool = False,
-                 detok_thread: bool = False):
+                 detok_thread: bool = False,
+                 obs=None):
+        from repro.obs import ChipEnergyModel, EnergyMeter, Obs
         from repro.serve.lifecycle import RecalScheduler, analog_activations
 
         if prefill not in ("scan", "bucketed"):
@@ -290,6 +292,45 @@ class ServingEngine:
         self._detok = _DetokWorker() if detok_thread else None
         self._slot_last_dev = jnp.asarray(self.slot_last, jnp.int32) \
             if detok_thread else None
+        # -- observability (repro.obs): tracer + metrics + energy ----------
+        # The step clock: ordinal of the next step() call.  Everything the
+        # obs layer records is keyed on it (never on wall time), which is
+        # what makes seeded traces bitwise-reproducible; checkpointed so a
+        # restored deployment continues the clock, not restarts it.
+        self.obs = obs if obs is not None else Obs()
+        self._step_ord = 0
+        self._submit_ord: Dict[int, int] = {}       # uid -> submit step
+        self._submit_wall: Dict[int, float] = {}
+        self._slot_last_tok_ord = np.zeros(max_batch, np.int64)
+        self._slot_last_tok_wall = np.zeros(max_batch, np.float64)
+        o = self.obs
+        self._m_tokens = o.counter("serve.tokens_total")
+        self._m_submitted = o.counter("serve.requests_submitted")
+        self._m_admitted = o.counter("serve.requests_admitted")
+        self._m_finished = o.counter("serve.requests_finished")
+        self._m_queue_wait = o.histogram("serve.queue_wait_steps")
+        self._m_ttft = o.histogram("serve.ttft_steps")
+        self._m_itl = o.histogram("serve.itl_steps")
+        self._m_ttft_ms = o.histogram("serve.ttft_ms")
+        self._m_itl_ms = o.histogram("serve.itl_ms")
+        self._m_bucket_hit = o.counter("serve.prefill_bucket_hits")
+        self._m_bucket_compile = o.counter("serve.prefill_bucket_compiles")
+        self._m_reprograms = o.counter("serve.reprograms")
+        self._m_buckets_dropped = o.counter("serve.prefill_buckets_dropped")
+        self._m_decode_rebuilds = o.counter("serve.decode_rebuilds")
+        # Per-chip energy: price the served params under both peripheries
+        # (NL-ADC vs digital-LUT baseline); counters accumulate per
+        # processed token so run_offline / fleet sweeps report tok/J.
+        self.energy = EnergyMeter(
+            ChipEnergyModel.price(
+                self.params,
+                bits=spec.adc_bits if spec is not None else 5,
+                bank_cols=spec.bank_cols if spec is not None else 0,
+                redundancy=getattr(getattr(device, "redundancy", None),
+                                   "n_copies", 1)),
+            o.metrics, chip=o.chip)
+        if self.scheduler is not None:
+            self.scheduler.obs = self.obs
         self._refresh_jit()
 
     def _refresh_jit(self):
@@ -393,7 +434,9 @@ class ServingEngine:
         """
         ex = self._prefill_exec.get(bucket)
         if ex is not None:
+            self._m_bucket_hit.inc()
             return ex
+        self._m_bucket_compile.inc()
         P = self._pack_rows
         tokens = jnp.zeros((P, bucket), jnp.int32)
         vlen = jnp.zeros((P,), jnp.int32)
@@ -487,6 +530,13 @@ class ServingEngine:
         self.last_invalidation = {
             "kept_buckets": kept, "dropped_buckets": dropped,
             "decode_rebuilt": bool(decode_rebuilt)}
+        self._m_reprograms.inc()
+        self._m_buckets_dropped.inc(len(dropped))
+        if decode_rebuilt:
+            self._m_decode_rebuilds.inc()
+        self.obs.trace_event("reprogram", kept_buckets=kept,
+                             dropped_buckets=dropped,
+                             decode_rebuilt=bool(decode_rebuilt))
 
     def _next_key(self):
         if not self._noisy:
@@ -534,6 +584,11 @@ class ServingEngine:
     def submit(self, req: Request):
         req.generated = []
         self.queue.append(req)
+        self._submit_ord[req.uid] = self._step_ord
+        self._submit_wall[req.uid] = time.perf_counter()
+        self._m_submitted.inc()
+        self.obs.trace_event("submit", uid=req.uid,
+                             prompt_len=int(len(req.prompt)))
 
     # -- fleet-facing maintenance surface --------------------------------
 
@@ -610,14 +665,24 @@ class ServingEngine:
             return
         wave_key = self._next_key() if any(len(r.prompt) > 1
                                            for _, r in admits) else None
-        if self.prefill_mode == "bucketed":
-            self._admit_bucketed(admits, wave_key)
-            return
-        for slot, req in admits:
-            mini_state = self.model.init_decode_state(1, self.max_len)
-            mini_state = self._fill(mini_state, req.prompt, wave_key)
-            self._bookkeep_admit(slot, req)
-            self._merge_slot(mini_state, slot)
+        # energy: every crossbar macro fires once per cached prompt
+        # position (padding in the bucketed path excluded — documented
+        # as useful-position accounting in repro.obs.energy)
+        self.energy.add_processed(sum(max(len(r.prompt) - 1, 0)
+                                      for _, r in admits))
+        with self.obs.span("admit", n=len(admits)):
+            if self.prefill_mode == "bucketed":
+                self._admit_bucketed(admits, wave_key)
+                return
+            for slot, req in admits:
+                with self.obs.span("prefill", slot=slot,
+                                   length=int(len(req.prompt) - 1)):
+                    mini_state = self.model.init_decode_state(
+                        1, self.max_len)
+                    mini_state = self._fill(mini_state, req.prompt,
+                                            wave_key)
+                self._bookkeep_admit(slot, req)
+                self._merge_slot(mini_state, slot)
 
     def _fill(self, state, prompt, wave_key):
         # Jitted scan over the prompt (minus the last token, which decodes
@@ -630,6 +695,12 @@ class ServingEngine:
                                  length=len(prompt) - 1)
 
     def _bookkeep_admit(self, slot: int, req: Request):
+        wait = self._step_ord - self._submit_ord.get(req.uid,
+                                                     self._step_ord)
+        self._m_queue_wait.record(wait)
+        self._m_admitted.inc()
+        self.obs.trace_event("admit", uid=req.uid, slot=slot,
+                             queue_wait_steps=int(wait))
         self.slot_free[slot] = False
         self.slot_req[slot] = req
         # positions 0..len-2 are cached; the LAST prompt token decodes
@@ -656,6 +727,7 @@ class ServingEngine:
             lens = [len(req.prompt) - 1 for _, req in group]
             state = self._pack_template()
             l_max = max(lens)
+            sp_buckets = []
             if l_max > 0:
                 toks = np.zeros((P, l_max), np.int32)
                 vlen = np.zeros((P,), np.int32)
@@ -665,18 +737,22 @@ class ServingEngine:
                     vlen[row] = lens[row]
                 vlen_j = jnp.asarray(vlen)
                 pos = 0
-                while pos < l_max:
-                    bucket = self._bucket_for(l_max - pos)
-                    ex = self._ensure_prefill_exec(bucket)
-                    chunk = np.zeros((P, bucket), np.int32)
-                    width = min(bucket, l_max - pos)
-                    chunk[:, :width] = toks[:, pos:pos + width]
-                    # the state's shared index carries the global position
-                    # between chunks (cache writes and the fold_in key
-                    # schedule both key off it)
-                    state = ex(self.params, state, jnp.asarray(chunk),
-                               vlen_j, wave_key)
-                    pos += bucket
+                with self.obs.span("prefill", rows=len(group),
+                                   max_len=int(l_max)) as sp:
+                    while pos < l_max:
+                        bucket = self._bucket_for(l_max - pos)
+                        ex = self._ensure_prefill_exec(bucket)
+                        sp_buckets.append(bucket)
+                        chunk = np.zeros((P, bucket), np.int32)
+                        width = min(bucket, l_max - pos)
+                        chunk[:, :width] = toks[:, pos:pos + width]
+                        # the state's shared index carries the global
+                        # position between chunks (cache writes and the
+                        # fold_in key schedule both key off it)
+                        state = ex(self.params, state, jnp.asarray(chunk),
+                                   vlen_j, wave_key)
+                        pos += bucket
+                    sp.set(buckets=sp_buckets)
             for row, (slot, req) in enumerate(group):
                 self._bookkeep_admit(slot, req)
             self._scatter_rows(state, [(row, slot) for row, (slot, _)
@@ -741,6 +817,7 @@ class ServingEngine:
         an earlier step (at most one step of lag; {} while the first step
         is still in flight) — :meth:`detok_flush` joins the backlog.
         """
+        self.obs.set_step(self._step_ord)
         if self._rejit_pending and all(self.slot_free):
             # the wave drained: apply the deferred chip re-program, then
             # resume admission on the fresh traces
@@ -751,11 +828,15 @@ class ServingEngine:
         self._admit()
         active = [s for s in range(self.max_batch) if not self.slot_free[s]]
         if not active:
+            self._step_ord += 1
             return self._drain_detok() if self._detok is not None else {}
-        out = self._step_detok(active) if self._detok is not None \
-            else self._step_sync(active)
+        with self.obs.span("decode", active=len(active)):
+            out = self._step_detok(active) if self._detok is not None \
+                else self._step_sync(active)
+        self.energy.add_processed(len(active))
         if self.scheduler is not None and self.scheduler.tick():
             self._handle_reprogram_due(active)
+        self._step_ord += 1
         return out
 
     def _step_sync(self, active) -> Dict[int, int]:
@@ -774,11 +855,12 @@ class ServingEngine:
             out[req.uid] = tok
             self.slot_last[s] = tok
             self.slot_pos[s] += 1
-            self._slot_ntok[s] += 1
+            self._note_token(s, req.uid)
             done = (len(req.generated) >= req.max_new_tokens
                     or tok == req.eos_id
                     or self.slot_pos[s] >= self.max_len - 1)
             if done:
+                self._note_finish(s, req.uid)
                 self.slot_free[s] = True
                 self.slot_req[s] = None
         return out
@@ -804,16 +886,50 @@ class ServingEngine:
                                         self._slot_last_dev)
         self._detok.put(next_tok, [(s, self.slot_req[s]) for s in active])
         for s in active:
+            uid = self.slot_req[s].uid
             self.slot_pos[s] += 1
-            self._slot_ntok[s] += 1
+            self._note_token(s, uid)
             done = (self._slot_ntok[s] >= self.slot_req[s].max_new_tokens
                     or self.slot_pos[s] >= self.max_len - 1)
             if done:
                 # the worker still holds its reference; streams finish
                 # landing asynchronously
+                self._note_finish(s, uid)
                 self.slot_free[s] = True
                 self.slot_req[s] = None
         return self._drain_detok()
+
+    def _note_token(self, s: int, uid: int) -> None:
+        """Per-token obs bookkeeping at DISPATCH time (identical in the
+        sync and detok paths — the ``_slot_ntok`` 0→1 transition marks the
+        first token whoever owns ``generated``), so seeded traces and
+        latency histograms are bitwise the same with or without the
+        detokenize thread."""
+        now = time.perf_counter()
+        if self._slot_ntok[s] == 0:
+            ttft = self._step_ord - self._submit_ord.pop(uid,
+                                                         self._step_ord)
+            self._m_ttft.record(ttft)
+            sub_wall = self._submit_wall.pop(uid, None)
+            if sub_wall is not None:
+                self._m_ttft_ms.record((now - sub_wall) * 1e3)
+            self.obs.trace_event("first_token", uid=uid,
+                                 ttft_steps=int(ttft))
+        else:
+            self._m_itl.record(self._step_ord
+                               - self._slot_last_tok_ord[s])
+            self._m_itl_ms.record(
+                (now - self._slot_last_tok_wall[s]) * 1e3)
+        self._slot_ntok[s] += 1
+        self._slot_last_tok_ord[s] = self._step_ord
+        self._slot_last_tok_wall[s] = now
+        self._m_tokens.inc()
+        self.energy.add_generated(1)
+
+    def _note_finish(self, s: int, uid: int) -> None:
+        self._m_finished.inc()
+        self.obs.trace_event("finish", uid=uid,
+                             n_tokens=int(self._slot_ntok[s]))
 
     def _drain_detok(self) -> Dict[int, int]:
         """At most one landed step batch, so a caller counting tokens as
@@ -1010,15 +1126,24 @@ class ServingEngine:
 
     def run_offline(self, requests=None, max_iters: int = 100_000) -> dict:
         """MLPerf-offline-style measured run: submit the whole burst up
-        front, drain it, report wall-clock tokens/s.  Call :meth:`warmup`
-        first — compile time belongs outside the measurement."""
+        front, drain it, report wall-clock tokens/s plus the latency
+        distributions (p50/p95/p99 TTFT and inter-token latency, in engine
+        steps and in wall ms) and the costed energy efficiency
+        (tokens-per-joule / TOPS/W under both periphery variants).  Call
+        :meth:`warmup` first — compile time belongs outside the
+        measurement."""
         for req in (requests or []):
             self.submit(req)
         t0 = time.perf_counter()
         n = self.run_to_completion(max_iters=max_iters)
         dt = time.perf_counter() - t0
         return {"tokens": int(n), "seconds": float(dt),
-                "tokens_per_s": float(n / dt) if dt > 0 else 0.0}
+                "tokens_per_s": float(n / dt) if dt > 0 else 0.0,
+                "ttft_steps": self._m_ttft.summary(),
+                "itl_steps": self._m_itl.summary(),
+                "ttft_ms": self._m_ttft_ms.summary(),
+                "itl_ms": self._m_itl_ms.summary(),
+                "energy": self.energy.report()}
 
     # -- checkpoint / restore (repro.ckpt) ------------------------------
 
@@ -1087,6 +1212,19 @@ class ServingEngine:
                           for r in self.slot_req],
                 "queue": [r.to_dict() for r in self.queue],
             },
+            # Observability rides along: metrics snapshot + the tracer's
+            # step/seq clock + the per-request/per-slot step bookkeeping,
+            # so a restored deployment's counters, latency histograms, and
+            # JSONL trace continue exactly where the saved run stopped
+            # (the trace-determinism-across-resume contract).
+            "obs": {
+                **self.obs.snapshot(),
+                "step_ord": int(self._step_ord),
+                "submit_ord": {str(k): int(v)
+                               for k, v in self._submit_ord.items()},
+                "slot_last_tok_ord": [int(x)
+                                      for x in self._slot_last_tok_ord],
+            },
         }
         return save_checkpoint(
             root, step,
@@ -1101,7 +1239,8 @@ class ServingEngine:
                 prefill: str = "scan",
                 prefill_buckets=None,
                 pack_prefill: bool = False,
-                detok_thread: bool = False) -> "ServingEngine":
+                detok_thread: bool = False,
+                obs=None) -> "ServingEngine":
         """Resume a checkpointed deployment: same chip, same next token.
 
         ``params_like``: a pytree matching the model's params structure
@@ -1146,7 +1285,8 @@ class ServingEngine:
                   drain_before_rejit=drain_before_rejit,
                   external_maintenance=external_maintenance,
                   prefill=prefill, prefill_buckets=prefill_buckets,
-                  pack_prefill=pack_prefill, detok_thread=detok_thread)
+                  pack_prefill=pack_prefill, detok_thread=detok_thread,
+                  obs=obs)
         # Realize the checkpointed bank inventory BEFORE building the
         # restore template, so the leaf paths line up with the save — and
         # fail with a clear bank_cols hint in BOTH mismatch directions
@@ -1230,5 +1370,22 @@ class ServingEngine:
         if meta["scheduler"] is not None:
             eng.scheduler = RecalScheduler.from_dict(
                 meta["scheduler"], eng._acts)
+            eng.scheduler.obs = eng.obs
+        # Observability: restore counters/histograms and the trace clock so
+        # the resumed deployment's JSONL trace and latency stats continue
+        # bit-for-bit (absent in pre-obs checkpoints — fresh clock then).
+        obs_meta = meta.get("obs")
+        if obs_meta:
+            eng.obs.restore(obs_meta)
+            eng._step_ord = int(obs_meta.get("step_ord", 0))
+            eng._submit_ord = {int(k): int(v) for k, v
+                               in obs_meta.get("submit_ord", {}).items()}
+            slto = obs_meta.get("slot_last_tok_ord")
+            if slto is not None and len(slto) == eng.max_batch:
+                eng._slot_last_tok_ord = np.asarray(slto, np.int64)
+        # wall anchors are process-local: restart them at restore time so
+        # the (non-deterministic, strip_wall-excluded) ms histograms never
+        # see a cross-process epoch delta
+        eng._slot_last_tok_wall[:] = time.perf_counter()
         eng._refresh_jit()
         return eng

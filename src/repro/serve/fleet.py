@@ -180,15 +180,29 @@ class FleetEngine:
     """
 
     def __init__(self, chips: Dict[str, Chip], policy: FleetPolicy, *,
-                 recal=None, _restored: Optional[dict] = None):
+                 recal=None, obs=None, _restored: Optional[dict] = None):
+        from repro.obs import Obs
+
         if not chips:
             raise ValueError("a fleet needs at least one chip")
         self.chips = {cid: chips[cid] for cid in sorted(chips)}
         self.policy = policy
         self.recal = recal
+        # The fleet's obs bundle; :meth:`build`/:meth:`restore` hand every
+        # chip engine a per-chip child of it, so router decisions, drain
+        # windows, canary warnings, chip re-programs, and scheduler probes
+        # all land on ONE shared event bus (and one metrics registry),
+        # chip-tagged.  The legacy ``self.events`` list survives as a
+        # compat property over the bus (src == "fleet" entries only).
+        self.obs = obs if obs is not None else Obs()
+        self.bus = self.obs.bus
+        self._m_admission = self.obs.histogram("fleet.admission_steps")
+        self._m_routed: Dict[str, object] = {
+            cid: self.obs.metrics.counter("fleet.requests_routed",
+                                          chip=cid)
+            for cid in self.chips}
         self.planner = MaintenancePlanner(len(chips), policy.capacity_floor)
         self.step_count = 0
-        self.events: List[dict] = []
         # routing / admission-latency bookkeeping (all deterministic)
         self._rr = 0
         self._submit_step: Dict[int, int] = {}
@@ -201,7 +215,12 @@ class FleetEngine:
             self.planner = MaintenancePlanner.from_dict(
                 _restored["planner"])
             self.step_count = int(_restored["step_count"])
-            self.events = list(_restored["events"])
+            # old (pre-obs) manifests saved only the fleet-level events,
+            # without the bus "src" tag — adopt them as src="fleet"
+            self.bus.events = [
+                e if "src" in e else {**e, "src": "fleet"}
+                for e in _restored["events"]]
+            self.obs.restore(_restored.get("obs"))
             self._rr = int(_restored["router"]["rr"])
             self._submit_step = {int(k): int(v) for k, v in
                                  _restored["submit_step"].items()}
@@ -218,8 +237,8 @@ class FleetEngine:
               recal=None, max_batch: int = 2, max_len: int = 64,
               canary_presets=(), params=None, noise_seed: int = 0,
               prefill: str = "scan", prefill_buckets=None,
-              pack_prefill: bool = False, detok_thread: bool = False
-              ) -> "FleetEngine":
+              pack_prefill: bool = False, detok_thread: bool = False,
+              obs=None) -> "FleetEngine":
         """Instantiate a fresh fleet of ``n_chips`` for one model config.
 
         The last ``len(canary_presets)`` chips become canaries pinned to
@@ -244,21 +263,26 @@ class FleetEngine:
                 chip_id=f"chip{i:02d}",
                 device=canary_presets[i - n_serve] if canary else "",
                 canary=canary))
+        from repro.obs import Obs
+
+        obs = obs if obs is not None else Obs()
         chips = {}
         for spec in specs:
             chip, params = cls._build_chip(
                 cfg, spec, recal=recal, max_batch=max_batch,
                 max_len=max_len, params=params, noise_seed=noise_seed,
                 prefill=prefill, prefill_buckets=prefill_buckets,
-                pack_prefill=pack_prefill, detok_thread=detok_thread)
+                pack_prefill=pack_prefill, detok_thread=detok_thread,
+                obs=obs.child(spec.chip_id))
             chips[spec.chip_id] = chip
-        return cls(chips, policy, recal=recal)
+        return cls(chips, policy, recal=recal, obs=obs)
 
     @staticmethod
     def _build_chip(cfg, spec: ChipSpec, *, recal, max_batch, max_len,
                     params, noise_seed, device_dict=None,
                     prefill: str = "scan", prefill_buckets=None,
-                    pack_prefill: bool = False, detok_thread: bool = False):
+                    pack_prefill: bool = False, detok_thread: bool = False,
+                    obs=None):
         """Realize one chip (device, model, engine); returns (chip, params)
         with params initialized on first use so the fleet shares one tree.
 
@@ -294,7 +318,8 @@ class FleetEngine:
             noise_seed=noise_seed ^ zlib.crc32(spec.chip_id.encode()),
             external_maintenance=True,
             prefill=prefill, prefill_buckets=prefill_buckets,
-            pack_prefill=pack_prefill, detok_thread=detok_thread)
+            pack_prefill=pack_prefill, detok_thread=detok_thread,
+            obs=obs)
         return Chip(spec, dev, model, engine), params
 
     # -- routing -----------------------------------------------------------
@@ -349,6 +374,7 @@ class FleetEngine:
         cid = self._route()
         self.chips[cid].engine.submit(req)
         self._submit_step[req.uid] = self.step_count
+        self._m_routed[cid].inc()
         return cid
 
     # -- the serving loop --------------------------------------------------
@@ -370,6 +396,9 @@ class FleetEngine:
             for uid in toks:
                 if uid not in self._first_tok_step:
                     self._first_tok_step[uid] = self.step_count
+                    if uid in self._submit_step:
+                        self._m_admission.record(
+                            self.step_count - self._submit_step[uid])
             out.update(toks)
             if idle and not toks:
                 shelf.append(cid)
@@ -477,9 +506,24 @@ class FleetEngine:
             self._event("maintenance_requested", chip=chip_id, forced=True)
 
     def _event(self, kind: str, **kw) -> None:
-        self.events.append({"step": self.step_count, "type": kind, **kw})
+        self.obs.emit(kind, step=self.step_count, src="fleet", **kw)
+
+    @property
+    def events(self) -> List[dict]:
+        """Compat view: the fleet-level events exactly as the pre-bus list
+        carried them (bus entries with src == "fleet", tag stripped).  The
+        full cross-layer stream — including per-chip scheduler probes —
+        lives on :attr:`bus`."""
+        return [{k: v for k, v in e.items() if k != "src"}
+                for e in self.bus.view(src="fleet")]
 
     # -- observability -----------------------------------------------------
+
+    def energy_report(self) -> Dict[str, dict]:
+        """Per-chip costed efficiency (tokens/J, TOPS/W) from each chip's
+        :class:`~repro.obs.energy.EnergyMeter`."""
+        return {cid: c.engine.energy.report()
+                for cid, c in self.chips.items()}
 
     def admission_latency_steps(self) -> List[int]:
         """First-token latency (fleet steps) of every finished admission."""
@@ -520,7 +564,11 @@ class FleetEngine:
             } for cid, chip in self.chips.items()],
             "router": {"name": self.policy.router, "rr": self._rr},
             "planner": self.planner.to_dict(),
-            "events": list(self.events),
+            # the full shared bus (src-tagged: fleet + engine + sched
+            # entries), not just the fleet-level view — restore rebuilds
+            # the bus verbatim and the compat property filters
+            "events": list(self.bus.events),
+            "obs": self.obs.snapshot(),
             "step_count": self.step_count,
             "submit_step": dict(self._submit_step),
             "first_tok_step": dict(self._first_tok_step),
@@ -531,7 +579,7 @@ class FleetEngine:
 
     @classmethod
     def restore(cls, cfg, root: str, *, step: Optional[int] = None,
-                params_like=None) -> "FleetEngine":
+                params_like=None, obs=None) -> "FleetEngine":
         """Resume a fleet bitwise: every chip's deployment, the router
         counter, the planner queue, the event trace."""
         from repro.ckpt.checkpoint import read_metadata
@@ -554,8 +602,11 @@ class FleetEngine:
         from repro.core.device import device_from_dict, register_device
         from repro.nn.model import build
 
+        from repro.obs import Obs
+
         policy = FleetPolicy(**fm["policy"])
         recal = None if fm["recal"] is None else RecalPolicy(**fm["recal"])
+        obs = obs if obs is not None else Obs()
         chips = {}
         for entry in fm["chips"]:
             cid = entry["id"]
@@ -574,6 +625,7 @@ class FleetEngine:
                 params_like = model.init(jax.random.PRNGKey(0))
             engine = ServingEngine.restore(
                 model, os.path.join(root, "chips", cid), step=step,
-                params_like=params_like, external_maintenance=True)
+                params_like=params_like, external_maintenance=True,
+                obs=obs.child(cid))
             chips[cid] = Chip(spec, dev, model, engine)
-        return cls(chips, policy, recal=recal, _restored=fm)
+        return cls(chips, policy, recal=recal, obs=obs, _restored=fm)

@@ -211,6 +211,11 @@ class RecalScheduler:
         self.policy = policy
         self.acts = dict(activations)
         self.accuracy_probe = accuracy_probe
+        # Optional repro.obs.Obs bundle (the owning engine wires it): every
+        # probe event is also published on the shared event bus (src
+        # "sched", tagged with the recal'd ramp keys — and the chip id when
+        # the bundle is a fleet child) and mirrored into lifecycle gauges.
+        self.obs = None
         # A preset with a Drift stage describes a chip already t_s old at
         # deployment (aged-1day) — the lifecycle clock starts there.
         self.age_s = float(device.drift.t_s) if device.drift is not None \
@@ -345,7 +350,11 @@ class RecalScheduler:
         changed = self.redeploy()
         inls = self.probe_inl_per_ramp()
         inl = float(np.mean(list(inls.values()))) if inls else 0.0
-        event = {"step": self.step_count, "age_s": self.age_s,
+        # Same step/type field names as every other bus event (the unified
+        # repro.obs schema); the legacy self.events list keeps carrying the
+        # full dicts so existing readers/checkpoints are unchanged.
+        event = {"step": self.step_count, "type": "probe",
+                 "age_s": self.age_s,
                  "inl_lsb": round(inl, 4), "recalibrated": False}
         if self.accuracy_probe is not None:
             event["accuracy"] = float(self.accuracy_probe())
@@ -383,6 +392,19 @@ class RecalScheduler:
                     list(self.weight_refresh_ramps)
                 changed = True        # the engine must rebuild either way
         self.events.append(event)
+        if self.obs is not None:
+            tags = {k: v for k, v in event.items()
+                    if k not in ("step", "type")}
+            self.obs.emit("probe", step=self.step_count, src="sched",
+                          **tags)
+            self.obs.gauge("lifecycle.age_s").set(self.age_s)
+            self.obs.gauge("lifecycle.inl_lsb").set(
+                event.get("inl_after_lsb", event["inl_lsb"]))
+            self.obs.gauge("lifecycle.recals_total").set(self.n_recals)
+            if event["recalibrated"]:
+                self.obs.counter("lifecycle.recal_events").inc()
+            if event.get("weight_refresh"):
+                self.obs.counter("lifecycle.weight_refresh_events").inc()
         return changed
 
     def consume_weight_refresh(self) -> bool:

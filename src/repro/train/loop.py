@@ -71,7 +71,14 @@ class Trainer:
     def __init__(self, model, optimizer, train_step: Callable, pipeline,
                  *, ckpt_dir: Optional[str] = None, ckpt_every: int = 200,
                  keep: int = 3, log_every: int = 10,
-                 put_batch: Optional[Callable] = None):
+                 put_batch: Optional[Callable] = None, obs=None):
+        from repro.obs import Obs
+
+        self.obs = obs if obs is not None else Obs(trace=False)
+        self._m_steps = self.obs.counter("train.steps_total")
+        self._m_loss = self.obs.gauge("train.loss")
+        self._m_grad_norm = self.obs.gauge("train.grad_norm")
+        self._m_step_ms = self.obs.histogram("train.step_ms")
         self.model = model
         self.optimizer = optimizer
         self.train_step = jax.jit(train_step, donate_argnums=(0, 1))
@@ -114,7 +121,17 @@ class Trainer:
             print(f"[trainer] resumed from step {step}")
         t0 = time.time()
         while step < n_steps:
-            state, step = self.executor.run_step(state, step)
+            ts = time.perf_counter()
+            self.obs.set_step(step)
+            with self.obs.span("train_step"):
+                state, step = self.executor.run_step(state, step)
+            self._m_steps.inc()
+            self._m_step_ms.record((time.perf_counter() - ts) * 1e3)
+            lm = self._last_metrics
+            if "loss" in lm:
+                self._m_loss.set(float(np.asarray(lm["loss"])))
+            if "grad_norm" in lm:
+                self._m_grad_norm.set(float(np.asarray(lm["grad_norm"])))
             if step % self.log_every == 0 or step == n_steps:
                 m = {k: float(np.asarray(v))
                      for k, v in self._last_metrics.items()}
