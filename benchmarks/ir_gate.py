@@ -1,0 +1,104 @@
+"""IR-drop CI gate: re-run the IR sweep, diff the baseline, hold the 1% bar.
+
+    PYTHONPATH=src python -m benchmarks.ir_gate [--tol F] [--max-corrected X]
+
+Runs ``benchmarks.ir_sweep`` and fails (exit 1) when
+
+* any weight-error or bank-INL cell moves more than a ``--tol`` fraction
+  (relative) against the committed ``BENCH_ir.json``, or a cell exists on
+  only one side;
+* any corner **inside the documented validity region** has a corrected
+  effective-weight error above ``--max-corrected`` (the 1% acceptance
+  bound against the exact nodal solve), or the correction fails to beat
+  the uncorrected error at every corner.
+
+The sweep is seeded and host-side float64 throughout, so on one platform
+the baseline deltas are exactly zero; ``--tol`` absorbs cross-platform
+BLAS/LAPACK numerics only.  The validity bound is absolute and
+platform-independent.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from benchmarks import ir_sweep
+
+BASELINE = os.path.join(os.path.dirname(__file__), "BENCH_ir.json")
+
+
+def _flat(results: dict):
+    cells = {}
+    for cell, row in results["weights"].items():
+        for k in ("uncorrected", "corrected", "w_uncorrected",
+                  "w_corrected"):
+            cells[("weights", cell, k)] = row[k]
+    for preset, rows in results["bank_inl"].items():
+        for k, v in rows.items():
+            if k.startswith("bank"):
+                cells[("bank_inl", preset, k)] = v
+    return cells
+
+
+def compare(results: dict, baseline: dict, tol: float,
+            max_corrected: float) -> list:
+    failures = []
+    want_cells, got_cells = _flat(baseline), _flat(results)
+    for cell in sorted(set(want_cells) ^ set(got_cells)):
+        side = "baseline" if cell in want_cells else "sweep"
+        failures.append(f"{'/'.join(cell)}: only present in the {side}; "
+                        "re-record BENCH_ir.json")
+    for cell in sorted(set(want_cells) & set(got_cells)):
+        want, got = want_cells[cell], got_cells[cell]
+        if abs(got - want) > tol * max(abs(want), 1e-9):
+            failures.append(f"{'/'.join(cell)}: {got:.6f} vs baseline "
+                            f"{want:.6f} (tol {tol:.0%} rel)")
+    # absolute acceptance bars (independent of the recorded baseline)
+    for cell, row in results["weights"].items():
+        if row["in_validity_region"] and row["corrected"] > max_corrected:
+            failures.append(
+                f"weights/{cell}: corrected MAC error "
+                f"{row['corrected']:.4f} exceeds the {max_corrected:.0%} "
+                "validity-region bound vs the exact nodal solve")
+        for unc, corr in (("uncorrected", "corrected"),
+                          ("w_uncorrected", "w_corrected")):
+            if row[corr] >= row[unc]:
+                failures.append(
+                    f"weights/{cell}: correction ({row[corr]:.4f}) does "
+                    f"not beat {unc} ({row[unc]:.4f})")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tol", type=float, default=0.05,
+                    help="relative delta allowed per cell vs the baseline")
+    ap.add_argument("--max-corrected", type=float, default=0.01,
+                    help="absolute corrected-error bound inside the "
+                         "validity region")
+    args = ap.parse_args()
+
+    with open(BASELINE) as f:
+        baseline = json.load(f)
+    results = ir_sweep.run(quick=True)
+
+    failures = compare(results, baseline, args.tol, args.max_corrected)
+    if failures:
+        print(f"\n[ir-gate] FAIL — {len(failures)} cells out of bounds vs "
+              "benchmarks/BENCH_ir.json:")
+        for fail in failures:
+            print("  " + fail)
+        print("If the shift is intentional, re-record the baseline: "
+              "rm benchmarks/BENCH_ir.json && PYTHONPATH=src python -m "
+              "benchmarks.run --only ir_sweep")
+        return 1
+    print("\n[ir-gate] OK — IR-drop correction within tolerance of "
+          "BENCH_ir.json and under the validity-region bound")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,124 @@
+"""IR-drop sweep: first-order correction vs exact nodal solve, per corner.
+
+Two sections, both diffed by ``benchmarks.ir_gate`` in CI:
+
+* **weights**: for each (array size, wire resistance, sourcing) corner,
+  the relative MAC error against the exact Kirchhoff nodal solve
+  (``repro.core.circuit``) — once for the uncorrected ideal weights
+  (what a line-blind pipeline computes) and once for the closed-form
+  first-order correction (``crossbar.ir_effective_weights``).  MAC
+  cells use the acceptance loading (uniform weights in [-1.5, 1.5],
+  the typical hardware-aware-trained range): the correction must win
+  by a wide margin everywhere and stay under 1% inside the documented
+  validity region (all r <= 2 Ohm at n <= 32; r <= 1 Ohm at n = 64).
+  Full-clip Frobenius effective-weight errors (``w_*`` cells, the
+  worst-case conductance loading) are recorded as diagnostics but not
+  held to the 1% bar — at full clip the drop nearly doubles.
+* **bank_inl**: per-col-tile programmed-ramp INL for the IR presets —
+  far banks (single sourcing) / middle banks (double) see more wire, so
+  the INL profile across banks is the position-dependence fingerprint.
+
+Writes ``benchmarks/BENCH_ir.json`` as the recorded baseline.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.core import circuit, crossbar
+from repro.core.device import get_device
+from repro.core.nladc import build_ramp, inl_lsb
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "BENCH_ir.json")
+
+SIZES = (16, 32, 64)
+R_OHMS = (0.5, 1.0, 2.0)
+SOURCINGS = ("single", "double")
+N_BANKS = 4
+IR_PRESETS = ("paper-ir", "stressed-ir")
+
+
+def in_validity_region(n: int, r_ohm: float) -> bool:
+    """Where the first-order correction is contracted to <1% error."""
+    return r_ohm <= 2.0 if n <= 32 else r_ohm <= 1.0
+
+
+def _rel_err(got: np.ndarray, want: np.ndarray) -> float:
+    return float(np.linalg.norm(got - want) / np.linalg.norm(want))
+
+
+def _weight_sweep(quick: bool):
+    rng = np.random.default_rng(0)
+    out = {}
+    for n in SIZES:
+        w_mac = rng.uniform(-1.5, 1.5, (n, n))       # acceptance loading
+        w_full = rng.uniform(-crossbar.W_CLIP, crossbar.W_CLIP, (n, n))
+        x_batch = rng.uniform(-1, 1, (4, n))
+        for r in R_OHMS:
+            for sourcing in SOURCINGS:
+                y_exact = np.stack([
+                    circuit.exact_mac_weights(w_mac, x, r, r, sourcing)
+                    for x in x_batch])
+                w_corr = np.asarray(
+                    crossbar.ir_effective_weights(
+                        w_mac.astype(np.float32), r, r, sourcing),
+                    np.float64)
+                exact_full = circuit.exact_effective_weights(
+                    w_full, r, r, sourcing)
+                corr_full = np.asarray(
+                    crossbar.ir_effective_weights(
+                        w_full.astype(np.float32), r, r, sourcing),
+                    np.float64)
+                cell = f"{sourcing}/n{n}/r{r:g}"
+                out[cell] = {
+                    "uncorrected": round(
+                        _rel_err(x_batch @ w_mac, y_exact), 6),
+                    "corrected": round(
+                        _rel_err(x_batch @ w_corr, y_exact), 6),
+                    "w_uncorrected": round(_rel_err(w_full, exact_full), 6),
+                    "w_corrected": round(_rel_err(corr_full, exact_full), 6),
+                    "in_validity_region": in_validity_region(n, r),
+                }
+    return out
+
+
+def _bank_inl_sweep(quick: bool):
+    ideal = build_ramp("sigmoid", 5)
+    out = {}
+    for preset in IR_PRESETS:
+        dev = get_device(preset)
+        banks = dev.deploy_ramp_bank(ideal, N_BANKS, instance="ir_sweep")
+        out[preset] = {
+            f"bank{j}": round(inl_lsb(b, ideal)[0], 6)
+            for j, b in enumerate(banks)
+        }
+        out[preset]["worst_bank"] = dev.worst_bank(N_BANKS)
+    return out
+
+
+def run(quick=True):
+    results = {
+        "quick": quick,
+        "weights": _weight_sweep(quick),
+        "bank_inl": _bank_inl_sweep(quick),
+    }
+    for cell, row in results["weights"].items():
+        flag = " *" if row["in_validity_region"] else ""
+        print(f"  {cell:16} uncorrected {row['uncorrected']:.4f}  "
+              f"corrected {row['corrected']:.4f}{flag}")
+    for preset, rows in results["bank_inl"].items():
+        cells = "  ".join(f"{k}={v}" for k, v in sorted(rows.items())
+                          if k.startswith("bank"))
+        print(f"  {preset:12} {cells}  (worst={rows['worst_bank']})")
+    if not quick or not os.path.exists(OUT_PATH):
+        with open(OUT_PATH, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"  wrote {OUT_PATH}")
+    return results
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -26,6 +26,7 @@ MODULES = [
     ("fig5c_ptb", "Fig. 5c char-LM BPC vs bits"),
     ("s13_drift", "Supp. S13 drift"),
     ("device_sweep", "repro.core.device preset sweep (drift/redundancy)"),
+    ("ir_sweep", "IR-drop correction vs exact nodal solve + bank INL"),
     ("bank_sweep", "threshold-bank sweep (INL/accuracy vs col-tile count)"),
     ("recal_schedule", "serving-lifetime re-calibration schedule sweep"),
     ("fleet_sweep", "fleet serving sweep (N chips x capacity floor)"),

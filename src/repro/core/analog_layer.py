@@ -46,7 +46,8 @@ from repro.core import backend as BK
 from repro.core import crossbar
 from repro.core.device import IDEAL, DeviceModel, resolve_device
 from repro.core.nladc import (NLADC, BankedThresholds, Ramp, bank_map_for,
-                              build_ramp, pwm_quantize)
+                              build_ramp, check_threshold_degeneracy,
+                              pwm_quantize)
 
 # Removed knobs -> complete migration instruction (used for actionable
 # error messages below; each hint stands on its own).
@@ -158,6 +159,12 @@ class DeployedBank:
         self.ramps = ramps
         self.thresholds_f64 = np.stack(
             [np.asarray(r.thresholds, np.float64) for r in ramps])
+        # Deploy-time guard: the f64 -> f32 cast below happens once here
+        # (and then silently at every trace); warn NOW, with the ramp id,
+        # if adjacent programmed thresholds merge in float32.
+        for j, r in enumerate(ramps):
+            check_threshold_degeneracy(
+                self.thresholds_f64[j], f"{r.name}[bank {j}]", jnp.float32)
         self.thr = jnp.asarray(self.thresholds_f64, jnp.float32)
         # Per-bank ramp-step geometry for the train-noise draw: noise
         # compounds along each bank's own cumsum, exactly as on its chip.
@@ -328,18 +335,35 @@ def _noisy_weights(w, cfg: AnalogConfig, k_w):
     in train mode (Alg. 1), ``ReadNoise`` in infer mode.  Build-stage weight
     nonidealities (write noise / faults / drift) are applied once, outside
     the step, via ``DeviceModel.age_params``.
+
+    This is THE shared weight-preparation seam: the ``LineResistance``
+    effective-weight correction (and the paired per-device read noise) are
+    folded in here, *before* backend dispatch, so ref and pallas consume
+    identical operands and their bitwise ADC-code parity is free under the
+    new stages.  The IR correction runs in train mode too — it is plain
+    differentiable jnp, so analog-aware training sees the wire physics.
     """
     w = crossbar.clip_weights(w)
-    sigma_w = cfg.device.weight_sigma_w(cfg.mode)
-    if k_w is None or sigma_w <= 0:
-        return w
-    if cfg.mode == "train":
-        # Alg. 1: W_fwd = W + eps * sigma; backward hits W directly.
-        w = w + jax.lax.stop_gradient(
-            sigma_w * jax.random.normal(k_w, w.shape, dtype=w.dtype)
-        )
-    else:
-        w = w + crossbar.read_noise_weights(k_w, w.shape, w.dtype, sigma_w)
+    dev = cfg.device
+    sigma_w = dev.weight_sigma_w(cfg.mode)
+    if k_w is not None and sigma_w > 0:
+        if cfg.mode == "train":
+            # Alg. 1: W_fwd = W + eps * sigma; backward hits W directly.
+            # Training noise is an abstract robustness injection (Methods),
+            # not a physical read — it keeps the single-draw form even
+            # under paired_noise.
+            w = w + jax.lax.stop_gradient(
+                sigma_w * jax.random.normal(k_w, w.shape, dtype=w.dtype)
+            )
+        elif dev.paired_noise:
+            w = crossbar.read_noise_weights_paired(k_w, w, sigma_w)
+        else:
+            w = w + crossbar.read_noise_weights(k_w, w.shape, w.dtype,
+                                                sigma_w)
+    if dev.line is not None and cfg.mode != "exact":
+        ln = dev.line
+        w = crossbar.ir_effective_weights_tiled(
+            w, ln.r_wl_ohm, ln.r_bl_ohm, ln.sourcing, ln.n_iter)
     return w
 
 
@@ -367,6 +391,13 @@ def analog_matmul_act(x, w, cfg: AnalogConfig, *, key=None,
 
     if cfg.input_bits is not None:
         x = pwm_quantize(x, cfg.input_bits, cfg.input_clip)
+    if cfg.device.nonlinear_iv is not None and cfg.mode != "exact":
+        # Kim et al. I-V distortion: every device in a wordline sees the
+        # same read voltage, so the sinh shape factors out of the per-cell
+        # conductance and rides the *input* path — shared code before
+        # backend dispatch, so parity is free (see crossbar.nonlinear_iv_read).
+        x = crossbar.nonlinear_iv_read(x, cfg.device.nonlinear_iv.alpha,
+                                       cfg.input_clip)
     w = _noisy_weights(w, cfg, k_w)
 
     if activation is not None and activation.ramp is not None:

@@ -33,6 +33,13 @@ override may be a :class:`repro.core.nladc.BankedThresholds` — the
 bank-gathers a per-column ``searchsorted`` and the Pallas path feeds the
 kernels a per-column threshold operand gathered at trace time; the STE
 backwards are shared and bank-agnostic (they depend only on the input).
+
+The circuit-level stages (``LineResistance`` / ``NonlinearIV``) never
+appear here: the IR effective-weight correction and the I-V input
+distortion are folded into the shared weight/input preparation seam
+upstream (``analog_layer._noisy_weights`` / ``analog_matmul_act``), so
+both backends consume identical corrected operands and their bitwise
+ADC-code parity is preserved without per-backend duplication.
 """
 
 from __future__ import annotations

@@ -55,11 +55,22 @@ def write_noise(rng: np.random.Generator, g_us: np.ndarray,
 def program_ramp(ramp: Ramp, rng: np.random.Generator,
                  sigma_us: float = WRITE_SIGMA_US,
                  stuck_off_prob: float = 0.0,
-                 calibrate: bool = True) -> ProgrammedRamp:
-    """Program one NL-ADC column and (optionally) one-point calibrate it."""
+                 calibrate: bool = True,
+                 rebuild=None) -> ProgrammedRamp:
+    """Program one NL-ADC column and (optionally) one-point calibrate it.
+
+    ``rebuild``: optional ``(ideal, g_us) -> Ramp`` hook realizing the
+    thresholds from the programmed conductances — the default is the plain
+    :func:`ramp_from_conductances` cumsum; a device model with a
+    LineResistance stage passes its IR-drop-aware rebuild here so the
+    calibration shift (and any redundancy INL selection) judges the
+    thresholds the *wires* deliver, not the ideal-network ones.
+    """
+    if rebuild is None:
+        rebuild = ramp_from_conductances
     g_ideal = ramp.conductances_us()
     g_prog = write_noise(rng, g_ideal, sigma_us, stuck_off_prob)
-    programmed = ramp_from_conductances(ramp, g_prog)
+    programmed = rebuild(ramp, g_prog)
     n_cali = 0
     if calibrate:
         programmed, n_cali = one_point_calibrate(
@@ -135,7 +146,8 @@ def program_with_redundancy(ramp: Ramp, rng: np.random.Generator,
                             copies: int = 4,
                             sigma_us: float = WRITE_SIGMA_US,
                             stuck_off_prob: float = 0.0,
-                            calibrate: bool = True) -> ProgrammedRamp:
+                            calibrate: bool = True,
+                            rebuild=None) -> ProgrammedRamp:
     """Supp. S11: program ``copies`` redundant ramps, return the min-INL one.
 
     The physical column has 64+ rows while a 5-bit ramp needs 32 — unused
@@ -149,7 +161,7 @@ def program_with_redundancy(ramp: Ramp, rng: np.random.Generator,
     for _ in range(copies):
         cand = program_ramp(
             ramp, rng, sigma_us=sigma_us, stuck_off_prob=stuck_off_prob,
-            calibrate=calibrate,
+            calibrate=calibrate, rebuild=rebuild,
         )
         mean_inl, _ = cand.inl()
         if mean_inl < best_inl:

@@ -1,0 +1,259 @@
+"""Exact nodal analysis of the parasitic crossbar network (the IR oracle).
+
+Host-side reference solver for the wordline/bitline resistance network that
+:func:`repro.core.crossbar.line_drop` approximates in closed form.  Small
+arrays only — this is the *oracle* the jittable correction is validated
+against (tests/test_crossbar.py, benchmarks/ir_sweep.py), never a serving
+path.
+
+Topology (mirrors the closed-form derivation in ``crossbar.py``):
+
+* wordline ``i`` is a chain of ``n_cols`` nodes ``W[i, :]`` with wire
+  conductance ``g_wl = 1/r_wl`` per segment; a voltage source drives the
+  chain through one segment at the left (``sourcing="single"``) or through
+  one segment at each end (``"double"``);
+* bitline ``j`` is a chain of ``n_rows`` nodes ``B[:, j]`` with ``g_bl``
+  per segment, terminated below the last row by one segment into the
+  virtual-ground transimpedance amplifier (0 V);
+* cell ``(i, j)`` is a conductance ``g[i, j]`` between ``W[i,j]`` and
+  ``B[i,j]``; the measured output of column ``j`` is the current through
+  its TIA segment.
+
+All conductances are in µS and drive voltages in volts, so currents come
+out in µA; ``exact_effective_conductances`` divides the unit-drive currents
+back out to an effective-conductance matrix in µS (the network is linear,
+so by superposition this matrix is exact for *any* input vector).
+
+Solver: ``scipy.sparse`` LU when scipy is available (one factorization,
+many right-hand sides), else a dense ``numpy.linalg.solve`` fallback capped
+at small systems (the 2*m*n unknown count grows fast — 64x64 needs scipy).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.crossbar import GAMMA_US, weights_to_conductance_pairs
+
+try:  # scipy is an optional accelerator for the oracle, not a repo dep
+    import scipy.sparse as _sp
+    import scipy.sparse.linalg as _spla
+
+    HAS_SCIPY = True
+except Exception:  # pragma: no cover - environment without scipy
+    _sp = None
+    _spla = None
+    HAS_SCIPY = False
+
+# Dense-fallback guard: a (2mn)^2 float64 matrix; 4096 unknowns ~ 128 MB.
+_DENSE_MAX_UNKNOWNS = 4096
+
+
+def _wire_conductance_us(r_ohm: float) -> float:
+    if r_ohm <= 0.0:
+        raise ValueError(
+            "the nodal oracle needs r > 0 (r = 0 is the ideal network; "
+            "the closed-form correction handles it as the identity)")
+    return 1e6 / r_ohm  # ohm -> µS
+
+
+class NodalSystem:
+    """Assembled KCL system for one crossbar; factorized once, solved per x.
+
+    ``A @ v = b(x)`` with ``v = [W.ravel(), B.ravel()]`` the node voltages
+    and ``b`` carrying the driver injections ``g_wl * x_i`` at the sourced
+    wordline ends.  ``A`` is the (symmetric positive definite) weighted
+    graph Laplacian plus the driver/TIA ground legs.
+    """
+
+    def __init__(self, g_us: np.ndarray, r_wl_ohm: float, r_bl_ohm: float,
+                 sourcing: str = "single"):
+        g = np.asarray(g_us, dtype=np.float64)
+        if g.ndim != 2:
+            raise ValueError(f"g_us must be 2D, got shape {g.shape}")
+        if np.any(g < 0):
+            raise ValueError("cell conductances must be >= 0")
+        if sourcing not in ("single", "double"):
+            raise ValueError(f"unknown sourcing {sourcing!r}")
+        self.g_us = g
+        self.m, self.n = g.shape
+        self.g_wl = _wire_conductance_us(r_wl_ohm)
+        self.g_bl = _wire_conductance_us(r_bl_ohm)
+        self.sourcing = sourcing
+        self.n_unknowns = 2 * self.m * self.n
+        self._assemble()
+
+    # node numbering: W[i,j] -> i*n + j ; B[i,j] -> m*n + i*n + j
+    def _widx(self, i, j):
+        return i * self.n + j
+
+    def _bidx(self, i, j):
+        return self.m * self.n + i * self.n + j
+
+    def _assemble(self) -> None:
+        m, n = self.m, self.n
+        g, g_wl, g_bl = self.g_us, self.g_wl, self.g_bl
+        rows, cols, vals = [], [], []
+        diag = np.zeros(self.n_unknowns)
+
+        def add(a, b, c):
+            """Conductance c between nodes a and b (Laplacian stencil)."""
+            diag[a] += c
+            diag[b] += c
+            rows.extend((a, b))
+            cols.extend((b, a))
+            vals.extend((-c, -c))
+
+        for i in range(m):
+            for j in range(n):
+                wi, bi = self._widx(i, j), self._bidx(i, j)
+                if g[i, j] > 0:
+                    add(wi, bi, g[i, j])
+                if j + 1 < n:  # wordline segment
+                    add(wi, self._widx(i, j + 1), g_wl)
+                if i + 1 < m:  # bitline segment
+                    add(bi, self._bidx(i + 1, j), g_bl)
+            # driver legs (ground side folded into diag; injection in b)
+            diag[self._widx(i, 0)] += g_wl
+            if self.sourcing == "double":
+                diag[self._widx(i, n - 1)] += g_wl
+        for j in range(n):  # TIA legs
+            diag[self._bidx(m - 1, j)] += g_bl
+
+        idx = np.arange(self.n_unknowns)
+        rows.extend(idx)
+        cols.extend(idx)
+        vals.extend(diag)
+
+        if HAS_SCIPY:
+            A = _sp.coo_matrix(
+                (vals, (rows, cols)),
+                shape=(self.n_unknowns, self.n_unknowns)).tocsc()
+            self._lu = _spla.splu(A)
+            self._A = A
+            self._dense = None
+        else:
+            if self.n_unknowns > _DENSE_MAX_UNKNOWNS:
+                raise RuntimeError(
+                    f"{self.m}x{self.n} array needs {self.n_unknowns} "
+                    f"unknowns; the dense fallback caps at "
+                    f"{_DENSE_MAX_UNKNOWNS} — install scipy for larger "
+                    f"oracle solves")
+            A = np.zeros((self.n_unknowns, self.n_unknowns))
+            np.add.at(A, (np.asarray(rows), np.asarray(cols)),
+                      np.asarray(vals, dtype=np.float64))
+            self._dense = A
+            self._A = A
+            self._lu = None
+
+    def _rhs(self, x: np.ndarray) -> np.ndarray:
+        b = np.zeros(self.n_unknowns)
+        b[[self._widx(i, 0) for i in range(self.m)]] = self.g_wl * x
+        if self.sourcing == "double":
+            b[[self._widx(i, self.n - 1) for i in range(self.m)]] += (
+                self.g_wl * x)
+        return b
+
+    def node_voltages(self, x: np.ndarray) -> np.ndarray:
+        """Solve for all node voltages under drive ``x`` (volts)."""
+        x = np.asarray(x, dtype=np.float64)
+        if x.shape != (self.m,):
+            raise ValueError(f"x must have shape ({self.m},), got {x.shape}")
+        b = self._rhs(x)
+        if self._lu is not None:
+            v = self._lu.solve(b)
+        else:
+            v = np.linalg.solve(self._dense, b)
+        return v
+
+    def kcl_residual(self, v: np.ndarray, x: np.ndarray) -> float:
+        """Max |KCL current imbalance| of a solution, in µA (sanity check)."""
+        b = self._rhs(np.asarray(x, dtype=np.float64))
+        return float(np.max(np.abs(self._A @ v - b)))
+
+    def output_currents(self, x: np.ndarray,
+                        check_residual: bool = False) -> np.ndarray:
+        """Per-column TIA currents in µA for drive voltages ``x``."""
+        v = self.node_voltages(x)
+        if check_residual:
+            res = self.kcl_residual(v, x)
+            scale = max(1.0, float(np.max(np.abs(self.g_us))
+                                   * np.max(np.abs(x), initial=0.0)))
+            if res > 1e-6 * scale:
+                raise AssertionError(
+                    f"KCL residual {res:.3e} µA exceeds tolerance")
+        b_bottom = v[self.m * self.n + (self.m - 1) * self.n:]
+        return self.g_bl * b_bottom
+
+
+def solve_nodal(g_us: np.ndarray, x: np.ndarray, r_wl_ohm: float,
+                r_bl_ohm: float, sourcing: str = "single",
+                check_residual: bool = False) -> np.ndarray:
+    """Exact column currents (µA) of one parasitic crossbar under drive x."""
+    sys_ = NodalSystem(g_us, r_wl_ohm, r_bl_ohm, sourcing)
+    return sys_.output_currents(np.asarray(x, np.float64), check_residual)
+
+
+def exact_effective_conductances(g_us: np.ndarray, r_wl_ohm: float,
+                                 r_bl_ohm: float,
+                                 sourcing: str = "single") -> np.ndarray:
+    """The exact effective-conductance matrix G_eff (µS).
+
+    Row ``i`` is the column-current response to a unit drive on wordline
+    ``i`` alone (all other drivers at 0 V, still loading the network).
+    The network is linear, so ``y = x @ G_eff`` *exactly*, for any x —
+    this is the ground truth the closed-form attenuation approximates.
+    One LU factorization serves all m right-hand sides.
+    """
+    g = np.asarray(g_us, dtype=np.float64)
+    sys_ = NodalSystem(g, r_wl_ohm, r_bl_ohm, sourcing)
+    out = np.empty_like(g)
+    eye = np.eye(sys_.m)
+    for i in range(sys_.m):
+        out[i] = sys_.output_currents(eye[i])
+    return out
+
+
+def exact_mac(g_us: np.ndarray, x: np.ndarray, r_wl_ohm: float,
+              r_bl_ohm: float, sourcing: str = "single") -> np.ndarray:
+    """Exact single-polarity MAC y_j (µA) including all parasitics."""
+    return solve_nodal(g_us, x, r_wl_ohm, r_bl_ohm, sourcing,
+                       check_residual=True)
+
+
+def exact_mac_weights(w: np.ndarray, x: np.ndarray, r_wl_ohm: float,
+                      r_bl_ohm: float,
+                      sourcing: str = "single") -> np.ndarray:
+    """Exact differential-pair MAC in weight units (the oracle for
+    :func:`repro.core.crossbar.ir_effective_weights`): each polarity is its
+    own physical array, read with the same drive, recombined digitally."""
+    g_pos, g_neg = weights_to_conductance_pairs(w)
+    y_pos = solve_nodal(g_pos, x, r_wl_ohm, r_bl_ohm, sourcing)
+    y_neg = solve_nodal(g_neg, x, r_wl_ohm, r_bl_ohm, sourcing)
+    return (y_pos - y_neg) / GAMMA_US
+
+
+def exact_effective_weights(w: np.ndarray, r_wl_ohm: float, r_bl_ohm: float,
+                            sourcing: str = "single") -> np.ndarray:
+    """Exact effective weight matrix of the differential deployment."""
+    g_pos, g_neg = weights_to_conductance_pairs(w)
+    ge_pos = exact_effective_conductances(g_pos, r_wl_ohm, r_bl_ohm, sourcing)
+    ge_neg = exact_effective_conductances(g_neg, r_wl_ohm, r_bl_ohm, sourcing)
+    return (ge_pos - ge_neg) / GAMMA_US
+
+
+def exact_ramp_attenuation(g_us: np.ndarray, r_wl_ohm: float,
+                           r_bl_ohm: float,
+                           wl_segments: float = 0.0) -> np.ndarray:
+    """Exact sequential-read attenuation of a ramp column (one device on at
+    a time): closed form, since the single-device path is a pure voltage
+    divider — kept here as the oracle-side twin of
+    :func:`repro.core.crossbar.ramp_series_attenuation` (they must agree to
+    machine precision; the test pins that)."""
+    g = np.asarray(g_us, dtype=np.float64) * 1e-6
+    P = g.shape[-1]
+    k = np.arange(P, dtype=np.float64)
+    r_series = r_bl_ohm * (P - k) + r_wl_ohm * wl_segments
+    return 1.0 / (1.0 + g * r_series)

@@ -90,6 +90,251 @@ def stuck_at_off(key, w, prob: float):
 
 
 # ---------------------------------------------------------------------------
+# Per-device (differential-pair) noise
+# ---------------------------------------------------------------------------
+#
+# The legacy functions above draw ONE sample per weight.  The programmed chip
+# is a differential pair (weights_to_conductance_pairs): each weight is two
+# physical devices with independent errors, and each device clips at
+# [0, G_max] *individually*.  For a mid-range weight the two-device read has
+# twice the variance of the single-draw model; near w = 0 the per-device
+# g >= 0 clipping makes the error distribution asymmetric in a way the
+# single-draw model cannot represent.  These paired variants are the faithful
+# path, enabled via DeviceModel(paired_noise=True); the single-draw legacy
+# behaviour stays the default so pinned S13/preset parities remain bitwise.
+
+def noise_conductance_pairs(key, g_pos_us, g_neg_us, sigma_us: float):
+    """Independent N(0, sigma_us) per device, clipped to [0, G_max] each."""
+    k_p, k_n = jax.random.split(key)
+    g_pos = g_pos_us + sigma_us * jax.random.normal(
+        k_p, jnp.shape(g_pos_us), dtype=jnp.result_type(g_pos_us, jnp.float32))
+    g_neg = g_neg_us + sigma_us * jax.random.normal(
+        k_n, jnp.shape(g_neg_us), dtype=jnp.result_type(g_neg_us, jnp.float32))
+    g_pos = jnp.clip(g_pos, 0.0, G_MAX_US)
+    g_neg = jnp.clip(g_neg, 0.0, G_MAX_US)
+    return g_pos, g_neg
+
+
+def _weights_to_pairs_jnp(w):
+    w = jnp.clip(w, -W_CLIP, W_CLIP)
+    return GAMMA_US * jnp.maximum(w, 0.0), GAMMA_US * jnp.maximum(-w, 0.0)
+
+
+def write_noise_weights_paired(key, w, sigma_w: float = WRITE_SIGMA_W):
+    """Per-device programming error: two draws per weight, per-device clip."""
+    g_pos, g_neg = _weights_to_pairs_jnp(w)
+    g_pos, g_neg = noise_conductance_pairs(key, g_pos, g_neg,
+                                           sigma_w * GAMMA_US)
+    return ((g_pos - g_neg) / GAMMA_US).astype(w.dtype)
+
+
+def read_noise_weights_paired(key, w, sigma_w: float = READ_SIGMA_W):
+    """Per-device read fluctuation.  Returns the *noisy weight* (not an
+    additive delta): the per-device g >= 0 clipping makes the result depend
+    on the programmed conductances, unlike the legacy additive model."""
+    g_pos, g_neg = _weights_to_pairs_jnp(w)
+    g_pos, g_neg = noise_conductance_pairs(key, g_pos, g_neg,
+                                           sigma_w * GAMMA_US)
+    return ((g_pos - g_neg) / GAMMA_US).astype(w.dtype)
+
+
+def write_noise_pairs_np(rng: np.random.Generator, g_pos_us: np.ndarray,
+                         g_neg_us: np.ndarray, sigma_us: float):
+    """Host-side (numpy) per-device write noise — build-stage twin of
+    :func:`noise_conductance_pairs` for `DeviceModel.age_weights`."""
+    g_pos = g_pos_us + rng.normal(0.0, sigma_us, size=np.shape(g_pos_us))
+    g_neg = g_neg_us + rng.normal(0.0, sigma_us, size=np.shape(g_neg_us))
+    return (np.clip(g_pos, 0.0, G_MAX_US), np.clip(g_neg, 0.0, G_MAX_US))
+
+
+# ---------------------------------------------------------------------------
+# Line resistance (IR drop) — closed-form first-order kernel + fixed point
+# ---------------------------------------------------------------------------
+#
+# Topology (matches the exact nodal oracle in repro.core.circuit):
+#
+# * wordline i (length n_cols) is driven by a voltage source at the left
+#   (``sourcing="single"``) or at both ends (``"double"``), with wire
+#   resistance ``r_wl_ohm`` per segment (driver->col0, col0->col1, ...);
+# * bitline j (length n_rows) is sensed by a virtual-ground TIA below the
+#   last row, with ``r_bl_ohm`` per segment;
+# * cell (i, j) is a conductance between wordline node W[i,j] and bitline
+#   node B[i,j].
+#
+# The network is linear, so by superposition an *exact* effective weight
+# matrix W_eff exists (unit drive on one row at a time).  To first order in
+# (r*G) the relative current loss of cell (i, j) is a symmetric-kernel sum
+# over its row (wordline drop) and its column (bitline rise):
+#
+#   d_wl[i,j] = r_wl * sum_j' g[i,j'] * K_wl(j, j')
+#   d_bl[i,j] = r_bl * sum_i' g[i',j] * (n_rows - max(i, i'))
+#
+# with K_wl(j,j') = min(j,j')+1 for single-side sourcing and the grounded-
+# both-ends Green's function (min+1)*(n_cols-max)/(n_cols+1) for double-side.
+# The bitline kernel includes the *neighbour loading* term (cells of other
+# rows pulling the raised bitline back down), which enters at the same order
+# as the self term — dropping it breaks the superposition identity.
+#
+# Both kernel sums reduce to cumulative sums, so the correction is O(m*n),
+# vectorized, jittable and differentiable.  ``line_attenuation`` converts the
+# drop into s = 1/(1+d) (exact for an isolated cell against a pure series
+# resistance) and optionally re-evaluates the drop with the attenuated
+# conductances for a few fixed-point iterations, resumming the dominant
+# higher-order terms.  Validity: first-order error is O((r*G_tot)^2); the
+# ir_sweep benchmark maps where the corrected MAC stays within 1% of the
+# exact solve (r_wire ~ 1 ohm at 64x64 with paper conductances).
+
+def line_drop(g_us, r_wl_ohm: float, r_bl_ohm: float,
+              sourcing: str = "single"):
+    """First-order relative IR drop ``d[i,j]`` for conductances ``g_us`` (µS).
+
+    ``g_us`` has shape (..., n_rows, n_cols); the drop is dimensionless.
+    """
+    g = jnp.asarray(g_us) * 1e-6  # µS -> S; r in ohm => d dimensionless
+    n_rows, n_cols = g.shape[-2], g.shape[-1]
+    jj = jnp.arange(n_cols, dtype=g.dtype)
+    ii = jnp.arange(n_rows, dtype=g.dtype)
+
+    # --- wordline kernel (sum over the row, kernel in column index) ---
+    if sourcing == "single":
+        # K(j,j') = min(j,j')+1:  A_j + (j+1)*(S - P_j)  with inclusive
+        # cumsums P = cumsum(g), A = cumsum(g*(j'+1)).
+        P = jnp.cumsum(g, axis=-1)
+        A = jnp.cumsum(g * (jj + 1.0), axis=-1)
+        S = P[..., -1:]
+        d_wl = r_wl_ohm * (A + (jj + 1.0) * (S - P))
+    elif sourcing == "double":
+        # K(j,j') = (min+1)*(m-max)/(m+1), m = n_cols (grounded both ends):
+        # ((m-j)*A_j + (j+1)*(Bt - B_j)) / (m+1)
+        m = float(n_cols)
+        A = jnp.cumsum(g * (jj + 1.0), axis=-1)
+        B = jnp.cumsum(g * (m - jj), axis=-1)
+        Bt = B[..., -1:]
+        d_wl = r_wl_ohm * ((m - jj) * A + (jj + 1.0) * (Bt - B)) / (m + 1.0)
+    else:
+        raise ValueError(f"unknown sourcing {sourcing!r}")
+
+    # --- bitline kernel (sum over the column, kernel in row index) ---
+    # K(i,i') = n_rows - max(i,i'):  (n-i)*C_i + (T - D_i)
+    m_r = float(n_rows)
+    C = jnp.cumsum(g, axis=-2)
+    D = jnp.cumsum(g * (m_r - ii)[..., :, None], axis=-2)
+    T = D[..., -1:, :]
+    d_bl = r_bl_ohm * ((m_r - ii)[..., :, None] * C + (T - D))
+    return d_wl + d_bl
+
+
+def line_attenuation(g_us, r_wl_ohm: float, r_bl_ohm: float,
+                     sourcing: str = "single", n_iter: int = 2):
+    """Multiplicative attenuation s with g_eff = g*s, s = 1/(1+d).
+
+    ``n_iter`` extra fixed-point sweeps re-evaluate the drop with the
+    attenuated (current-carrying) conductances, which resums the dominant
+    higher-order terms of the nodal solution.
+    """
+    if r_wl_ohm == 0.0 and r_bl_ohm == 0.0:
+        return jnp.ones_like(jnp.asarray(g_us))
+    d = line_drop(g_us, r_wl_ohm, r_bl_ohm, sourcing)
+    s = 1.0 / (1.0 + d)
+    for _ in range(max(0, n_iter)):
+        d = line_drop(g_us * s, r_wl_ohm, r_bl_ohm, sourcing)
+        s = 1.0 / (1.0 + d)
+    return s
+
+
+def ir_effective_weights(w, r_wl_ohm: float, r_bl_ohm: float,
+                         sourcing: str = "single", n_iter: int = 2):
+    """IR-drop-corrected effective weights for the differential pair.
+
+    Each polarity is its own physical array (Fig. S9 differential columns),
+    so the attenuation is computed per polarity and the corrected
+    conductances recombined in weight units.  Identity when r_wl=r_bl=0.
+    """
+    if r_wl_ohm == 0.0 and r_bl_ohm == 0.0:
+        return w
+    g_pos, g_neg = _weights_to_pairs_jnp(w)
+    s_pos = line_attenuation(g_pos, r_wl_ohm, r_bl_ohm, sourcing, n_iter)
+    s_neg = line_attenuation(g_neg, r_wl_ohm, r_bl_ohm, sourcing, n_iter)
+    return ((g_pos * s_pos - g_neg * s_neg) / GAMMA_US).astype(w.dtype)
+
+
+def ir_effective_weights_tiled(w, r_wl_ohm: float, r_bl_ohm: float,
+                               sourcing: str = "single", n_iter: int = 2,
+                               plan: Optional["TilePlan"] = None):
+    """:func:`ir_effective_weights` applied per *physical* crossbar tile.
+
+    The parasitic wires live inside one crossbar, so a logical matrix
+    larger than a tile must be corrected block-by-block under its
+    :class:`TilePlan` (default: the paper's 633x512 tiling) — treating the
+    whole matrix as one array would badly overestimate the wire runs.
+    Static-slice blocks keep this jittable; matrices within one tile take
+    the single-block fast path.
+    """
+    if r_wl_ohm == 0.0 and r_bl_ohm == 0.0:
+        return w
+    if w.ndim != 2:
+        # stacked per-layer weights: correct each trailing matrix
+        flat = w.reshape((-1,) + w.shape[-2:])
+        out = jnp.stack([
+            ir_effective_weights_tiled(flat[i], r_wl_ohm, r_bl_ohm,
+                                       sourcing, n_iter, plan)
+            for i in range(flat.shape[0])])
+        return out.reshape(w.shape)
+    p = plan if plan is not None else plan_tiles(w.shape[0], w.shape[1])
+    if p.n_crossbars == 1:
+        return ir_effective_weights(w, r_wl_ohm, r_bl_ohm, sourcing, n_iter)
+    out = w
+    for _, rs, cs in p.blocks():
+        out = out.at[rs, cs].set(
+            ir_effective_weights(w[rs, cs], r_wl_ohm, r_bl_ohm,
+                                 sourcing, n_iter))
+    return out
+
+
+def ramp_series_attenuation(g_us, r_wl_ohm: float, r_bl_ohm: float,
+                            wl_segments: float = 0.0):
+    """Series-resistance attenuation for a ramp column read one device at a
+    time (host-side numpy; used when rebuilding programmed ramps).
+
+    Ramp devices are strobed sequentially, so there is no neighbour-current
+    coupling: device k only sees the series path driver -> wordline run
+    (``wl_segments`` segments of r_wl) -> cell -> bitline run down to the
+    TIA (``P - k`` segments of r_bl).  The voltage-divider attenuation
+    g_eff = g / (1 + g*R_series) is *exact* for this single-device path.
+    """
+    g = np.asarray(g_us, dtype=np.float64) * 1e-6
+    P = g.shape[-1]
+    k = np.arange(P, dtype=np.float64)
+    r_series = r_bl_ohm * (P - k) + r_wl_ohm * wl_segments
+    return 1.0 / (1.0 + g * r_series)
+
+
+# ---------------------------------------------------------------------------
+# Nonlinear memristor I-V (Kim et al., arXiv 1703.10642)
+# ---------------------------------------------------------------------------
+
+def nonlinear_iv_read(x, alpha: float, input_clip: float = 1.0):
+    """Polynomial I-V distortion of the MAC read, folded into the input path.
+
+    Kim et al. model the memristor read current as I = a*sinh(b*V): every
+    device in a wordline sees the same read voltage V_i = x_i, and the
+    sinh shape factors out of the per-device conductance, so the distortion
+    is a per-input transform that passes through the (linear) matmul.  We
+    keep the cubic Taylor term and normalize the gain at the clip voltage:
+
+        phi(x) = clip * (v + c3*v^3) / (1 + c3),   v = x/clip,  c3 = alpha^2/6
+
+    alpha = b*V_clip is the nonlinearity parameter; alpha -> 0 is identity.
+    Odd, monotone, and phi(clip) = clip so calibrated full-scale is kept.
+    """
+    if alpha == 0.0:
+        return x
+    c3 = (alpha * alpha) / 6.0
+    v = x / input_clip
+    return (input_clip * (v + c3 * v * v * v) / (1.0 + c3)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
 # Long-term drift (Supp. S13)
 # ---------------------------------------------------------------------------
 
@@ -134,6 +379,11 @@ class DriftModel:
         b = (g_us - lo0) / np.maximum(hi0 - lo0, 1e-12)
         a = 1.0 - b
         drifted = a * refs_t[idx] + b * refs_t[idx + 1]
+        # Top bin: for g at or above the highest reference level BOTH nearest
+        # reference curves are the top one, so the device follows it exactly.
+        # Without this, the b > 1 extrapolation above crosses the stale
+        # (n-2, n-1) curve pair and over/under-shoots the top curve.
+        drifted = np.where(g_us >= refs0[-1], refs_t[-1], drifted)
         if rng is not None:
             decades = max(0.0, math.log10(max(t_s, self.t0_s) / self.t0_s))
             drifted = drifted + rng.normal(

@@ -133,6 +133,41 @@ class Calibration:
     one_point: bool = True
 
 
+@dataclasses.dataclass(frozen=True)
+class LineResistance:
+    """Wordline/bitline parasitic resistance (IR drop).
+
+    Applies the position-dependent effective-conductance correction of
+    :func:`repro.core.crossbar.ir_effective_weights` to weight crossbars
+    (per physical tile, at step time, jnp — stays jittable/differentiable
+    for analog-aware training) and the exact series-resistance attenuation
+    to sequentially-read ramp columns at build time (so INL probes see the
+    IR-induced curvature).  Validated against the exact nodal solver in
+    :mod:`repro.core.circuit`.
+
+    ``sourcing``: ``"single"`` drives each wordline from the left only;
+    ``"double"`` from both ends (halves the worst-case wordline drop).
+    ``n_iter``: fixed-point refinement sweeps of the closed-form correction.
+    """
+
+    r_wl_ohm: float = 1.0
+    r_bl_ohm: float = 1.0
+    sourcing: str = "single"
+    n_iter: int = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class NonlinearIV:
+    """Nonlinear memristor I-V (Kim et al., arXiv 1703.10642).
+
+    ``alpha = b*V_clip`` of the sinh read characteristic; the gain-
+    normalized cubic distortion factors through the MAC as a per-input
+    transform (:func:`repro.core.crossbar.nonlinear_iv_read`).
+    """
+
+    alpha: float = 0.5
+
+
 _STAGE_TYPES = {
     "write": WriteNoise,
     "read": ReadNoise,
@@ -141,6 +176,8 @@ _STAGE_TYPES = {
     "stuck": StuckAt,
     "redundancy": Redundancy,
     "calibration": Calibration,
+    "line": LineResistance,
+    "nonlinear_iv": NonlinearIV,
 }
 
 
@@ -166,6 +203,13 @@ class DeviceModel:
     stuck: Optional[StuckAt] = None
     redundancy: Redundancy = Redundancy()
     calibration: Calibration = Calibration(one_point=False)
+    line: Optional[LineResistance] = None
+    nonlinear_iv: Optional[NonlinearIV] = None
+    # Draw write/read noise per *device* of the differential pair (two
+    # independent draws, per-device [0, G_max] clipping) instead of the
+    # legacy one-draw-per-weight model.  Off by default so the pinned
+    # S13/preset parities stay bitwise.
+    paired_noise: bool = False
     # Per-deployment seed for the build-stage draws (ramp programming /
     # weight aging) when no explicit rng is supplied.
     seed: int = 0
@@ -201,7 +245,70 @@ class DeviceModel:
         """True if deployment realizes any once-per-chip nonideality."""
         return (self.write is not None
                 or self.stuck is not None
-                or (self.drift is not None and self.drift.t_s > 0))
+                or (self.drift is not None and self.drift.t_s > 0)
+                or self.line is not None)
+
+    # -- line-resistance hooks ---------------------------------------------
+
+    def line_rebuild(self, frac: float = 1.0):
+        """Threshold-realization hook threading the line stage into ramps.
+
+        ``None`` (identity — plain ``ramp_from_conductances``) without a
+        line stage; otherwise ``(ideal, g_us) -> Ramp`` applying the
+        sequential-read series-resistance attenuation before the cumsum
+        rebuild, so calibration, redundancy INL selection, drift rebuilds
+        and the serve-time probes all judge the *wire-read* thresholds.
+        ``frac`` is the normalized wordline run from the driver to the ramp
+        column's bank (1.0 = far end of the array).
+        """
+        if self.line is None:
+            return None
+        ln = self.line
+
+        def rebuild(ideal: Ramp, g_us: np.ndarray) -> Ramp:
+            g = np.asarray(g_us, dtype=np.float64)
+            s = CB.ramp_series_attenuation(
+                g, ln.r_wl_ohm, ln.r_bl_ohm,
+                wl_segments=frac * g.shape[-1])
+            return ramp_from_conductances(ideal, g * s)
+
+        return rebuild
+
+    def bank_line_frac(self, j: int, n_banks: int) -> float:
+        """Normalized wordline run to bank ``j``'s ramp column.
+
+        Single-side sourcing: monotone with distance from the driver (the
+        last col-tile is worst).  Double-side: distance to the *nearest*
+        driver, worst in the middle, never reaching the single-side far-end
+        value — exactly the qualitative benefit of double sourcing.
+        """
+        if self.line is None or n_banks <= 1:
+            return 1.0
+        if self.line.sourcing == "double":
+            return 2.0 * min(j + 1, n_banks - j) / (n_banks + 1)
+        return (j + 1) / n_banks
+
+    def worst_bank(self, n_banks: int) -> int:
+        """The col-tile whose ramp sees the largest IR drop."""
+        return max(range(n_banks),
+                   key=lambda j: (self.bank_line_frac(j, n_banks), j))
+
+    def bank_device(self, j: int, n_banks: int) -> "DeviceModel":
+        """Bank-aware Supp. S11 redundancy placement.
+
+        IR drop is worst far from the driver, so when a line stage is
+        present the redundant ramp copies are spent on the worst col-tile
+        and the remaining banks are programmed single-copy (same total
+        device budget as uniform R on the worst bank, strictly cheaper
+        elsewhere).  Identity without a line stage or redundancy, so every
+        existing banked deployment stays bitwise.
+        """
+        if (self.line is None or n_banks <= 1
+                or self.redundancy.n_copies <= 1):
+            return self
+        if j == self.worst_bank(n_banks):
+            return self
+        return self.replace(redundancy=Redundancy(n_copies=1))
 
     def _build_rng(self, *salt: int) -> np.random.Generator:
         return np.random.default_rng([self.seed & 0xFFFFFFFF, *salt])
@@ -218,7 +325,8 @@ class DeviceModel:
 
     def program(self, ramp: Ramp,
                 rng: Optional[np.random.Generator] = None,
-                *, instance: str = "") -> ProgrammedRamp:
+                *, instance: str = "",
+                line_frac: float = 1.0) -> ProgrammedRamp:
         """Program one NL-ADC ramp column under this model.
 
         Wraps the Supp. S9/S11 pipeline (``program_ramp`` /
@@ -241,17 +349,19 @@ class DeviceModel:
         sigma = self.write.sigma_us if self.write is not None else 0.0
         stuck = self.stuck.prob if self.stuck is not None else 0.0
         cal = self.calibration.one_point
+        rebuild = self.line_rebuild(line_frac)
         if self.redundancy.n_copies > 1:
             prog = CAL.program_with_redundancy(
                 ramp, rng, copies=self.redundancy.n_copies, sigma_us=sigma,
-                stuck_off_prob=stuck, calibrate=cal)
+                stuck_off_prob=stuck, calibrate=cal, rebuild=rebuild)
         else:
             prog = CAL.program_ramp(ramp, rng, sigma_us=sigma,
-                                    stuck_off_prob=stuck, calibrate=cal)
+                                    stuck_off_prob=stuck, calibrate=cal,
+                                    rebuild=rebuild)
         if self.drift is not None and self.drift.t_s > 0:
             g = self.drift.model().drift(prog.conductances_us,
                                          self.drift.t_s, rng)
-            drifted = ramp_from_conductances(ramp, g)
+            drifted = (rebuild or ramp_from_conductances)(ramp, g)
             n_cali = prog.n_cali_devices
             if cal:
                 drifted, n_cali = CAL.one_point_calibrate(
@@ -261,18 +371,22 @@ class DeviceModel:
                                   n_cali_devices=n_cali)
         return prog
 
-    def deploy_ramp(self, ramp: Ramp, *, instance: str = "") -> Ramp:
+    def deploy_ramp(self, ramp: Ramp, *, instance: str = "",
+                    line_frac: float = 1.0) -> Ramp:
         """The comparator thresholds a deployed chip actually realizes.
 
         Identity when the model has no build-stage nonideality; otherwise
         the programmed (noisy/faulty/redundant/calibrated/drifted) ramp,
         drawn deterministically from ``seed`` + the ramp identity (plus the
         optional ``instance`` tile key) so every backend — and every
-        re-build of the activation — sees the same chip.
+        re-build of the activation — sees the same chip.  ``line_frac``
+        positions the ramp column along the wordline for the IR-drop
+        rebuild (1.0 = far end; ignored without a line stage).
         """
         if not self.has_build_stage:
             return ramp
-        return self.program(ramp, instance=instance).programmed
+        return self.program(ramp, instance=instance,
+                            line_frac=line_frac).programmed
 
     def deploy_ramp_bank(self, ramp: Ramp, n_banks: int, *,
                          instance: str = ""):
@@ -284,10 +398,17 @@ class DeviceModel:
         bank's draw is keyed purely by its col-tile index — independent of
         ``n_banks``, of realization order, and of which other banks exist
         (the bank-permutation-independence property).
+
+        Under a line stage each bank additionally gets its position-true
+        IR rebuild (``bank_line_frac``) and the bank-aware redundancy
+        placement of :meth:`bank_device` — both identity otherwise.
         """
         prefix = f"{instance}@" if instance else ""
-        return tuple(self.deploy_ramp(ramp, instance=f"{prefix}col{j}")
-                     for j in range(n_banks))
+        return tuple(
+            self.bank_device(j, n_banks).deploy_ramp(
+                ramp, instance=f"{prefix}col{j}",
+                line_frac=self.bank_line_frac(j, n_banks))
+            for j in range(n_banks))
 
     def age_weights(self, w: np.ndarray,
                     rng: np.random.Generator) -> np.ndarray:
@@ -301,8 +422,16 @@ class DeviceModel:
         """
         w = np.asarray(w, dtype=np.float64)
         if self.write is not None:
-            w = np.clip(w + rng.normal(0.0, self.write.sigma_w, w.shape),
-                        -CB.W_CLIP, CB.W_CLIP)
+            if self.paired_noise:
+                # Faithful differential-pair path: independent error per
+                # physical device, each clipped at [0, G_max] individually.
+                g_pos, g_neg = CB.weights_to_conductance_pairs(w)
+                g_pos, g_neg = CB.write_noise_pairs_np(
+                    rng, g_pos, g_neg, self.write.sigma_us)
+                w = CB.conductance_pairs_to_weights(g_pos, g_neg)
+            else:
+                w = np.clip(w + rng.normal(0.0, self.write.sigma_w, w.shape),
+                            -CB.W_CLIP, CB.W_CLIP)
         if self.stuck is not None and self.stuck.prob > 0:
             w = np.where(rng.random(w.shape) < self.stuck.prob, 0.0, w)
         if self.drift is not None and self.drift.t_s > 0:
@@ -429,7 +558,8 @@ class DeviceModel:
 
     def to_dict(self) -> Dict[str, Any]:
         """Plain-JSON representation (round-trips via device_from_dict)."""
-        out: Dict[str, Any] = {"name": self.name, "seed": self.seed}
+        out: Dict[str, Any] = {"name": self.name, "seed": self.seed,
+                               "paired_noise": self.paired_noise}
         for field in _STAGE_TYPES:
             stage = getattr(self, field)
             out[field] = None if stage is None else dataclasses.asdict(stage)
@@ -437,9 +567,15 @@ class DeviceModel:
 
 
 def device_from_dict(d: Dict[str, Any]) -> DeviceModel:
-    """Inverse of :meth:`DeviceModel.to_dict`."""
+    """Inverse of :meth:`DeviceModel.to_dict`.
+
+    Tolerates dicts from older schema versions (missing line/nonlinear_iv/
+    paired_noise keys default to the legacy behaviour), so pre-existing
+    deployment checkpoints keep restoring bitwise.
+    """
     kw: Dict[str, Any] = {"name": d.get("name", "custom"),
-                          "seed": int(d.get("seed", 0))}
+                          "seed": int(d.get("seed", 0)),
+                          "paired_noise": bool(d.get("paired_noise", False))}
     for field, typ in _STAGE_TYPES.items():
         v = d.get(field)
         if v is None:
@@ -520,5 +656,28 @@ STRESSED = DeviceModel(
     calibration=Calibration(one_point=True),
 )
 
-for _m in (IDEAL, PAPER, PAPER_INFER, AGED_1DAY, STRESSED):
+# Circuit-level fidelity: the full deployment simulation plus wordline/
+# bitline parasitics (1 ohm/segment, single-side sourcing — inside the
+# closed-form correction's 1%-validity region at the paper's 633-row tiles'
+# active-row cap) and the Kim et al. I-V distortion at a mild alpha.
+PAPER_IR = PAPER_INFER.replace(
+    name="paper-ir",
+    line=LineResistance(r_wl_ohm=1.0, r_bl_ohm=1.0, sourcing="single"),
+    nonlinear_iv=NonlinearIV(alpha=0.5),
+)
+
+# Pessimistic circuit corner on top of the stressed statistics: 2.5 ohm
+# wires rescued by double-side sourcing, strong I-V nonlinearity, and the
+# faithful per-device (paired) noise path.  Registered as its own preset —
+# `stressed` itself stays untouched so the BENCH_device/bank/fleet pinned
+# baselines remain valid.
+STRESSED_IR = STRESSED.replace(
+    name="stressed-ir",
+    line=LineResistance(r_wl_ohm=2.5, r_bl_ohm=2.5, sourcing="double"),
+    nonlinear_iv=NonlinearIV(alpha=1.0),
+    paired_noise=True,
+)
+
+for _m in (IDEAL, PAPER, PAPER_INFER, AGED_1DAY, STRESSED, PAPER_IR,
+           STRESSED_IR):
     register_device(_m)

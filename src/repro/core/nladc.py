@@ -36,6 +36,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Optional, Tuple
 
 import jax
@@ -45,6 +46,43 @@ import numpy as np
 from repro.core import functions as F
 
 G_MAX_US = 150.0  # maximum programmable conductance, uS (paper Methods)
+
+
+class DegenerateThresholdWarning(UserWarning):
+    """Adjacent comparator thresholds collapsed to one float32 value.
+
+    The ramp tables are float64 ground truth, but the jnp comparator
+    operands are float32: under heavy IR drop (LineResistance squeezing the
+    top of the cumsum) or high-P ramps, two adjacent programmed thresholds
+    can round to the *same* float32 — the strict comparator then never
+    emits the code between them, silently merging ADC codes.  Detected at
+    deploy time (NLADC / DeployedBank construction), not at trace time
+    where the cast happens silently.
+    """
+
+
+def check_threshold_degeneracy(thresholds_f64, name: str,
+                               dtype=np.float32) -> int:
+    """Warn if distinct f64 thresholds become equal after the jnp cast.
+
+    Returns the number of degenerate adjacent pairs.  Exactly-equal f64
+    neighbours (a genuinely flat programmed step, e.g. a stuck-at-OFF ramp
+    device) are the chip's own doing and not counted — only pairs that are
+    distinct in the f64 ground truth but merged by the cast.
+    """
+    t64 = np.asarray(thresholds_f64, np.float64)
+    t32 = t64.astype(dtype)
+    merged = (np.diff(t32, axis=-1) == 0) & (np.diff(t64, axis=-1) != 0)
+    n_bad = int(np.count_nonzero(merged))
+    if n_bad:
+        warnings.warn(
+            f"ramp {name!r}: {n_bad} adjacent threshold pair(s) are "
+            f"distinct in float64 but collapse to the same {np.dtype(dtype)} "
+            f"value — the comparator will never emit the code(s) between "
+            f"them (merged ADC codes). Seen under heavy IR drop or high-P "
+            f"ramps; consider double-side sourcing, lower r_wire, or fewer "
+            f"bits.", DegenerateThresholdWarning, stacklevel=3)
+    return n_bad
 
 
 @dataclasses.dataclass(frozen=True)
@@ -449,6 +487,7 @@ class NLADC:
 
     def __init__(self, ramp: Ramp, dtype=jnp.float32):
         self.ramp = ramp
+        check_threshold_degeneracy(ramp.thresholds, ramp.name, dtype)
         self.thresholds = jnp.asarray(ramp.thresholds, dtype=dtype)
         self.y_table = jnp.asarray(ramp.y_table, dtype=dtype)
 

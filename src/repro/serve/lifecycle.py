@@ -102,19 +102,28 @@ class RecalPolicy:
 
 
 class RampState:
-    """One ramp column's programmed devices + accumulated calibration."""
+    """One ramp column's programmed devices + accumulated calibration.
+
+    ``line_frac`` fixes the column's physical position along the wordline
+    (the normalized wire run from the driver — per col-tile bank under a
+    LineResistance stage, 1.0 otherwise); every threshold rebuild of this
+    state goes through the device's IR-aware rebuild at that position, so
+    INL probes see the IR-drop-induced curvature the deployed comparators
+    actually suffer.
+    """
 
     def __init__(self, name: str, ideal: Ramp, g0_us: np.ndarray,
-                 cal_shift: float, n_cali: int):
+                 cal_shift: float, n_cali: int, line_frac: float = 1.0):
         self.name = name                      # tile/instance key
         self.ideal = ideal
         self.g0_us = np.asarray(g0_us, np.float64)
         self.cal_shift = float(cal_shift)
         self.n_cali = int(n_cali)
+        self.line_frac = float(line_frac)
 
     @classmethod
-    def program(cls, device: DeviceModel, ideal: Ramp,
-                name: str) -> "RampState":
+    def program(cls, device: DeviceModel, ideal: Ramp, name: str,
+                line_frac: float = 1.0) -> "RampState":
         """Fab-time programming of a *fresh* (age-0) column.
 
         Uses the device model's write/stuck/redundancy/calibration stages
@@ -124,14 +133,15 @@ class RampState:
         :meth:`recalibrate`.
         """
         fresh = device.replace(drift=None)
-        prog = fresh.program(ideal, instance=name)
+        prog = fresh.program(ideal, instance=name, line_frac=line_frac)
         # The calibration realized at programming time is a constant V_init
         # shift; recover it against the uncalibrated rebuild so thresholds
-        # at any age decompose as drift(g0) + cal_shift.
-        base = ramp_from_conductances(ideal, prog.conductances_us)
+        # at any age decompose as rebuild(drift(g0)) + cal_shift.
+        rebuild = device.line_rebuild(line_frac) or ramp_from_conductances
+        base = rebuild(ideal, prog.conductances_us)
         shift = float(prog.programmed.thresholds[0] - base.thresholds[0])
         return cls(name, ideal, prog.conductances_us, shift,
-                   prog.n_cali_devices)
+                   prog.n_cali_devices, line_frac)
 
     # -- pure functions of (state, device, age) --------------------------
 
@@ -148,8 +158,9 @@ class RampState:
         return drift.drift(self.g0_us, age_s, rng)
 
     def ramp_at(self, device: DeviceModel, age_s: float) -> Ramp:
-        base = ramp_from_conductances(
-            self.ideal, self.conductances_at(device, age_s))
+        rebuild = device.line_rebuild(self.line_frac) or \
+            ramp_from_conductances
+        base = rebuild(self.ideal, self.conductances_at(device, age_s))
         return base.with_thresholds(base.thresholds + self.cal_shift)
 
     def inl_at(self, device: DeviceModel, age_s: float) -> float:
@@ -181,7 +192,8 @@ class RampState:
     def to_dict(self) -> dict:
         return {"name": self.name, "ramp_name": self.ideal.name,
                 "bits": self.ideal.bits, "g0_us": self.g0_us.tolist(),
-                "cal_shift": self.cal_shift, "n_cali": self.n_cali}
+                "cal_shift": self.cal_shift, "n_cali": self.n_cali,
+                "line_frac": self.line_frac}
 
     @classmethod
     def from_dict(cls, d: dict, ideal: Ramp) -> "RampState":
@@ -191,7 +203,8 @@ class RampState:
                 f"({d['ramp_name']}, {d['bits']}b), got "
                 f"({ideal.name}, {ideal.bits}b)")
         return cls(d["name"], ideal, np.asarray(d["g0_us"], np.float64),
-                   d["cal_shift"], d["n_cali"])
+                   d["cal_shift"], d["n_cali"],
+                   float(d.get("line_frac", 1.0)))
 
 
 class RecalScheduler:
@@ -264,8 +277,14 @@ class RecalScheduler:
             for j in range(bank.n_banks):
                 key = self.bank_key(name, width, j)
                 if key not in self.ramps:
+                    # Bank-aware programming: position-true IR rebuild
+                    # (bank_line_frac) + Supp. S11 redundancy spent on the
+                    # worst col-tile (bank_device) — both identity without
+                    # a LineResistance stage.
                     self.ramps[key] = RampState.program(
-                        self.device, act.ideal_ramp, key)
+                        self.device.bank_device(j, bank.n_banks),
+                        act.ideal_ramp, key,
+                        self.device.bank_line_frac(j, bank.n_banks))
 
     # -- probes ------------------------------------------------------------
 

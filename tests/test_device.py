@@ -306,3 +306,114 @@ def test_serving_engine_applies_build_stage():
                          device=get_device("paper"))
     np.testing.assert_array_equal(np.asarray(eng2.params["w"]),
                                   np.asarray(params["w"]))
+
+
+# ---------------------------------------------------------------------------
+# Circuit-level stages: LineResistance / NonlinearIV (+ bank-aware placement)
+# ---------------------------------------------------------------------------
+
+from repro.core.device import LineResistance, NonlinearIV  # noqa: E402
+
+
+def test_ir_presets_registered():
+    for name in ("paper-ir", "stressed-ir"):
+        dev = get_device(name)
+        assert dev.line is not None and dev.nonlinear_iv is not None
+        assert dev.has_build_stage
+    assert get_device("stressed-ir").paired_noise
+    # the base presets stay untouched (pinned BENCH baselines)
+    assert get_device("stressed").line is None
+    assert not get_device("paper-infer").paired_noise
+
+
+def test_line_only_model_has_build_stage():
+    dev = DeviceModel(name="wires", line=LineResistance(1.0, 1.0))
+    assert dev.has_build_stage
+
+
+def test_paired_noise_serialization_roundtrip():
+    dev = DeviceModel(name="pn", write=WriteNoise(), paired_noise=True,
+                      line=LineResistance(2.0, 0.5, "double", 3),
+                      nonlinear_iv=NonlinearIV(alpha=0.7))
+    back = device_from_dict(json.loads(json.dumps(dev.to_dict())))
+    assert back == dev
+    # pre-stage dicts (older checkpoints) default to legacy behaviour
+    legacy = {"name": "old", "seed": 3, "write": {"sigma_us": 2.67}}
+    old = device_from_dict(legacy)
+    assert old.line is None and old.nonlinear_iv is None
+    assert not old.paired_noise
+
+
+def test_line_rebuild_attenuates_thresholds():
+    dev = DeviceModel(name="wires", line=LineResistance(2.0, 2.0))
+    ramp = build_ramp("tanh", 5)
+    deployed = dev.deploy_ramp(ramp)
+    span_ideal = ramp.thresholds[-1] - ramp.v_init
+    span_dep = deployed.thresholds[-1] - deployed.v_init
+    # IR drop squeezes the cumsum: deployed full scale is strictly smaller
+    assert abs(span_dep) < abs(span_ideal)
+    # far bank suffers more than near bank
+    near = dev.deploy_ramp(ramp, line_frac=0.1)
+    far = dev.deploy_ramp(ramp, line_frac=1.0)
+    from repro.core.nladc import inl_lsb
+    assert inl_lsb(far, ramp)[0] > inl_lsb(near, ramp)[0]
+
+
+def test_bank_line_frac_geometry():
+    single = DeviceModel(name="s", line=LineResistance(1.0, 1.0, "single"))
+    double = DeviceModel(name="d", line=LineResistance(1.0, 1.0, "double"))
+    n = 6
+    fr_s = [single.bank_line_frac(j, n) for j in range(n)]
+    fr_d = [double.bank_line_frac(j, n) for j in range(n)]
+    assert fr_s == sorted(fr_s) and fr_s[-1] == 1.0   # worst far bank
+    assert single.worst_bank(n) == n - 1
+    mid = double.worst_bank(n)
+    assert mid in (n // 2 - 1, n // 2)                # worst mid bank
+    assert max(fr_d) < 1.0                            # double sourcing helps
+    # no line stage: every bank identical
+    assert DeviceModel(name="x").bank_line_frac(2, n) == 1.0
+
+
+def test_bank_device_redundancy_placement():
+    dev = DeviceModel(name="r", write=WriteNoise(),
+                      redundancy=Redundancy(n_copies=4),
+                      line=LineResistance(1.0, 1.0, "single"))
+    n = 4
+    worst = dev.worst_bank(n)
+    for j in range(n):
+        bd = dev.bank_device(j, n)
+        if j == worst:
+            assert bd.redundancy.n_copies == 4
+        else:
+            assert bd.redundancy.n_copies == 1
+    # identity without a line stage (existing banked deployments bitwise)
+    plain = DeviceModel(name="p", write=WriteNoise(),
+                        redundancy=Redundancy(n_copies=4))
+    for j in range(n):
+        assert plain.bank_device(j, n) is plain
+
+
+def test_paired_noise_age_weights_variance(rng):
+    """age_weights under paired_noise: per-device errors, per-device clip."""
+    dev_single = DeviceModel(name="s", write=WriteNoise())
+    dev_paired = dev_single.replace(paired_noise=True)
+    w = np.full((300, 300), 1.0)
+    d_s = dev_single.age_weights(w, np.random.default_rng(0)) - w
+    d_p = dev_paired.age_weights(w, np.random.default_rng(0)) - w
+    var_s, var_p = float(np.var(d_s)), float(np.var(d_p))
+    sigma_w = dev_single.write.sigma_w
+    np.testing.assert_allclose(var_s, sigma_w**2, rtol=0.05)
+    expect_p = sigma_w**2 * (1.0 + 0.5 - 1.0 / (2 * np.pi))
+    np.testing.assert_allclose(var_p, expect_p, rtol=0.08)
+
+
+def test_infer_activation_sees_ir_curvature():
+    """An infer-mode activation under paper-ir deploys IR-curved thresholds
+    (INL > 0 even before any statistical noise)."""
+    from repro.core.nladc import inl_lsb
+
+    wires_only = DeviceModel(
+        name="wires", line=LineResistance(2.0, 2.0, "single"))
+    cfg = AnalogConfig(mode="infer", device=wires_only, backend="ref")
+    act = AnalogActivation("sigmoid", cfg)
+    assert inl_lsb(act.ramp, act.ideal_ramp)[0] > 0.01

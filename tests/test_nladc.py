@@ -122,3 +122,38 @@ def test_codes_are_thermometer_counts():
     n = adc.codes(x)
     brute = jnp.sum(x[:, None] > jnp.asarray(ramp.thresholds), axis=1)
     np.testing.assert_array_equal(np.asarray(n), np.asarray(brute))
+
+
+# ---------------------------------------------------------------------------
+# float32 threshold degeneracy guard (deploy-time)
+# ---------------------------------------------------------------------------
+
+def test_degenerate_threshold_warning_fires():
+    from repro.core.nladc import (DegenerateThresholdWarning,
+                                  check_threshold_degeneracy)
+
+    ramp = build_ramp("sigmoid", 5)
+    t = np.array(ramp.thresholds, np.float64)
+    # two thresholds distinct in f64 but inside one f32 ULP of each other
+    t[11] = t[10] + 1e-12
+    bad = ramp.with_thresholds(np.sort(t))
+    with pytest.warns(DegenerateThresholdWarning, match="collapse"):
+        n = check_threshold_degeneracy(bad.thresholds, "sigmoid")
+    assert n == 1
+    with pytest.warns(DegenerateThresholdWarning):
+        NLADC(bad)
+
+
+def test_degenerate_threshold_warning_silent_on_clean_and_exact_ramps():
+    import warnings as W
+    from repro.core.nladc import check_threshold_degeneracy
+
+    ramp = build_ramp("tanh", 5)
+    with W.catch_warnings():
+        W.simplefilter("error")
+        assert check_threshold_degeneracy(ramp.thresholds, "tanh") == 0
+        NLADC(ramp)
+        # exactly-equal f64 neighbours (stuck-at flat step) are NOT counted
+        t = np.array(ramp.thresholds, np.float64)
+        t[5] = t[4]
+        assert check_threshold_degeneracy(t, "tanh") == 0
