@@ -19,8 +19,10 @@ from repro.kernels import ref
 
 
 def _time(fn, *args, n=5):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    # warm up exactly once (compile + first run) and reuse the result —
+    # jax.block_until_ready handles tuples and single arrays alike
+    warm = fn(*args)
+    jax.block_until_ready(warm)
     t0 = time.perf_counter()
     for _ in range(n):
         jax.block_until_ready(fn(*args))

@@ -1,0 +1,123 @@
+"""Kernel CI gate: bitwise output digests + new-path parity, never wall clock.
+
+    PYTHONPATH=src python -m benchmarks.kernel_gate
+
+Re-runs the quick ``benchmarks.kernel_tune`` sweep and fails — exit code
+1 — when the kernel layer drifts from the committed
+``benchmarks/BENCH_kernels.json``:
+
+* the tuned blocks per kernel x shape must match the baseline (the
+  deterministic proxy sweep moved — intentional retunes re-record);
+* every shape cell's output digest must match EXACTLY (crc32 of the
+  kernel output bytes on seeded inputs — a single flipped ADC code fails
+  the gate) and the interpret-mode error vs the jnp oracle must stay at
+  the recorded scale;
+* the parity section must hold: threshold fast path bitwise-equal to the
+  dense banked layout, fused MoE einsum within LSB/2 of the ref backend
+  (codes) with matching STE grads, Pallas cached attention bitwise-equal
+  to ``attend_full`` — all with digests matching the baseline.
+
+``ref_us`` timings are recorded context only and are never compared.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from benchmarks import kernel_tune
+
+BASELINE = os.path.join(os.path.dirname(__file__), "BENCH_kernels.json")
+MOE_LSB_TOL = 0.5      # codes equal: decoded outputs within half an LSB
+GRAD_TOL = 1e-5
+
+
+def compare(results: dict, baseline: dict) -> list:
+    failures = []
+    for meta in ("platform", "backend_mode"):
+        if results[meta] != baseline[meta]:
+            failures.append(
+                f"{meta}: sweep ran on {results[meta]!r} but the baseline "
+                f"was recorded on {baseline[meta]!r}; re-record "
+                "BENCH_kernels.json for this platform")
+
+    want_cells, got_cells = baseline["shapes"], results["shapes"]
+    for key in sorted(set(want_cells) ^ set(got_cells)):
+        side = "baseline" if key in want_cells else "sweep"
+        failures.append(f"shape {key}: only present in the {side}; "
+                        "re-record BENCH_kernels.json")
+    for key in sorted(set(want_cells) & set(got_cells)):
+        want, got = want_cells[key], got_cells[key]
+        if got["blocks"] != want["blocks"]:
+            failures.append(
+                f"{key}: tuned blocks {got['blocks']} vs baseline "
+                f"{want['blocks']} — the autotune selection moved")
+        if got["digest"] != want["digest"]:
+            failures.append(
+                f"{key}: output digest {got['digest']} vs baseline "
+                f"{want['digest']} — the kernel numerics moved (bitwise)")
+        if got["max_err_vs_ref"] > max(2.0 * want["max_err_vs_ref"], 1e-6):
+            failures.append(
+                f"{key}: interpret-mode error vs oracle "
+                f"{got['max_err_vs_ref']:.2e} vs recorded "
+                f"{want['max_err_vs_ref']:.2e}")
+
+    wp, gp = baseline["parity"], results["parity"]
+    if not gp["fastpath"]["bitwise_equal"]:
+        failures.append("fastpath: (P,) bank-row fast path is NOT bitwise "
+                        "equal to the dense banked layout")
+    if gp["fastpath"]["digest"] != wp["fastpath"]["digest"]:
+        failures.append(
+            f"fastpath: digest {gp['fastpath']['digest']} vs baseline "
+            f"{wp['fastpath']['digest']}")
+    moe = gp["moe_einsum"]
+    if moe["max_err_lsb"] >= MOE_LSB_TOL:
+        failures.append(
+            f"moe_einsum: pallas vs ref {moe['max_err_lsb']:.3f} LSB "
+            f"(>= {MOE_LSB_TOL}) — ADC codes diverge")
+    if moe["grad_max_err"] > GRAD_TOL:
+        failures.append(
+            f"moe_einsum: STE grad diff {moe['grad_max_err']:.2e} "
+            f"(> {GRAD_TOL:.0e})")
+    if moe["digest"] != wp["moe_einsum"]["digest"]:
+        failures.append(
+            f"moe_einsum: digest {moe['digest']} vs baseline "
+            f"{wp['moe_einsum']['digest']}")
+    att = gp["attention"]
+    if not att["bitwise_equal"]:
+        failures.append("attention: Pallas cached attention is NOT "
+                        "bitwise equal to attend_full")
+    if att["grad_max_err"] > GRAD_TOL:
+        failures.append(
+            f"attention: grad diff {att['grad_max_err']:.2e} "
+            f"(> {GRAD_TOL:.0e})")
+    if att["digest"] != wp["attention"]["digest"]:
+        failures.append(
+            f"attention: digest {att['digest']} vs baseline "
+            f"{wp['attention']['digest']}")
+    return failures
+
+
+def main() -> int:
+    with open(BASELINE) as f:
+        baseline = json.load(f)
+    results = kernel_tune.run(quick=True)
+    failures = compare(results, baseline)
+    if failures:
+        print(f"\n[kernel-gate] FAIL — {len(failures)} deltas vs "
+              "benchmarks/BENCH_kernels.json:")
+        for fail in failures:
+            print("  " + fail)
+        print("If the shift is intentional, re-record: rm "
+              "benchmarks/BENCH_kernels.json && PYTHONPATH=src python -m "
+              "benchmarks.run --only kernel_tune")
+        return 1
+    print("\n[kernel-gate] OK — tuned blocks + kernel digests bitwise vs "
+          "BENCH_kernels.json; fast path, MoE einsum, and attention "
+          "parity hold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

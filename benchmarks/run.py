@@ -32,6 +32,7 @@ MODULES = [
     ("fleet_sweep", "fleet serving sweep (N chips x capacity floor)"),
     ("serve_throughput", "offline serving: scan vs bucketed AOT prefill"),
     ("kernel_bench", "kernel microbench"),
+    ("kernel_tune", "per-shape kernel block autotune sweep + digests"),
     ("backend_parity", "ref-vs-pallas backend parity + throughput"),
     ("dist_scaling", "repro.dist device-count scaling sweep"),
     ("roofline_report", "dry-run roofline table"),

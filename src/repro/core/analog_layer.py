@@ -433,3 +433,24 @@ def dense_nladc(p, x, act: Optional[AnalogActivation], *, key=None):
     bk = BK.get_backend(act.cfg.backend)
     return bk.matmul_nladc(x, w, act.adc, bias=b,
                            thresholds=act.thresholds_for(key, w.shape[-1]))
+
+
+def moe_gate_nladc(x_buf, w_gate, act: Optional[AnalogActivation], *,
+                   key=None):
+    """Per-expert MoE gate einsum with a fused NL-ADC epilogue.
+
+    x_buf: (E, C, d) dispatched expert buffers, w_gate: (E, d, f) stacked
+    expert weights.  Matches ``act(einsum("ecd,edf->ecf", x_buf,
+    w_gate.astype(x_buf.dtype)), key=key)`` bitwise on the ref backend; on
+    pallas the einsum+quantize pair becomes the ``moe_matmul_nladc``
+    primitive (``fused_matmul_nladc`` vmapped over the expert axis).  Both
+    ``nn.moe`` and the ``repro.dist.ep`` shard_map body route through
+    here, so the fused path covers EP too (per-shard expert slabs).
+    """
+    if act is None or not act.cfg.enabled or act.ramp is None:
+        h = jnp.einsum("ecd,edf->ecf", x_buf, w_gate.astype(x_buf.dtype))
+        return act(h, key=key) if act is not None else h
+    bk = BK.get_backend(act.cfg.backend)
+    return bk.moe_matmul_nladc(
+        x_buf, w_gate, act.adc,
+        thresholds=act.thresholds_for(key, w_gate.shape[-1]))

@@ -9,9 +9,14 @@ the whole config grid runs on either implementation:
   :mod:`repro.core.nladc`);
 * ``"pallas"`` — the fused Pallas kernels (:mod:`repro.kernels`): the
   NL-ADC epilogue runs on the matmul accumulator in VMEM, the LSTM tail is
-  one elementwise pass, decode attention dequantizes int8 KV per-tile.
-  Off-TPU the kernels execute in interpret mode (see
-  ``repro.kernels.interpret_mode``).
+  one elementwise pass, decode attention dequantizes int8 KV per-tile, the
+  MoE gate einsum is the fused matmul vmapped over experts, and the
+  non-int8 cached-attention path (bucketed prefill + decode) is one Pallas
+  pass per batch row.  Off-TPU the kernels execute in interpret mode (see
+  ``repro.kernels.interpret_mode``; ``REPRO_PALLAS_COMPILED=1`` drops it).
+  Block sizes resolve per kernel x shape through the
+  :mod:`repro.kernels.tune` cache at trace time, defaulting bitwise to the
+  historical ``DEFAULT_BLOCKS`` on a cache miss.
 
 The Pallas kernels are forward-only; each is wrapped in ``jax.custom_vjp``
 whose backward re-derives the reference path's straight-through gradients
@@ -25,7 +30,8 @@ Selection: ``AnalogConfig.backend`` (empty string = auto), the
 ``REPRO_ANALOG_BACKEND`` env var, or the ``--backend`` train/serve CLI flag.
 Third-party backends can be added with :func:`register_backend`.
 
-All four primitives accept explicit comparator ``thresholds`` overrides so
+All quantizing primitives accept explicit comparator ``thresholds``
+overrides so
 the NL-ADC-aware training noise (perturbed ramp steps) is drawn once in
 shared orchestration code and both backends consume identical draws.  The
 override may be a :class:`repro.core.nladc.BankedThresholds` — the
@@ -126,6 +132,29 @@ class RefBackend:
         from repro.kernels import ref as kref
 
         return kref.flash_decode_int8(q, k8, k_scale, v8, v_scale, length)
+
+    def moe_matmul_nladc(self, x, w, adc: NLADC, thresholds=None):
+        """Per-expert fused gate: NLADC(x[e] @ w[e]) for every expert.
+
+        x: (E, C, d) dispatched expert buffers, w: (E, d, f) expert
+        weights -> (E, C, f).  The ref path is exactly the historical
+        ``act(einsum("ecd,edf->ecf", ...))`` MoE gate sequence — einsum
+        then the elementwise NL-ADC — so swapping ``nn.moe`` onto this
+        primitive changes nothing bitwise on the ref backend.
+        """
+        h = jnp.einsum("ecd,edf->ecf", x, w.astype(x.dtype))
+        return self.nladc(h, adc, thresholds)
+
+    def prefill_attention(self, q, k, v, mask):
+        """One-query cached attention (bucketed prefill / decode step).
+
+        q: (B, 1, H, D); k/v: (B, S, H_kv, D); mask broadcastable to
+        (B, 1, S).  The ref path IS ``nn.attention.attend_full`` — the
+        import is deferred to keep core free of nn at import time.
+        """
+        from repro.nn.attention import attend_full
+
+        return attend_full(q, k, v, mask)
 
 
 # ---------------------------------------------------------------------------
@@ -286,6 +315,62 @@ def _pallas_lstm_fn(sig_ramp: Ramp, tanh_ramp: Ramp,
                    build)
 
 
+def _pallas_moe_fn(ramp: Ramp, bank_map: Optional[BankMap] = None):
+    def build():
+        def raw(x, w, thr):
+            from repro.kernels import ops
+
+            if bank_map is not None:
+                thr = BankedThresholds(thr, bank_map)
+            return ops.moe_fused_matmul(x, w, ramp, thresholds=thr)
+
+        def fwd(x, w, thr):
+            return raw(x, w, thr), (x, w)
+
+        def bwd(res, ct):
+            x, w = res
+            pre = jnp.einsum("ecd,edf->ecf", x, w.astype(x.dtype))
+            d_pre = nladc_ste(ramp.name, pre, ct.astype(pre.dtype))
+            dx = jnp.einsum("ecf,edf->ecd", d_pre,
+                            w.astype(x.dtype)).astype(x.dtype)
+            dw = jnp.einsum("ecd,ecf->edf", x, d_pre).astype(w.dtype)
+            return (dx, dw, None)
+
+        fn = jax.custom_vjp(raw)
+        fn.defvjp(fwd, bwd)
+        return fn
+
+    return _cached("moe_matmul", _ramp_key(ramp) + (bank_map,), build)
+
+
+def _pallas_prefill_attention_fn():
+    def build():
+        def raw(q, k, v, mask):
+            from repro.kernels import ops
+
+            return ops.prefill_attention(q, k, v, mask)
+
+        def fwd(q, k, v, mask):
+            return raw(q, k, v, mask), (q, k, v, mask)
+
+        def bwd(res, ct):
+            # attend_full is plain jnp (no nested custom_vjp), so jax.vjp
+            # of the ref math is safe under scan transposition here
+            from repro.nn.attention import attend_full
+
+            q, k, v, mask = res
+            _, vjp = jax.vjp(
+                lambda q_, k_, v_: attend_full(q_, k_, v_, mask), q, k, v)
+            dq, dk, dv = vjp(ct)
+            return (dq, dk, dv, None)
+
+        fn = jax.custom_vjp(raw)
+        fn.defvjp(fwd, bwd)
+        return fn
+
+    return _cached("prefill_attention", (), build)
+
+
 class PallasBackend(RefBackend):
     """Fused Pallas kernels; falls back to ref only where no kernel exists
     (the raw activation-less crossbar MAC — by design the upstream GEMM
@@ -331,6 +416,16 @@ class PallasBackend(RefBackend):
         from repro.kernels import ops
 
         return ops.flash_decode_int8(q, k8, k_scale, v8, v_scale, length)
+
+    def moe_matmul_nladc(self, x, w, adc: NLADC, thresholds=None):
+        thr = adc.thresholds if thresholds is None else thresholds
+        bank_map = thr.bank_map if isinstance(thr, BankedThresholds) \
+            else None
+        fn = _pallas_moe_fn(adc.ramp, bank_map)
+        return fn(x, w, thr.thr if bank_map is not None else thr)
+
+    def prefill_attention(self, q, k, v, mask):
+        return _pallas_prefill_attention_fn()(q, k, v, mask)
 
 
 # ---------------------------------------------------------------------------

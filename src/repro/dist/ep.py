@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.analog_layer import AnalogActivation
+from repro.core.analog_layer import AnalogActivation, moe_gate_nladc
 from repro.dist import collectives as COLL
 from repro.dist import sharding as SH
 from repro.nn import moe as MOE
@@ -104,9 +104,9 @@ def moe_apply_ep(p, x, *, top_k: int, capacity_factor: float,
         xb = recv.transpose(1, 0, 2, 3).reshape(e_loc,
                                                 m_size * capacity, d)
 
-        # --- local expert SwiGLU on the owned experts ---
-        gate_h = act(jnp.einsum("end,edf->enf", xb,
-                                pl["w_gate"].astype(xb.dtype)), key=key_l)
+        # --- local expert SwiGLU on the owned experts (gate einsum +
+        # NL-ADC fused per expert on pallas, same helper as nn.moe) ---
+        gate_h = moe_gate_nladc(xb, pl["w_gate"], act, key=key_l)
         up_h = jnp.einsum("end,edf->enf", xb, pl["w_up"].astype(xb.dtype))
         h = jnp.einsum("enf,efd->end", gate_h * up_h,
                        pl["w_down"].astype(xb.dtype))

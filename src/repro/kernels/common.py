@@ -1,0 +1,34 @@
+"""Shared trace-time carriers for the Pallas kernel wrappers.
+
+Kept in a leaf module so both the kernel modules and ``ops`` can import it
+without cycles (``ops`` imports the kernel modules; the kernel modules must
+not import ``ops``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+
+@dataclasses.dataclass
+class BlockRowThresholds:
+    """Register-resident threshold fast path: one ramp row per lane block.
+
+    Produced by ``ops._resolve_thr`` when every lane-dim block of the
+    operand maps to a single threshold bank (the aligned common case —
+    ``bank_cols`` a multiple of the block's lane extent).  ``thr[j]`` is
+    the ``(P,)`` ramp of lane block ``j`` — gathered from the ``(n_banks,
+    P)`` bank table at trace time, so the kernel streams a single ``(1,
+    P)`` row per grid step instead of the dense ``(bn, P)`` per-column
+    VMEM operand, and compares through the ``(P,)`` broadcast path
+    (bitwise identical to the per-column compare when all columns of the
+    block share the bank).
+    """
+
+    thr: jax.Array  # (n_lane_blocks, P) float32: bank ramp row per block
+
+    def __post_init__(self):
+        if self.thr.ndim != 2:
+            raise ValueError("thr must be (n_lane_blocks, P)")

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.nladc import Ramp
+from repro.kernels import tune
+from repro.kernels.common import BlockRowThresholds
 from repro.kernels.ref import (closed_form_decode, decode_mode, decode_params,
                                thermometer_count)
 
@@ -29,7 +31,7 @@ DEFAULT_BLOCKS = (256, 256, 512)   # (bm, bn, bk)
 
 
 def _kernel(x_ref, w_ref, thr_ref, b_ref, acc_ref, o_ref, *,
-            n_k: int, y0, lsb_l, lsb_r, m, mode, has_bias):
+            n_k: int, y0, lsb_l, lsb_r, m, mode, has_bias, bank_fast):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -45,8 +47,11 @@ def _kernel(x_ref, w_ref, thr_ref, b_ref, acc_ref, o_ref, *,
         acc = acc_ref[...]
         if has_bias:
             acc = acc + b_ref[...].astype(jnp.float32)
-        # thr: (P,) shared ramp or (bn, P) per-column (threshold banks)
-        n = thermometer_count(acc, thr_ref[...])
+        # thr: (P,) shared ramp, (bn, P) per-column (threshold banks), or —
+        # fast path — the block's single (1, P) bank row, register-resident
+        # through the broadcast compare
+        thr = thr_ref[0] if bank_fast else thr_ref[...]
+        n = thermometer_count(acc, thr)
         y = closed_form_decode(n, mode, y0, lsb_l, lsb_r, m)
         o_ref[...] = y.astype(o_ref.dtype)
 
@@ -59,8 +64,10 @@ def fused_matmul_nladc_pallas(
     """y = NLADC(x @ w + bias).  x: (M, K), w: (K, N) -> (M, N).
 
     ``thresholds`` overrides the programmed comparator levels — a traced
-    (P,) array, or an (N, P) per-column matrix for the banked layout (the
-    col-tile ADC periphery); the closed-form decode params stay the ramp's.
+    (P,) array, an (N, P) per-column matrix for the banked layout (the
+    col-tile ADC periphery), or a :class:`BlockRowThresholds` carrier (one
+    (P,) bank row per lane block — the register-resident fast path); the
+    closed-form decode params stay the ramp's.
     """
     m_dim, k_dim = x.shape
     k2, n_dim = w.shape
@@ -68,20 +75,33 @@ def fused_matmul_nladc_pallas(
     bm = min(blocks[0], m_dim)
     bn = min(blocks[1], n_dim)
     bk = min(blocks[2], k_dim)
+    if (bm, bn, bk) != tuple(blocks):
+        tune.warn_clamp("fused_matmul_nladc", (m_dim, k_dim, n_dim),
+                        blocks, (bm, bn, bk), dtype=x.dtype)
     grid = (pl.cdiv(m_dim, bm), pl.cdiv(n_dim, bn), pl.cdiv(k_dim, bk))
     y0, lsb_l, lsb_r, mm = decode_params(ramp)
-    thr = jnp.asarray(ramp.thresholds, jnp.float32) if thresholds is None \
-        else thresholds.astype(jnp.float32)
-    if thr.ndim == 2:
-        thr_spec = pl.BlockSpec((bn, thr.shape[1]), lambda i, j, k: (j, 0))
+    bank_fast = isinstance(thresholds, BlockRowThresholds)
+    if bank_fast:
+        thr = thresholds.thr.astype(jnp.float32)
+        if thr.shape[0] != grid[1]:
+            raise ValueError(
+                f"BlockRowThresholds has {thr.shape[0]} rows for "
+                f"{grid[1]} lane blocks (bn={bn})")
+        thr_spec = pl.BlockSpec((1, thr.shape[1]), lambda i, j, k: (j, 0))
     else:
-        thr_spec = pl.BlockSpec((thr.shape[0],), lambda i, j, k: (0,))
+        thr = jnp.asarray(ramp.thresholds, jnp.float32) \
+            if thresholds is None else thresholds.astype(jnp.float32)
+        if thr.ndim == 2:
+            thr_spec = pl.BlockSpec((bn, thr.shape[1]),
+                                    lambda i, j, k: (j, 0))
+        else:
+            thr_spec = pl.BlockSpec((thr.shape[0],), lambda i, j, k: (0,))
     has_bias = bias is not None
     if bias is None:
         bias = jnp.zeros((n_dim,), jnp.float32)
     kernel = functools.partial(
         _kernel, n_k=grid[2], y0=y0, lsb_l=lsb_l, lsb_r=lsb_r, m=mm,
-        mode=decode_mode(ramp), has_bias=has_bias)
+        mode=decode_mode(ramp), has_bias=has_bias, bank_fast=bank_fast)
     return pl.pallas_call(
         kernel,
         grid=grid,

@@ -25,17 +25,22 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.nladc import Ramp
+from repro.kernels import tune
+from repro.kernels.common import BlockRowThresholds
 from repro.kernels.ref import (closed_form_decode, decode_mode, decode_params,
                                thermometer_count)
 
 DEFAULT_BLOCK = (256, 512)
 
 
-def _nladc_kernel(x_ref, thr_ref, o_ref, *, y0, lsb_l, lsb_r, m, mode):
+def _nladc_kernel(x_ref, thr_ref, o_ref, *, y0, lsb_l, lsb_r, m, mode,
+                  bank_fast):
     x = x_ref[...].astype(jnp.float32)
-    # thr: (P,) shared ramp in VMEM, or (bn, P) per-column (banked layout,
-    # the column->bank gather resolved at trace time by ops.nladc).
-    n = thermometer_count(x, thr_ref[...])
+    # thr: (P,) shared ramp in VMEM, (bn, P) per-column (banked layout,
+    # the column->bank gather resolved at trace time by ops.nladc), or —
+    # fast path — the block's single (1, P) bank row.
+    thr = thr_ref[0] if bank_fast else thr_ref[...]
+    n = thermometer_count(x, thr)
     y = closed_form_decode(n, mode, y0, lsb_l, lsb_r, m)
     o_ref[...] = y.astype(o_ref.dtype)
 
@@ -61,19 +66,32 @@ def nladc_pallas(x, ramp: Ramp, *, thresholds=None,
     """
     m_dim, n_dim = x.shape
     bm, bn = min(block[0], m_dim), min(block[1], n_dim)
+    if (bm, bn) != tuple(block):
+        tune.warn_clamp("nladc", (m_dim, n_dim), block, (bm, bn),
+                        dtype=x.dtype)
     grid = (pl.cdiv(m_dim, bm), pl.cdiv(n_dim, bn))
     y0, lsb_l, lsb_r, mm = decode_params(ramp)
-    thr = jnp.asarray(ramp.thresholds, jnp.float32) if thresholds is None \
-        else thresholds.astype(jnp.float32)
+    bank_fast = isinstance(thresholds, BlockRowThresholds)
+    if bank_fast:
+        thr = thresholds.thr.astype(jnp.float32)
+        if thr.shape[0] != grid[1]:
+            raise ValueError(
+                f"BlockRowThresholds has {thr.shape[0]} rows for "
+                f"{grid[1]} lane blocks (bn={bn})")
+        thr_spec = pl.BlockSpec((1, thr.shape[1]), lambda i, j: (j, 0))
+    else:
+        thr = jnp.asarray(ramp.thresholds, jnp.float32) \
+            if thresholds is None else thresholds.astype(jnp.float32)
+        thr_spec = _thr_spec_2d(thr, bn)
     kernel = functools.partial(
         _nladc_kernel, y0=y0, lsb_l=lsb_l, lsb_r=lsb_r, m=mm,
-        mode=decode_mode(ramp))
+        mode=decode_mode(ramp), bank_fast=bank_fast)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-            _thr_spec_2d(thr, bn),
+            thr_spec,
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m_dim, n_dim), x.dtype),

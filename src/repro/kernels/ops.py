@@ -15,20 +15,40 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from repro.core.nladc import BankedThresholds, Ramp
 from repro.kernels import crossbar_mac as _cb
 from repro.kernels import flash_decode as _fd
 from repro.kernels import fused_matmul_nladc as _fm
 from repro.kernels import lstm_cell as _lc
 from repro.kernels import nladc_kernel as _nk
+from repro.kernels import prefill_attention as _pa
+from repro.kernels import tune
+from repro.kernels.common import BlockRowThresholds
+
+
+def compiled_requested() -> bool:
+    """``REPRO_PALLAS_COMPILED=1``: drop ``interpret=True`` everywhere.
+
+    The escape hatch that makes the parity suite (and the autotune sweep)
+    runnable in compiled mode on platforms with real Pallas lowering.
+    Takes precedence over ``REPRO_PALLAS_INTERPRET`` — it is the explicit
+    opt-in, while the interpret env is exported wholesale by CI legs.
+    """
+    return os.environ.get("REPRO_PALLAS_COMPILED", "") \
+        not in ("", "0", "false", "False")
 
 
 def interpret_mode() -> bool:
     """True when the kernels should run in Pallas interpret mode.
 
+    ``REPRO_PALLAS_COMPILED=1`` forces compiled; else
     ``REPRO_PALLAS_INTERPRET`` forces it either way; default: interpret
     everywhere except a real TPU backend.
     """
+    if compiled_requested():
+        return False
     env = os.environ.get("REPRO_PALLAS_INTERPRET", "")
     if env:  # empty string == unset (CI matrix legs export "")
         return env not in ("0", "false", "False")
@@ -36,6 +56,36 @@ def interpret_mode() -> bool:
 
 
 _interpret = interpret_mode  # backward-compat alias
+
+_COMPILED_PROBE = None
+
+
+def compiled_supported():
+    """(ok, reason): can this platform lower a compiled Pallas call?
+
+    Probes once with a tiny ``interpret=False`` kernel.  On CPU jax 0.4.x
+    raises ``Only interpret mode is supported on CPU backend`` — the
+    reason string lets callers (the parity suite, the tune harness) skip
+    cleanly instead of erroring mid-sweep.
+    """
+    global _COMPILED_PROBE
+    if _COMPILED_PROBE is None:
+        from jax.experimental import pallas as pl
+
+        def _k(x_ref, o_ref):
+            o_ref[...] = x_ref[...] + 1.0
+
+        try:
+            out = pl.pallas_call(
+                _k, out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+                interpret=False)(jnp.zeros((8, 128), jnp.float32))
+            jax.block_until_ready(out)
+            _COMPILED_PROBE = (True, "")
+        except Exception as e:  # noqa: BLE001 — any lowering failure
+            _COMPILED_PROBE = (
+                False, f"no compiled Pallas lowering on "
+                f"{jax.default_backend()}: {type(e).__name__}: {e}")
+    return _COMPILED_PROBE
 
 
 def _pad_to(x, mult, axis):
@@ -47,14 +97,26 @@ def _pad_to(x, mult, axis):
     return jnp.pad(x, widths)
 
 
-def _resolve_thr(thresholds, n_cols: int, mult: int):
-    """Banked thresholds -> a padded (N, P) per-column matrix.
+def _fastpath_enabled() -> bool:
+    """``REPRO_KERNEL_FASTPATH=0`` disables the (P,) bank-row fast path
+    (bisection aid — the dense (bn, P) layout is the reference)."""
+    return os.environ.get("REPRO_KERNEL_FASTPATH", "") \
+        not in ("0", "false", "False")
+
+
+def _resolve_thr(thresholds, n_cols: int, mult: int, *,
+                 allow_fastpath: bool = True):
+    """Banked thresholds -> a padded (N, P) per-column matrix, or — when
+    every ``mult``-wide lane block maps to one bank (``bank_cols`` a
+    multiple of the block width, the aligned common case) — a
+    :class:`BlockRowThresholds` carrying one (P,) bank row per block, so
+    the kernel skips the (bn, P) VMEM operand entirely.
 
     The column→bank gather happens HERE, at trace time — the kernels see a
-    dense per-column threshold operand and never gather on the VPU.  Plain
-    (P,)/None thresholds pass through untouched.  Padded columns replicate
-    the last row (their outputs are sliced away; the compare just needs
-    finite values).
+    dense per-column threshold operand (or the per-block row table) and
+    never gather on the VPU.  Plain (P,)/None thresholds pass through
+    untouched.  Padded columns replicate the last row (their outputs are
+    sliced away; the compare just needs finite values).
     """
     if not isinstance(thresholds, BankedThresholds):
         return thresholds
@@ -63,6 +125,15 @@ def _resolve_thr(thresholds, n_cols: int, mult: int):
         raise ValueError(
             f"bank map covers {idx.shape[0]} columns but the operand has "
             f"{n_cols}")
+    if allow_fastpath and _fastpath_enabled():
+        idx_np = np.asarray(idx)
+        starts = np.arange(-(-n_cols // mult)) * mult
+        if all(np.all(idx_np[s:s + mult] == idx_np[s]) for s in starts):
+            # padded tail columns inherit the last block's bank — same
+            # finite-compare contract as the dense edge pad below
+            return BlockRowThresholds(
+                thr=thresholds.thr.astype(jnp.float32)[
+                    jnp.asarray(idx_np[starts])])
     thr_cols = thresholds.thr.astype(jnp.float32)[jnp.asarray(idx)]
     pad = (-n_cols) % mult
     if pad:
@@ -78,8 +149,8 @@ def nladc(x, ramp: Ramp, *, thresholds=None, block=None):
     """
     shape = x.shape
     flat = x.reshape(-1, shape[-1]) if x.ndim > 1 else x.reshape(1, -1)
-    blk = block or _nk.DEFAULT_BLOCK
     m0, n0 = flat.shape
+    blk = block or tune.resolve_blocks("nladc", (m0, n0), x.dtype)
     thr = _resolve_thr(thresholds, n0, blk[1])
     flat = _pad_to(_pad_to(flat, blk[0], 0), blk[1], 1)
     out = _nk.nladc_pallas(flat, ramp, thresholds=thr, block=blk,
@@ -94,13 +165,14 @@ def fused_matmul_nladc(x, w, ramp: Ramp, bias=None, *, thresholds=None,
     ``thresholds`` may be a :class:`BankedThresholds` over w's output
     columns (one ramp per crossbar col-tile).
     """
-    blk = blocks or _fm.DEFAULT_BLOCKS
     lead = x.shape[:-1]
     k = x.shape[-1]
     n = w.shape[-1]
-    thr = _resolve_thr(thresholds, n, blk[1])
     xf = x.reshape(-1, k)
     m0 = xf.shape[0]
+    blk = blocks or tune.resolve_blocks("fused_matmul_nladc", (m0, k, n),
+                                        x.dtype)
+    thr = _resolve_thr(thresholds, n, blk[1])
     xf = _pad_to(_pad_to(xf, blk[0], 0), blk[2], 1)
     wp = _pad_to(_pad_to(w, blk[2], 0), blk[1], 1)
     bp = None
@@ -114,12 +186,12 @@ def fused_matmul_nladc(x, w, ramp: Ramp, bias=None, *, thresholds=None,
 
 def analog_tile(x, w, ramp: Ramp, *, input_bits: Optional[int] = None,
                 input_clip: float = 1.0, w_noise=None, blocks=None):
-    blk = blocks or _cb.DEFAULT_BLOCKS
     lead = x.shape[:-1]
     k = x.shape[-1]
     n = w.shape[-1]
     xf = x.reshape(-1, k)
     m0 = xf.shape[0]
+    blk = blocks or tune.resolve_blocks("analog_tile", (m0, k, n), x.dtype)
     xf = _pad_to(_pad_to(xf, blk[0], 0), blk[2], 1)
     wp = _pad_to(_pad_to(w, blk[2], 0), blk[1], 1)
     nz = None
@@ -139,11 +211,16 @@ def lstm_gates(gates, c, sig_ramp: Ramp, tanh_ramp: Ramp, *,
     every gate (and the cell tanh) of hidden unit h then uses the ramp of
     h's col-tile bank.
     """
-    blk = block or _lc.DEFAULT_BLOCK
     b0, h4 = gates.shape
     h0 = h4 // 4
-    sig_thresholds = _resolve_thr(sig_thresholds, h0, blk[1])
-    tanh_thresholds = _resolve_thr(tanh_thresholds, h0, blk[1])
+    blk = block or tune.resolve_blocks("lstm_gates", (b0, h0), gates.dtype)
+    # the LSTM tail kernel keeps the dense (bn, P) banked layout (its
+    # four-gate packing reads two ramps per tile — fast-path rows would
+    # double the spec surface for a kernel that is VPU-, not VMEM-, bound)
+    sig_thresholds = _resolve_thr(sig_thresholds, h0, blk[1],
+                                  allow_fastpath=False)
+    tanh_thresholds = _resolve_thr(tanh_thresholds, h0, blk[1],
+                                   allow_fastpath=False)
     # pad batch and hidden separately (gates padded per-gate inside kernel
     # wrapper: split, pad, re-concat keeps the [f|a|i|o] packing intact)
     gf, ga, gi, go = jnp.split(gates, 4, axis=-1)
@@ -156,6 +233,39 @@ def lstm_gates(gates, c, sig_ramp: Ramp, tanh_ramp: Ramp, *,
                                      tanh_thresholds=tanh_thresholds,
                                      block=blk, interpret=interpret_mode())
     return h[:b0, :h0], c_new[:b0, :h0]
+
+
+def moe_fused_matmul(x, w, ramp: Ramp, *, thresholds=None, blocks=None):
+    """Per-expert fused gate einsum: NLADC(x[e] @ w[e]) for every expert.
+
+    x: (E, C, d) dispatched expert buffers, w: (E, d, f) expert weights
+    -> (E, C, f).  ``fused_matmul_nladc`` vmapped over the expert axis —
+    one fused MXU+NL-ADC kernel per expert instead of the XLA einsum +
+    separate quantize.  ``thresholds`` (shared across experts, like the
+    deployed col-tile periphery) may be banked; block resolution uses the
+    per-expert (C, d, f) shape.
+    """
+    def one(xe, we):
+        return fused_matmul_nladc(xe, we, ramp, thresholds=thresholds,
+                                  blocks=blocks)
+
+    return jax.vmap(one)(x, w)
+
+
+def prefill_attention(q, k, v, mask):
+    """Batched one-query cached attention (the bucketed-prefill /decode
+    pattern).  q: (B, 1, H, D), k/v: (B, S, Hkv, D), mask broadcastable
+    to (B, 1, S) bool -> (B, 1, H, D), matching ``attend_full`` bitwise.
+    """
+    b, q_len, h, d = q.shape
+    if q_len != 1:
+        raise ValueError(f"prefill_attention is one-query; got q_len="
+                         f"{q_len}")
+    s_len = k.shape[1]
+    mask2 = jnp.broadcast_to(mask, (b, 1, s_len))[:, 0, :].astype(jnp.int32)
+    out = _pa.prefill_attention_pallas(q[:, 0], k, v, mask2,
+                                       interpret=interpret_mode())
+    return out[:, None]
 
 
 def flash_decode_int8(q, k8, k_scale, v8, v_scale, length, *, block_s=None):

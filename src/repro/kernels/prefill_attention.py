@@ -1,0 +1,76 @@
+"""Pallas kernel: batched one-query attention against a decode cache.
+
+Bucketed prefill (PR 7) runs the prompt through a masked scan of
+``decode_step`` — so its attention is the one-token-vs-cache pattern of
+``nn.attention.attend_full`` with a (1, 1, S) validity mask, evaluated
+once per prompt position.  This kernel lifts exactly that pattern out of
+XLA: one grid step per batch row, the row's (H, D) query and (S, Hkv, D)
+cache tiles in VMEM, GQA grouping + scale + mask + softmax + weighted sum
+fused in one pass.  The op sequence mirrors ``attend_full`` line for line
+(same einsum contractions, f32 accumulation, -1e30 mask fill), so the
+output is bitwise identical to the XLA path for f32 and bf16 — the serve
+stream/checkpoint contract survives backend switches.
+
+Decode shares the kernel: ``decode_self_attention`` dispatches its
+non-int8 paths through ``core.backend.prefill_attention``, so on the
+pallas backend every cached-attention call (bucketed prefill, legacy scan
+prefill, per-token decode) lands here.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, m_ref, o_ref, *, scale):
+    q = q_ref[...]                       # (1, H, D)
+    k = k_ref[...]                       # (1, S, Hkv, D)
+    v = v_ref[...]
+    mask = m_ref[...] != 0               # (1, S)
+    b, h, d = q.shape
+    hkv = k.shape[2]
+    # exactly attend_full's op sequence (grouped query heads, f32 logits)
+    qg = q.reshape(b, 1, hkv, h // hkv, d) * jnp.asarray(scale, q.dtype)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                   preferred_element_type=jnp.float32)
+    s = jnp.where(mask[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(q.dtype), v,
+                   preferred_element_type=jnp.float32)
+    o_ref[...] = o.transpose(0, 3, 1, 2, 4).reshape(b, 1, h, d)[:, 0] \
+        .astype(o_ref.dtype)
+
+
+def prefill_attention_pallas(q, k, v, mask, *, scale=None,
+                             interpret: bool = True):
+    """One-query cached attention.  q: (B, H, D), k/v: (B, S, Hkv, D),
+    mask: (B, S) nonzero-where-valid -> (B, H, D).
+
+    H must be a multiple of Hkv (GQA grouping, as in ``attend_full``).
+    """
+    b, h, d = q.shape
+    s_len, hkv = k.shape[1], k.shape[2]
+    if h % hkv:
+        raise ValueError(f"{h} query heads not grouped over {hkv} KV heads")
+    kern = functools.partial(
+        _kernel, scale=1.0 / math.sqrt(d) if scale is None else scale)
+    return pl.pallas_call(
+        kern,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, h, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s_len, hkv, d), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, s_len, hkv, d), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, s_len), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v, mask)

@@ -30,6 +30,7 @@ import numpy as np
 from repro import configs
 from repro.core.backend import backend_names
 from repro.core.device import device_names, resolve_device
+from repro.kernels import tune
 from repro.nn.model import build
 from repro.serve.engine import Request, ServingEngine
 from repro.serve.lifecycle import RecalPolicy
@@ -130,7 +131,22 @@ def main():
     ap.add_argument("--prom", action="store_true",
                     help="observability: print the Prometheus text "
                          "exposition at exit")
+    ap.add_argument("--kernel-cache", default="",
+                    help="path to a kernel tune-cache JSON "
+                         "(benchmarks.kernel_tune output); Pallas block "
+                         "sizes then resolve per shape from it (also: "
+                         "REPRO_KERNEL_CACHE env)")
+    ap.add_argument("--kernel-blocks", default="",
+                    help="force per-kernel Pallas blocks, e.g. "
+                         "'fused_matmul_nladc=128x128x512,nladc=256x512' "
+                         "— overrides the tune cache (also: "
+                         "REPRO_KERNEL_BLOCKS env)")
     args = ap.parse_args()
+
+    try:
+        tune.configure(args.kernel_blocks, args.kernel_cache)
+    except (ValueError, OSError) as e:
+        ap.error(f"--kernel-blocks/--kernel-cache: {e}")
 
     if args.pack_prefill and not args.prefill_buckets:
         ap.error("--pack-prefill requires --prefill-buckets")

@@ -33,6 +33,7 @@ from repro.core.device import device_names
 from repro.data.pipeline import SyntheticLM
 from repro.dist import sharding as SH
 from repro.ft.elastic import build_mesh, plan_for_devices, reshard
+from repro.kernels import tune
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.launch.steps import (make_dp_opt_state, make_dp_train_step,
                                 make_optimizer, make_train_step)
@@ -68,7 +69,23 @@ def main():
                     default="", help="override AnalogSpec.mode (most LM "
                     "configs default to 'exact'; pass 'train' for Alg. 1 "
                     "nonideality-aware training so --device actually acts)")
+    ap.add_argument("--kernel-cache", default="",
+                    help="path to a kernel tune-cache JSON "
+                         "(benchmarks.kernel_tune output); Pallas block "
+                         "sizes then resolve per shape from it (also: "
+                         "REPRO_KERNEL_CACHE env)")
+    ap.add_argument("--kernel-blocks", default="",
+                    help="force per-kernel Pallas blocks, e.g. "
+                         "'fused_matmul_nladc=128x128x512,nladc=256x512' "
+                         "— overrides the tune cache (also: "
+                         "REPRO_KERNEL_BLOCKS env)")
     args = ap.parse_args()
+
+    try:
+        tune.configure(args.kernel_blocks, args.kernel_cache)
+    except (ValueError, OSError) as e:
+        ap.error(f"--kernel-blocks/--kernel-cache: {e}")
+
     if args.production_mesh and args.grad_comm != "gspmd":
         ap.error("--production-mesh requires --grad-comm gspmd: the "
                  "explicit-collective DP path builds its own data-parallel "

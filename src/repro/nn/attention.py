@@ -223,7 +223,11 @@ def decode_self_attention(p, x, cache, index, *, n_heads, n_kv_heads,
     (``analog_backend`` selects it): the ref path is the dequantize-all
     oracle; the pallas path is the flash-decode kernel that dequantizes
     per KV tile in VMEM (1 byte/element of HBM cache traffic).  Rolling
-    (windowed) int8 caches keep the dequantize-all fallback.
+    (windowed) int8 caches keep the dequantize-all fallback.  Every other
+    cache layout attends through ``backend.prefill_attention`` — ref is
+    ``attend_full`` itself, pallas the one-query cached-attention kernel
+    (bitwise equal), so bucketed prefill (a masked scan of this step) and
+    per-token decode stop being pure-XLA on the pallas backend.
     """
     b = x.shape[0]
     q = _split_heads(L.dense_apply(p["wq"], x), n_heads, head_dim)
@@ -274,7 +278,13 @@ def decode_self_attention(p, x, cache, index, *, n_heads, n_kv_heads,
     else:
         valid = slot_ids <= index
     mask = valid[None, None, :]                     # (1, Sq=1, Skv)
-    out = attend_full(q, k_att, v_att, mask)
+    # one-query cached attention through the backend seam: ref IS
+    # attend_full; pallas runs the prefill_attention kernel (bitwise equal
+    # — bucketed prefill scans this very step, so prefill is covered too)
+    from repro.core import backend as BK
+
+    out = BK.get_backend(analog_backend).prefill_attention(
+        q, k_att, v_att, mask)
     y = L.dense_apply(p["wo"], out.reshape(b, 1, n_heads * head_dim))
     return y, new_cache
 

@@ -30,7 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.analog_layer import AnalogActivation
+from repro.core.analog_layer import AnalogActivation, moe_gate_nladc
 from repro.nn import layers as L
 
 
@@ -177,9 +177,9 @@ def moe_apply(p, x, *, top_k: int, capacity_factor: float,
     if ep_axis is not None:
         x_buf = _maybe_shard(x_buf, P(ep_axis, None, None))
 
-    # --- expert FFN (EP einsum over the sharded expert axis) ---
-    gate_h = act(jnp.einsum("ecd,edf->ecf", x_buf,
-                            p["w_gate"].astype(x_buf.dtype)), key=key)
+    # --- expert FFN (EP einsum over the sharded expert axis; the gate
+    # einsum + NL-ADC pair is one fused vmapped kernel on pallas) ---
+    gate_h = moe_gate_nladc(x_buf, p["w_gate"], act, key=key)
     up_h = jnp.einsum("ecd,edf->ecf", x_buf, p["w_up"].astype(x_buf.dtype))
     h = jnp.einsum("ecf,efd->ecd", gate_h * up_h,
                    p["w_down"].astype(x_buf.dtype))

@@ -29,6 +29,14 @@ streams and decode caches, tested on both backends, noisy and noiseless):
   largest-bucket calls carrying the state, the shared ``index`` keeping
   cache positions and the noise-key schedule global.
 
+Attention inside both paths dispatches through the kernel layer: each
+``decode_step`` (and therefore every prefill position, since prefill is a
+masked scan of decode steps) attends over the cache via
+``backend.prefill_attention`` — the Pallas cached-attention kernel under
+``REPRO_ANALOG_BACKEND=pallas``, ``attend_full`` on the ref backend —
+with block sizes resolved per shape from the :mod:`repro.kernels.tune`
+cache.
+
 ``detok_thread=True`` moves argmax→host transfer→request bookkeeping onto
 a background detokenize/backlog thread: the next device step dispatches
 against a device-side last-token vector while the previous step's tokens

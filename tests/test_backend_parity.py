@@ -21,6 +21,16 @@ from repro.core import backend as BK
 from repro.core.analog_layer import (AnalogActivation, AnalogConfig,
                                      analog_matmul_act, dense_nladc)
 from repro.core.nladc import NLADC, build_ramp
+from repro.kernels import ops as _ops
+
+# REPRO_PALLAS_COMPILED=1 drops interpret=True so this suite runs against
+# the compiled kernels on a TPU host; where Pallas cannot lower, skip the
+# whole module with the probe's reason instead of erroring mid-test.
+if _ops.compiled_requested():
+    _ok, _reason = _ops.compiled_supported()
+    if not _ok:
+        pytest.skip(f"REPRO_PALLAS_COMPILED=1 but {_reason}",
+                    allow_module_level=True)
 
 MODES = ["exact", "train", "infer"]
 BACKENDS = ["ref", "pallas"]
@@ -529,3 +539,109 @@ def test_ir_stage_changes_output_but_not_parity(rng):
         got[preset] = analog_matmul_act(x, w, cfg, key=_key("infer"),
                                         activation=act)
     assert float(jnp.max(jnp.abs(got["paper-infer"] - got["paper-ir"]))) > 0
+
+
+# ---------------------------------------------------------------------------
+# PR 10 backend methods: fused MoE einsum + cached attention
+# ---------------------------------------------------------------------------
+
+def _moe_inputs(rng, e=3, c=6, d=24, f=32):
+    x = jnp.asarray(rng.normal(0, 0.5, (e, c, d)).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 0.3, (e, d, f)).astype(np.float32))
+    return x, w
+
+
+@pytest.mark.parametrize("banked", [False, True])
+def test_moe_matmul_nladc_parity_and_grads(banked, rng):
+    """Fused MoE expert einsum: codes within LSB/2 across backends, STE
+    grads (dx AND dw) matching across backends — plain and banked.
+
+    Grads follow the file convention (allclose at 1e-5, not bitwise):
+    the hand-written bwd einsums may contract in a different order than
+    the autodiff transpose of the ref composition."""
+    ramp = build_ramp("swish", 5)
+    adc = NLADC(ramp)
+    x, w = _moe_inputs(rng)
+    thr = None
+    if banked:
+        from repro.core.nladc import BankedThresholds, bank_map_for
+
+        n_banks, f = 2, w.shape[-1]
+        t = np.stack([np.asarray(adc.thresholds) + 0.01 * j
+                      for j in range(n_banks)])
+        thr = BankedThresholds(jnp.asarray(t, jnp.float32),
+                               bank_map_for(f, f // n_banks))
+    outs, gx, gw = {}, {}, {}
+    for be in BACKENDS:
+        bk = BK.get_backend(be)
+        outs[be] = bk.moe_matmul_nladc(x, w, adc, thr)
+        gx[be], gw[be] = jax.grad(
+            lambda a, b: jnp.sum(bk.moe_matmul_nladc(a, b, adc, thr) ** 2),
+            argnums=(0, 1))(x, w)
+    lsb = float(ramp.lsb)
+    assert float(jnp.max(jnp.abs(outs["ref"] - outs["pallas"]))) < lsb / 2
+    np.testing.assert_allclose(np.asarray(gx["ref"]),
+                               np.asarray(gx["pallas"]),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gw["ref"]),
+                               np.asarray(gw["pallas"]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_moe_matmul_nladc_matches_unfused(rng):
+    """Each backend's fused MoE call == its own nladc(einsum) composition
+    (the historical moe.py gate path), bitwise."""
+    ramp = build_ramp("sigmoid", 5)
+    adc = NLADC(ramp)
+    x, w = _moe_inputs(rng)
+    for be in BACKENDS:
+        bk = BK.get_backend(be)
+        fused = bk.moe_matmul_nladc(x, w, adc)
+        unfused = bk.nladc(
+            jnp.einsum("ecd,edf->ecf", x, w.astype(x.dtype)), adc)
+        lsb = float(ramp.lsb)
+        assert float(jnp.max(jnp.abs(fused - unfused))) < lsb / 2, be
+
+
+def test_prefill_attention_backend_parity_and_grads(rng):
+    """Cached attention: bitwise outputs and grads (q, k, v) across
+    backends — the serve stream invariance anchor."""
+    b, h, hkv, d, s = 2, 8, 2, 16, 12
+    q = jnp.asarray(rng.normal(0, 1, (b, 1, h, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(0, 1, (b, s, hkv, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(0, 1, (b, s, hkv, d)).astype(np.float32))
+    mask = (jnp.arange(s) < 9)[None, None, :]
+    outs, grads = {}, {}
+    for be in BACKENDS:
+        bk = BK.get_backend(be)
+        outs[be] = bk.prefill_attention(q, k, v, mask)
+        grads[be] = jax.grad(
+            lambda a, b2, c: jnp.sum(
+                bk.prefill_attention(a, b2, c, mask) ** 2),
+            argnums=(0, 1, 2))(q, k, v)
+    np.testing.assert_array_equal(np.asarray(outs["ref"]),
+                                  np.asarray(outs["pallas"]))
+    for g_r, g_p in zip(grads["ref"], grads["pallas"]):
+        np.testing.assert_array_equal(np.asarray(g_r), np.asarray(g_p))
+
+
+def test_prefill_attention_under_jit_and_scan(rng):
+    """The kernel must be trace-safe inside the engine's masked prefill
+    scan: jit(scan over positions) matches the eager per-step calls."""
+    be = BK.get_backend("pallas")
+    b, h, hkv, d, s = 1, 4, 2, 8, 6
+    q_seq = jnp.asarray(rng.normal(0, 1, (s, b, 1, h, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(0, 1, (b, s, hkv, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(0, 1, (b, s, hkv, d)).astype(np.float32))
+
+    def step(carry, i):
+        mask = (jnp.arange(s) <= i)[None, None, :]
+        return carry, be.prefill_attention(q_seq[i], k, v, mask)
+
+    _, scanned = jax.jit(
+        lambda: jax.lax.scan(step, 0, jnp.arange(s)))()
+    for i in range(s):
+        mask = (jnp.arange(s) <= i)[None, None, :]
+        np.testing.assert_array_equal(
+            np.asarray(scanned[i]),
+            np.asarray(be.prefill_attention(q_seq[i], k, v, mask)))

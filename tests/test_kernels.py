@@ -7,6 +7,14 @@ import pytest
 from repro.core.nladc import build_ramp, nladc_reference
 from repro.kernels import ops, ref
 
+# compiled mode (REPRO_PALLAS_COMPILED=1): run against the real lowering
+# where the platform has one, skip cleanly where it does not
+if ops.compiled_requested():
+    _ok, _reason = ops.compiled_supported()
+    if not _ok:
+        pytest.skip(f"REPRO_PALLAS_COMPILED=1 but {_reason}",
+                    allow_module_level=True)
+
 SHAPES_2D = [(8, 8), (70, 130), (256, 512), (257, 513), (1, 640)]
 ACTS = ["sigmoid", "tanh", "softplus", "elu", "selu", "gelu", "swish"]
 
@@ -123,3 +131,101 @@ def test_flash_decode_int8_sweep(cfg, rng):
     got = ops.flash_decode_int8(q, k8, ks, v8, vs, ln)
     want = ref.flash_decode_int8(q, k8, ks, v8, vs, ln)
     np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# PR 10 kernels: threshold fast path, fused MoE einsum, cached attention
+# ---------------------------------------------------------------------------
+
+def _aligned_banked(rng, n_cols, bank_cols, p_len):
+    from repro.core.nladc import BankedThresholds, bank_map_for
+
+    bm = bank_map_for(n_cols, bank_cols)
+    thr = np.sort(rng.normal(0, 1, (bm.n_banks, p_len)), axis=1)
+    return BankedThresholds(jnp.asarray(thr, jnp.float32), bm)
+
+
+@pytest.mark.parametrize("bank_cols,bn", [(128, 128), (256, 128), (128, 64)])
+def test_threshold_fastpath_bitwise(bank_cols, bn, rng):
+    """(P,) bank-row fast path == dense (bn, P) banked layout, BITWISE,
+    whenever bank_cols is a multiple of the lane block."""
+    import os
+
+    from repro.kernels.common import BlockRowThresholds
+
+    ramp = build_ramp("swish", 5)
+    n = 512
+    bt = _aligned_banked(rng, n, bank_cols,
+                         int(np.asarray(ramp.thresholds).shape[0]))
+    assert isinstance(ops._resolve_thr(bt, n, bn), BlockRowThresholds)
+    x = jnp.asarray(rng.normal(0, 1.5, (24, n)).astype(np.float32))
+    xm = jnp.asarray(rng.normal(0, 0.5, (16, 48)).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 0.3, (48, n)).astype(np.float32))
+
+    fast_n = ops.nladc(x, ramp, thresholds=bt, block=(128, bn))
+    fast_m = ops.fused_matmul_nladc(xm, w, ramp, thresholds=bt,
+                                    blocks=(128, bn, 64))
+    os.environ["REPRO_KERNEL_FASTPATH"] = "0"
+    try:
+        assert not isinstance(ops._resolve_thr(bt, n, bn),
+                              BlockRowThresholds)
+        dense_n = ops.nladc(x, ramp, thresholds=bt, block=(128, bn))
+        dense_m = ops.fused_matmul_nladc(xm, w, ramp, thresholds=bt,
+                                         blocks=(128, bn, 64))
+    finally:
+        del os.environ["REPRO_KERNEL_FASTPATH"]
+    np.testing.assert_array_equal(np.asarray(fast_n), np.asarray(dense_n))
+    np.testing.assert_array_equal(np.asarray(fast_m), np.asarray(dense_m))
+
+
+def test_threshold_fastpath_requires_alignment(rng):
+    """bank_cols NOT a multiple of the lane block -> dense layout (the
+    fast path must never trigger on misaligned banks)."""
+    from repro.kernels.common import BlockRowThresholds
+
+    ramp = build_ramp("sigmoid", 5)
+    bt = _aligned_banked(rng, 512, 96,
+                         int(np.asarray(ramp.thresholds).shape[0]))
+    resolved = ops._resolve_thr(bt, 512, 128)
+    assert not isinstance(resolved, BlockRowThresholds)
+
+
+def test_moe_fused_matmul_vs_expert_loop(rng):
+    """Vmapped fused MoE einsum == per-expert fused_matmul_nladc calls."""
+    ramp = build_ramp("swish", 5)
+    e, c, d, f = 3, 8, 32, 48
+    x = jnp.asarray(rng.normal(0, 0.5, (e, c, d)).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 0.3, (e, d, f)).astype(np.float32))
+    got = ops.moe_fused_matmul(x, w, ramp)
+    want = jnp.stack([ops.fused_matmul_nladc(x[i], w[i], ramp)
+                      for i in range(e)])
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_prefill_attention_vs_attend_full(rng):
+    """Pallas cached-attention kernel == attend_full, bitwise."""
+    from repro.nn.attention import attend_full
+
+    b, h, hkv, d, s = 2, 8, 2, 16, 20
+    q = jnp.asarray(rng.normal(0, 1, (b, 1, h, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(0, 1, (b, s, hkv, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(0, 1, (b, s, hkv, d)).astype(np.float32))
+    for valid in (1, 7, s):
+        mask = (jnp.arange(s) < valid)[None, None, :]
+        got = ops.prefill_attention(q, k, v, mask)
+        want = attend_full(q, k, v, mask)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_prefill_attention_mha_no_gqa(rng):
+    """h == h_kv (no grouping) also matches bitwise."""
+    from repro.nn.attention import attend_full
+
+    b, h, d, s = 1, 4, 8, 9
+    q = jnp.asarray(rng.normal(0, 1, (b, 1, h, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(0, 1, (b, s, h, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(0, 1, (b, s, h, d)).astype(np.float32))
+    mask = (jnp.arange(s) < 5)[None, None, :]
+    np.testing.assert_array_equal(
+        np.asarray(ops.prefill_attention(q, k, v, mask)),
+        np.asarray(attend_full(q, k, v, mask)))
